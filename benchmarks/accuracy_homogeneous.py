@@ -1,0 +1,52 @@
+"""Paper Figs. 4-6: final test accuracy, model-homogeneous setting.
+
+Grid: {mnist, fmnist, cifar10} x {iid, noniid_a, noniid_b} x
+{feddd, fedavg, fedcs, oort}.  Headline (paper §6.3): under Non-IID-b the
+client-selection baselines lose accuracy vs FedDD; under IID everyone ties.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row, run_experiment, timed
+
+SCHEMES = ("feddd", "fedavg", "fedcs", "oort")
+
+
+def run(full: bool = False, out_dir: Path | None = None):
+    datasets = ("mnist", "fmnist", "cifar10") if full else ("mnist",)
+    partitions = ("iid", "noniid_a", "noniid_b") if full else ("noniid_b",)
+    rounds = 20 if full else 6
+    clients = 20 if full else 8
+    rows = []
+    results = {}
+    for ds in datasets:
+        for part in partitions:
+            for scheme in SCHEMES:
+                res, wall = timed(lambda: run_experiment(
+                    ds, part, scheme, rounds=rounds, num_clients=clients))
+                accs = [r.metrics["accuracy"] for r in res.history]
+                results[f"{ds}/{part}/{scheme}"] = accs
+                rows.append(csv_row(
+                    f"fig4-6_{ds}_{part}_{scheme}", wall,
+                    f"final_acc={accs[-1]:.4f}"))
+    if out_dir:
+        (out_dir / "accuracy_homogeneous.json").write_text(
+            json.dumps(results, indent=1))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(full=args.full,
+                 out_dir=Path(__file__).resolve().parents[1] / "results"):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Shared FL experiment harness for the paper-figure benchmarks.
+
+Each benchmark module reproduces one paper table/figure on the synthetic
+datasets (DESIGN.md §8).  ``run_experiment`` wires dataset + partition +
+scheme and returns the round history; ``csv_row`` prints the harness's
+``name,us_per_call,derived`` convention (derived = the figure's headline
+quantity).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import run_scheme  # noqa: E402
+from repro.core.selection import SelectionConfig  # noqa: E402
+from repro.data import (label_coverage_score, make_dataset,  # noqa: E402
+                        partition_class_imbalanced, partition_iid,
+                        partition_noniid_a, partition_noniid_b)
+from repro.fl import (CNN1_SPEC, CNN2_SPEC, MLP_SPEC,  # noqa: E402
+                      HETERO_A_SPECS, HETERO_B_SPECS, init_cnn_spec,
+                      make_eval_fn, make_local_train_fn, model_bytes,
+                      sample_system_telemetry)
+
+PARTITIONS = {
+    "iid": partition_iid,
+    "noniid_a": partition_noniid_a,
+    "noniid_b": partition_noniid_b,
+    "imbalanced": partition_class_imbalanced,
+}
+
+DATASET_MODEL = {
+    "mnist": (MLP_SPEC, True, 0.1),      # (spec, flatten, lr)
+    "fmnist": (CNN1_SPEC, False, 0.05),
+    "cifar10": (CNN2_SPEC, False, 0.05),
+}
+
+
+def run_experiment(
+    dataset: str = "mnist",
+    partition: str = "noniid_b",
+    scheme: str = "feddd",
+    *,
+    num_clients: int = 10,
+    rounds: int = 10,
+    num_train: int = 4000,
+    num_test: int = 1000,
+    a_server: float = 0.6,
+    d_max: float = 0.8,
+    delta: float = 1.0,
+    h: int = 5,
+    selection_scheme: str = "feddd",
+    hetero_specs: Optional[List] = None,
+    per_class_eval: bool = False,
+    seed: int = 0,
+):
+    train, test = make_dataset(dataset, num_train=num_train,
+                               num_test=num_test, seed=seed)
+    parts = PARTITIONS[partition](train, num_clients, seed=seed)
+    if hetero_specs is not None:
+        specs = [hetero_specs[i % len(hetero_specs)]
+                 for i in range(num_clients)]
+        clients = [init_cnn_spec(jax.random.PRNGKey(100 + i), s)
+                   for i, s in enumerate(specs)]
+        global_params = init_cnn_spec(jax.random.PRNGKey(0), hetero_specs[0])
+        flatten, lr = False, 0.05
+        fns = [make_local_train_fn(specs[i], train, parts, lr=lr)
+               for i in range(num_clients)]
+
+        def ltf(params, idx, rng):
+            return fns[idx](params, idx, rng)
+
+        ef = make_eval_fn(hetero_specs[0], test, per_class=per_class_eval)
+        mbytes = [model_bytes(p) for p in clients]
+    else:
+        spec, flatten, lr = DATASET_MODEL[dataset]
+        clients = None
+        global_params = init_cnn_spec(jax.random.PRNGKey(0), spec)
+        ltf = make_local_train_fn(spec, train, parts, flatten=flatten, lr=lr)
+        ef = make_eval_fn(spec, test, flatten=flatten,
+                          per_class=per_class_eval)
+        mbytes = [model_bytes(global_params)] * num_clients
+    tel = sample_system_telemetry(
+        num_clients, mbytes, [len(p) for p in parts],
+        [label_coverage_score(train, p) for p in parts], seed=seed)
+    return run_scheme(scheme, global_params, tel, ltf, ef,
+                      client_params=clients, rounds=rounds,
+                      a_server=a_server, d_max=d_max, delta=delta, h=h,
+                      selection=SelectionConfig(scheme=selection_scheme),
+                      seed=seed)
+
+
+def csv_row(name: str, wall_s: float, derived: str) -> str:
+    return f"{name},{wall_s * 1e6:.0f},{derived}"
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0

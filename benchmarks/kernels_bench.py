@@ -1,0 +1,60 @@
+"""Microbenchmarks for the three Pallas kernels (interpret mode on CPU:
+numbers are correctness-path timings, not TPU perf — TPU perf comes from
+the dry-run roofline)."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                      # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(full: bool = False, out_dir=None):
+    from repro.kernels.importance import ops as imp_ops
+    from repro.kernels.masked_merge import ops as mm_ops
+    from repro.kernels.sparse_agg import ops as agg_ops
+
+    key = jax.random.PRNGKey(0)
+    c, f = (1024, 4096) if full else (256, 512)
+    n = 8
+    wo = jax.random.normal(key, (c, f), jnp.float32)
+    wn = wo * 1.01
+    rows = []
+    t = _time(imp_ops.channel_importance, wo, wn)
+    rows.append(csv_row("kernel_importance", t, f"shape={c}x{f}"))
+
+    sw = jax.random.normal(key, (n, c, f))
+    sm = (jax.random.uniform(key, (n, c, 1)) > 0.5).astype(jnp.float32)
+    wts = jnp.ones(n)
+    t = _time(agg_ops.masked_weighted_sum, sw, sm, wts)
+    rows.append(csv_row("kernel_sparse_agg", t, f"shape={n}x{c}x{f}"))
+
+    m = (jax.random.uniform(key, (c,)) > 0.5).astype(jnp.float32)
+    t = _time(mm_ops.masked_merge, wo, wn, m)
+    rows.append(csv_row("kernel_masked_merge", t, f"shape={c}x{f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(full=args.full):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json and prints, per (arch x shape x mesh):
+compute/memory/collective terms (seconds), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and bytes/device."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _analytic(rec: dict) -> dict:
+    """Loop-aware analytic terms (launch/analytic_cost.py) — XLA's
+    cost_analysis counts scan bodies once, so raw HLO numbers undercount."""
+    from repro.configs import get_config
+    from repro.launch import specs as specs_mod
+    from repro.launch.analytic_cost import analytic_terms
+    cfg = get_config(rec["arch"])
+    seq, batch, kind = specs_mod.SHAPES[rec["shape"]]
+    pol = specs_mod.policy_for(cfg)
+    return analytic_terms(cfg, seq, batch, kind, rec["num_devices"],
+                          optimizer=pol.optimizer)
+
+
+def load_records(tag: str = "") -> List[dict]:
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if not isinstance(r, dict):        # e.g. federated_sync sweep lists
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(recs: List[dict], analytic: bool = True) -> List[str]:
+    rows = []
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<7} {'status':<6} "
+           f"{'GB/dev':>7} {'hlo_cmp_s':>10} {'hlo_mem_s':>10} "
+           f"{'collect_s':>10} {'ana_cmp_s':>10} {'ana_mem_s':>10} "
+           f"{'dom':>10} {'mfu_ub%':>8}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<7} "
+                        f"{r['status']:<6} {r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]["peak_estimate_bytes"] / 1e9
+        a = _analytic(r) if analytic else {}
+        ac = a.get("analytic_compute_term_s", 0.0)
+        am = a.get("analytic_memory_term_s", 0.0)
+        coll = rl["collective_term_s"]
+        terms = {"compute": ac, "memory": am, "collective": coll}
+        dom = max(terms, key=terms.get) if analytic else rl["dominant"]
+        # MFU upper bound: model-flops time / bound (= dominant term)
+        mf = r.get("model_flops_total", 0.0)
+        t_model = mf / (r["num_devices"] * 197e12)
+        bound = max(terms.values()) if analytic else None
+        mfu = (t_model / bound * 100) if bound else None
+        rows.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<7} ok     "
+            f"{mem:>7.2f} {rl['compute_term_s']:>10.3e} "
+            f"{rl['memory_term_s']:>10.3e} {coll:>10.3e} "
+            f"{ac:>10.3e} {am:>10.3e} {dom:>10} "
+            f"{'' if mfu is None else f'{mfu:>7.1f}%'}")
+    return rows
+
+
+def run(full: bool = False, out_dir=None):
+    recs = load_records()
+    rows = table(recs)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skip")
+    err = sum(1 for r in recs if r["status"] == "error")
+    rows.append(f"totals: ok={ok} skip={skip} error={err}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    for row in table(load_records(args.tag)):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

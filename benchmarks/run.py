@@ -1,0 +1,48 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default mode runs reduced-size
+versions of every experiment (bounded CPU time); run the individual modules
+with ``--full`` for the paper-scale grids.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import (accuracy_homogeneous, class_imbalance,  # noqa: E402
+                        convergence_bound, heterogeneous, kernels_bench,
+                        roofline, selection_variants, sensitivity, t2a)
+
+MODULES = [
+    ("fig4-6 accuracy (model-homogeneous)", accuracy_homogeneous),
+    ("fig7 time-to-accuracy", t2a),
+    ("fig9-10 model-heterogeneous", heterogeneous),
+    ("fig11-15 selection variants", selection_variants),
+    ("fig16-20 sensitivity", sensitivity),
+    ("fig21 class imbalance", class_imbalance),
+    ("thm2 convergence bound", convergence_bound),
+    ("pallas kernels", kernels_bench),
+    ("dry-run roofline", roofline),
+]
+
+
+def main() -> None:
+    out_dir = Path(__file__).resolve().parents[1] / "results"
+    out_dir.mkdir(exist_ok=True)
+    print("name,us_per_call,derived")
+    for title, mod in MODULES:
+        print(f"# --- {title} ---", flush=True)
+        try:
+            for row in mod.run(full=False, out_dir=out_dir):
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Figs. 16-20: sensitivity analyses.
+
+  Figs. 16-17  final accuracy vs communication budget A_server (20%..80%):
+               FedDD stays stable; FedCS/Oort degrade rapidly.
+  Fig. 18      penalty factor delta sweep.
+  Figs. 19-20  full-broadcast period h sweep (residual error grows with h,
+               matching Theorem 2).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row, run_experiment, timed
+
+
+def run(full: bool = False, out_dir: Path | None = None):
+    rounds = 15 if full else 6
+    clients = 16 if full else 8
+    budgets = (0.2, 0.4, 0.6, 0.8) if full else (0.2, 0.6)
+    deltas = (0.0, 1.0, 10.0) if full else (0.0, 1.0)
+    hs = (1, 5, 10) if full else (1, 10)
+    rows, results = [], {}
+
+    for budget in budgets:
+        for scheme in ("feddd", "fedcs", "oort"):
+            res, wall = timed(lambda: run_experiment(
+                "mnist", "noniid_b", scheme, rounds=rounds,
+                num_clients=clients, a_server=budget))
+            acc = res.history[-1].metrics["accuracy"]
+            results[f"budget{budget}/{scheme}"] = acc
+            rows.append(csv_row(f"fig16_A{int(budget * 100)}_{scheme}",
+                                wall, f"final_acc={acc:.4f}"))
+
+    for d in deltas:
+        res, wall = timed(lambda: run_experiment(
+            "mnist", "noniid_a", "feddd", rounds=rounds,
+            num_clients=clients, delta=d))
+        acc = res.history[-1].metrics["accuracy"]
+        t = res.history[-1].sim_time
+        results[f"delta{d}"] = {"acc": acc, "sim_time": t}
+        rows.append(csv_row(f"fig18_delta{d}", wall,
+                            f"final_acc={acc:.4f};sim_time={t:.0f}"))
+
+    for h in hs:
+        res, wall = timed(lambda: run_experiment(
+            "mnist", "noniid_b", "feddd", rounds=rounds,
+            num_clients=clients, h=h))
+        acc = res.history[-1].metrics["accuracy"]
+        results[f"h{h}"] = acc
+        rows.append(csv_row(f"fig19_h{h}", wall, f"final_acc={acc:.4f}"))
+
+    if out_dir:
+        (out_dir / "sensitivity.json").write_text(
+            json.dumps(results, indent=1))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(full=args.full,
+                 out_dir=Path(__file__).resolve().parents[1] / "results"):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+"""End-to-end driver: FedDD federated pre-training of a transformer across
+pods (the TPU adaptation of the paper — DESIGN.md §3).
+
+Each of 4 "pods" (host devices standing in for pod slices) trains a local
+replica of a small LM on its own shard of a synthetic token stream; every
+round the pods exchange ONLY the top-(1-D) channels of each parameter via
+the compacted sparse all-gather (core/sparse_collective.py), aggregated per
+Eq. (4) with the FedDD importance index (Eq. (20)) selecting channels.
+
+    PYTHONPATH=src python examples/federated_pods.py --rounds 10
+
+Scale knobs: --d-model/--layers reach ~100M params on real hardware; the
+CPU default is a ~1M-param model so the example finishes in minutes.
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.importance import channel_importance  # noqa: E402
+from repro.core.sparse_collective import (dense_allreduce_mean,  # noqa: E402
+                                          sparse_allgather_mean)
+from repro.data import make_lm_dataset  # noqa: E402
+from repro.models import lm  # noqa: E402
+
+
+def build(args):
+    cfg = get_config("granite_3_8b", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, num_layers=args.layers, d_model=args.d_model,
+        d_ff=args.d_model * 2, vocab_size=512,
+        num_heads=4, num_kv_heads=2, head_dim=max(32, args.d_model // 4))
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--dropout-rate", type=float, default=0.5,
+                    help="FedDD D: fraction of channels NOT exchanged")
+    ap.add_argument("--dense", action="store_true",
+                    help="baseline: dense all-reduce (FedAvg-style)")
+    ap.add_argument("--lr", type=float, default=3e-2)
+    args = ap.parse_args()
+
+    n_pods = len(jax.devices())
+    mesh = jax.make_mesh((n_pods,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = build(args)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_model(key, cfg)
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    print(f"pods={n_pods} params={n_params / 1e6:.2f}M  "
+          f"D={args.dropout_rate} mode={'dense' if args.dense else 'feddd'}")
+
+    # pod-stacked replicas + per-pod data
+    stacked = jax.tree_util.tree_map(
+        lambda t: jnp.broadcast_to(t[None], (n_pods,) + t.shape), params)
+    toks = make_lm_dataset(vocab_size=cfg.vocab_size,
+                           num_tokens=n_pods * 50_000, seed=0)
+    shards = toks.reshape(n_pods, -1)
+
+    def sample_batch(rng, pod):
+        starts = jax.random.randint(rng, (args.batch,), 0,
+                                    shards.shape[1] - args.seq - 1)
+        return jax.vmap(lambda s: jax.lax.dynamic_slice(
+            jnp.asarray(shards)[pod], (s,), (args.seq,)))(starts)
+
+    d_rate = 0.0 if args.dense else args.dropout_rate
+
+    def round_fn(p_stacked, batch_stacked):
+        """shard_map body: local steps + FedDD exchange over 'pod'."""
+        p_local = jax.tree_util.tree_map(lambda t: t[0], p_stacked)
+        batch = batch_stacked[0]
+        p_old = p_local
+
+        def loss_of(p, tokens):
+            l, _ = lm.loss_fn(p, cfg, {"tokens": tokens}, remat=False)
+            return l
+
+        loss = 0.0
+        for i in range(args.local_steps):
+            l, g = jax.value_and_grad(loss_of)(
+                p_local, batch[i % 1])       # reuse batch across steps
+            p_local = jax.tree_util.tree_map(
+                lambda p_, g_: (p_.astype(jnp.float32)
+                                - args.lr * g_.astype(jnp.float32)
+                                ).astype(p_.dtype), p_local, g)
+            loss = l
+
+        # FedDD exchange: per-tensor channel importance -> top-k compaction
+        def exchange(old, new):
+            if new.ndim == 0:
+                return new
+            if args.dense or new.ndim == 1:
+                return dense_allreduce_mean(new, "pod")
+            cax = new.ndim - 1                     # channels = last axis
+            nm = jnp.moveaxis(new, cax, 0)
+            om = jnp.moveaxis(old, cax, 0)
+            c = nm.shape[0]
+            k = max(1, int(np.ceil(c * (1.0 - d_rate))))
+            scores = channel_importance(
+                om.reshape(c, -1), nm.reshape(c, -1), channel_axis=0)
+            agg = sparse_allgather_mean(nm, scores, k, "pod")
+            return jnp.moveaxis(agg, 0, cax)
+
+        p_new = jax.tree_util.tree_map(exchange, p_old, p_local)
+        out = jax.tree_util.tree_map(lambda t: t[None], p_new)
+        return out, jnp.asarray(loss)[None]
+
+    rf = jax.jit(jax.shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(P("pod"), P("pod")),
+        out_specs=(P("pod"), P("pod")),
+        check_vma=False))
+
+    full_bytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(params))
+    print(f"per-round exchange (theoretical): "
+          f"{(1 - d_rate) * full_bytes / 1e6:.2f} MB/pod "
+          f"(dense would be {full_bytes / 1e6:.2f} MB)")
+
+    rng = jax.random.PRNGKey(1)
+    t0 = time.perf_counter()
+    for r in range(1, args.rounds + 1):
+        rng, bk = jax.random.split(rng)
+        batches = jnp.stack([sample_batch(jax.random.fold_in(bk, p), p)
+                             [None] for p in range(n_pods)])
+        stacked, losses = rf(stacked, batches)
+        print(f"round {r:3d}  mean_loss={float(losses.mean()):.4f}  "
+              f"({time.perf_counter() - t0:.1f}s)", flush=True)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: FedDD federated training on a synthetic MNIST-like task.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 10]
+
+Trains the paper's MLP across 10 heterogeneous clients with differential
+parameter dropout, then compares against FedAvg: same model, ~60% of the
+bytes, large simulated wall-clock win.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+from repro.core import run_scheme  # noqa: E402
+from repro.data import (label_coverage_score, make_dataset,  # noqa: E402
+                        partition_noniid_b)
+from repro.fl import (MLP_SPEC, init_cnn_spec, make_eval_fn,  # noqa: E402
+                      make_local_train_fn, model_bytes,
+                      sample_system_telemetry)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--a-server", type=float, default=0.6)
+    args = ap.parse_args()
+
+    train, test = make_dataset("mnist", num_train=6000, num_test=1500)
+    parts = partition_noniid_b(train, args.clients, seed=0)
+    params = init_cnn_spec(jax.random.PRNGKey(0), MLP_SPEC)
+    tel = sample_system_telemetry(
+        args.clients, [model_bytes(params)] * args.clients,
+        [len(p) for p in parts],
+        [label_coverage_score(train, p) for p in parts], seed=0)
+    ltf = make_local_train_fn(MLP_SPEC, train, parts, flatten=True, lr=0.1)
+    ef = make_eval_fn(MLP_SPEC, test, flatten=True)
+
+    print(f"== FedDD (A_server={args.a_server}) ==")
+    feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
+                       a_server=args.a_server, h=5)
+    for r in feddd.history:
+        print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
+              f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}")
+
+    print("== FedAvg (full uploads) ==")
+    fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds)
+    for r in fedavg.history[-3:]:
+        print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
+              f"sim_t={r.sim_time:8.1f}s")
+
+    tgt = 0.9
+    t_dd, t_avg = (x.time_to_accuracy(tgt) for x in (feddd, fedavg))
+    if t_dd and t_avg:
+        print(f"\nTime to {tgt:.0%} accuracy: FedDD {t_dd:.0f}s vs "
+              f"FedAvg {t_avg:.0f}s  ({1 - t_dd / t_avg:.0%} reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Checkpointing: flattened-pytree .npz tensors + msgpack metadata.
+
+Sharded arrays are gathered to host before writing (dry-run-scale models are
+never materialised, so this path only runs for real trainings).  Structure
+round-trips exactly: tree paths are serialised into the npz keys.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+try:
+    import msgpack
+    _HAVE_MSGPACK = True
+except ImportError:                               # pragma: no cover
+    _HAVE_MSGPACK = False
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":
+            # non-native dtypes (bfloat16, fp8): store as float32; the load
+            # path casts back to the template dtype (lossless for bf16).
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str | Path, tree: Any,
+                    metadata: Optional[Dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    with open(path, "wb") as f:
+        np.savez(f, **{k: v for k, v in flat.items()})
+    meta = dict(metadata or {})
+    meta["_keys"] = sorted(flat.keys())
+    meta_bytes = (msgpack.packb(meta) if _HAVE_MSGPACK
+                  else json.dumps(meta).encode())
+    Path(str(path) + ".meta").write_bytes(meta_bytes)
+
+
+def load_checkpoint(path: str | Path, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        data = {k: z[k] for k in z.files}
+    meta_path = Path(str(path) + ".meta")
+    meta: Dict = {}
+    if meta_path.exists():
+        raw = meta_path.read_bytes()
+        meta = (msgpack.unpackb(raw) if _HAVE_MSGPACK
+                else json.loads(raw.decode()))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = jax.tree_util.keystr(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), meta

@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+FL models.  ``get_config(name)`` / ``list_configs()`` are the public API;
+each assigned arch also provides ``reduced`` (smoke-test variant: <=2 layers,
+d_model<=512, <=4 experts) via ``get_config(name, reduced=True)``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "pixtral_12b",
+    "chatglm3_6b",
+    "qwen3_moe_30b_a3b",
+    "jamba_1p5_large_398b",
+    "granite_3_8b",
+    "xlstm_1p3b",
+    "gemma3_27b",
+    "whisper_medium",
+    "nemotron_4_340b",
+    "granite_moe_1b_a400m",
+]
+
+# hyphenated aliases matching the assignment text
+ALIASES = {
+    "pixtral-12b": "pixtral_12b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "granite-3-8b": "granite_3_8b",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "gemma3-27b": "gemma3_27b",
+    "whisper-medium": "whisper_medium",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+}
+
+
+def list_configs() -> List[str]:
+    return list(ARCH_IDS)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.reduced() if reduced else mod.config()

@@ -1,0 +1,29 @@
+"""FedDD core — the paper's contribution as composable JAX modules.
+
+Modules
+  allocation        dropout-rate allocation LP (paper §4.1, Eq. 16/17)
+  importance        parameter importance indices (Eq. 20/21)
+  selection         per-layer channel top-k mask building (Algorithm 2)
+  aggregation       sparse aggregation + client update rules (Eq. 4/5/6)
+  coverage          CR(k) coverage rates for heterogeneous models
+  baselines         FedAvg / FedCS / Oort client selection
+  protocol          Algorithm-1 orchestration (server + clients)
+  sparse_collective compacted cross-pod collectives (TPU adaptation)
+  convergence       Theorem-2 bound evaluation + epsilon estimator
+"""
+
+from repro.core.allocation import (AllocationResult, ClientTelemetry,
+                                   regularizer, solve_dropout_rates,
+                                   solve_dropout_rates_jax)
+from repro.core.aggregation import (aggregate_sparse, client_update_full,
+                                    client_update_sparse, fedavg_aggregate)
+from repro.core.convergence import (BoundInputs, estimate_epsilon, eta_max,
+                                    residual_error, theorem2_bound)
+from repro.core.importance import channel_importance, elementwise_importance
+from repro.core.protocol import (FedDDServer, ProtocolConfig, RoundRecord,
+                                 RunResult, run_scheme)
+from repro.core.selection import (SelectionConfig, apply_mask, build_masks,
+                                  mask_density)
+from repro.core.sparse_collective import (dense_allreduce_mean,
+                                          make_federated_allreduce,
+                                          sparse_allgather_mean)

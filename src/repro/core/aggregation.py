@@ -1,0 +1,100 @@
+"""Sparse global aggregation and local-model update rules — FedDD Eq. (4)-(6).
+
+Step 4 (server):      W^t     = sum_n m_n * What_n ⊙ M_n  /  sum_n m_n * M_n
+Step 7 (client, t mod h != 0): W_n^{t+1} = W^t ⊙ M_n + What_n ⊙ (1 - M_n)
+Step 7 (client, t mod h == 0): W_n^{t+1} = W^t
+
+Element-wise division: positions received from NO client keep the previous
+global value (the paper's Eq. (4) is undefined there; keeping W^{t-1} is the
+natural continuous extension and is what makes the h-periodic broadcast
+meaningful).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def aggregate_sparse(
+    client_params: Sequence,
+    client_masks: Sequence,
+    client_weights: Sequence[float] | jax.Array,
+    *,
+    prev_global: Optional[object] = None,
+    use_kernel: bool = False,
+):
+    """Eq. (4): masked weighted average across clients.
+
+    Args:
+      client_params: list of parameter pytrees (What_n), identical structure.
+      client_masks: list of mask pytrees (broadcastable to params).
+      client_weights: m_n (sample counts), length N.
+      prev_global: pytree used to fill positions no client uploaded.
+      use_kernel: route the hot inner loop through the Pallas sparse_agg
+        kernel (stacked client tensors) instead of the pure-jnp path.
+
+    Returns the aggregated global pytree.
+    """
+    n = len(client_params)
+    if len(client_masks) != n:
+        raise ValueError("params/masks count mismatch")
+    w = jnp.asarray(client_weights, jnp.float32)
+    if w.shape[0] != n:
+        raise ValueError("weights count mismatch")
+
+    leaves = [jax.tree_util.tree_leaves(p) for p in client_params]
+    mleaves = [jax.tree_util.tree_leaves(m) for m in client_masks]
+    treedef = jax.tree_util.tree_structure(client_params[0])
+    gleaves = (jax.tree_util.tree_leaves(prev_global)
+               if prev_global is not None else [None] * len(leaves[0]))
+
+    out = []
+    for li, gprev in enumerate(gleaves):
+        stack_w = jnp.stack([leaves[ci][li] for ci in range(n)])     # (N, ...)
+        stack_m = jnp.stack([jnp.broadcast_to(mleaves[ci][li],
+                                              leaves[ci][li].shape)
+                             for ci in range(n)])
+        if use_kernel and stack_w.ndim >= 2 and stack_w.size >= 1024:
+            from repro.kernels.sparse_agg import ops as agg_ops
+            num, den = agg_ops.masked_weighted_sum(stack_w, stack_m, w)
+        else:
+            wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
+            num = jnp.sum(stack_w.astype(jnp.float32) * stack_m * wts, axis=0)
+            den = jnp.sum(stack_m * wts, axis=0)
+        agg = num / jnp.maximum(den, _EPS)
+        if gprev is not None:
+            agg = jnp.where(den > _EPS, agg, gprev.astype(jnp.float32))
+        out.append(agg.astype(leaves[0][li].dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def client_update_sparse(global_params, local_params, mask):
+    """Eq. (5): W_n^{t+1} = W^t ⊙ M_n + What_n ⊙ (1 - M_n)."""
+    return jax.tree_util.tree_map(
+        lambda g, l, m: (g * m + l * (1.0 - m)).astype(l.dtype),
+        global_params, local_params, mask)
+
+
+def client_update_full(global_params, local_params):
+    """Eq. (6): W_n^{t+1} = W^t (full broadcast round)."""
+    del local_params
+    return jax.tree_util.tree_map(lambda g: g, global_params)
+
+
+def fedavg_aggregate(client_params: Sequence,
+                     client_weights: Sequence[float] | jax.Array):
+    """Classic Eq. (3) dense FedAvg (baseline)."""
+    w = jnp.asarray(client_weights, jnp.float32)
+    w = w / jnp.sum(w)
+
+    def _avg(*leaves):
+        stack = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        wts = w.reshape((-1,) + (1,) * (stack.ndim - 1))
+        return jnp.sum(stack * wts, axis=0).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(_avg, *client_params)

@@ -1,0 +1,91 @@
+"""Client-selection baselines the paper compares against (§6.2).
+
+* FedAvg  — everyone uploads the full model (no budget).
+* FedCS   — drop the clients with the longest round time until the uploaded
+            parameter mass fits the communication budget (Nishio & Yonetani).
+* Oort    — utility-guided selection (Lai et al., OSDI'21): statistical
+            utility (loss-based) x system-utility penalty for stragglers,
+            select highest-utility clients within the budget.
+
+All selectors return a boolean participation vector; selected clients upload
+FULL models (that is the point of the comparison — same total transmitted
+bytes as FedDD's sparse uploads at a given A_server).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.allocation import ClientTelemetry
+
+
+def round_times(tel: ClientTelemetry, dropout: Optional[np.ndarray] = None
+                ) -> np.ndarray:
+    """t_n = t_cmp + U(1-D)/r_u + U(1-D)/r_d (Eq. (12) summand)."""
+    d = np.zeros(tel.num_clients) if dropout is None else dropout
+    u_eff = tel.model_bytes * (1.0 - d)
+    return (tel.compute_latency
+            + u_eff / tel.uplink_rate
+            + u_eff / tel.downlink_rate)
+
+
+def select_fedavg(tel: ClientTelemetry) -> np.ndarray:
+    return np.ones(tel.num_clients, bool)
+
+
+def select_fedcs(tel: ClientTelemetry, *, a_server: float) -> np.ndarray:
+    """Keep fastest clients until budget A_server * sum(U) is exhausted."""
+    t = round_times(tel)
+    order = np.argsort(t)  # fastest first
+    budget = a_server * float(np.sum(tel.model_bytes))
+    sel = np.zeros(tel.num_clients, bool)
+    used = 0.0
+    for i in order:
+        if used + tel.model_bytes[i] <= budget + 1e-9:
+            sel[i] = True
+            used += tel.model_bytes[i]
+    if not sel.any():           # always keep at least the fastest client
+        sel[order[0]] = True
+    return sel
+
+
+@dataclasses.dataclass
+class OortState:
+    """Exploitation statistics for Oort (simplified faithful variant)."""
+    straggler_penalty: float = 2.0   # alpha in the paper (=2 per FedDD §6.2)
+
+    def utilities(self, tel: ClientTelemetry,
+                  round_deadline: Optional[float] = None) -> np.ndarray:
+        # statistical utility: m_n * sqrt(mean loss^2)  (Oort Eq. 1 simplified
+        # to per-client loss since we track client-level, not sample-level)
+        stat = tel.num_samples * np.sqrt(np.maximum(tel.train_loss, 0.0))
+        t = round_times(tel)
+        if round_deadline is None:
+            round_deadline = float(np.percentile(t, 80))
+        sys_pen = np.where(
+            t > round_deadline,
+            (round_deadline / np.maximum(t, 1e-9)) ** self.straggler_penalty,
+            1.0,
+        )
+        return stat * sys_pen
+
+
+def select_oort(tel: ClientTelemetry, *, a_server: float,
+                state: Optional[OortState] = None) -> np.ndarray:
+    """Highest-utility clients within the parameter budget."""
+    state = state or OortState()
+    util = state.utilities(tel)
+    order = np.argsort(-util)
+    budget = a_server * float(np.sum(tel.model_bytes))
+    sel = np.zeros(tel.num_clients, bool)
+    used = 0.0
+    for i in order:
+        if used + tel.model_bytes[i] <= budget + 1e-9:
+            sel[i] = True
+            used += tel.model_bytes[i]
+    if not sel.any():
+        sel[order[0]] = True
+    return sel

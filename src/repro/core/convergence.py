@@ -1,0 +1,86 @@
+"""Convergence diagnostics — FedDD §5 (Theorem 2).
+
+Provides
+  * an empirical estimator of the mask-induced aggregation error ``epsilon``
+    of Assumption 3,
+  * a numerical evaluator of the Theorem-2 bound (Eq. (22)) so benchmarks can
+    check the qualitative predictions (residual error monotone in h and in
+    epsilon; O(1/T) leading term),
+  * the learning-rate feasibility condition eta < 2 / (L + L*eps + 4(eps+1)eps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def estimate_epsilon(client_params: Sequence, client_masks: Sequence) -> jax.Array:
+    """Empirical Assumption-3 ratio:
+
+        || masked_avg - plain_avg ||^2  /  || plain_avg ||^2
+
+    computed over the flattened concatenation of all leaves (uniform client
+    weighting, matching the assumption's statement).
+    """
+    n = len(client_params)
+    num = 0.0
+    den = 0.0
+    nleaves = len(jax.tree_util.tree_leaves(client_params[0]))
+    pl = [jax.tree_util.tree_leaves(p) for p in client_params]
+    ml = [jax.tree_util.tree_leaves(m) for m in client_masks]
+    for li in range(nleaves):
+        stack = jnp.stack([pl[c][li].astype(jnp.float32) for c in range(n)])
+        masks = jnp.stack([jnp.broadcast_to(ml[c][li], pl[c][li].shape)
+                           .astype(jnp.float32) for c in range(n)])
+        plain = jnp.mean(stack, axis=0)
+        msum = jnp.sum(masks, axis=0)
+        masked = jnp.sum(stack * masks, axis=0) / jnp.maximum(msum, 1e-12)
+        masked = jnp.where(msum > 1e-12, masked, plain)
+        num = num + jnp.sum((masked - plain) ** 2)
+        den = den + jnp.sum(plain ** 2)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def eta_max(L: float, eps: float) -> float:
+    """Largest admissible learning rate of Theorem 2."""
+    return 2.0 / (L + L * eps + 4.0 * (eps + 1.0) * eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundInputs:
+    L: float          # smoothness
+    eta: float        # learning rate
+    eps: float        # Assumption-3 epsilon
+    sigma_sq_mean: float   # (1/N) sum sigma_n^2
+    f0_minus_fstar: float  # F(W^0) - F(W*)
+    h: int            # full-broadcast period
+    T: int            # total rounds (T = K*h)
+
+
+def theorem2_bound(b: BoundInputs) -> float:
+    """Numerical RHS of Eq. (22). Returns +inf if eta violates feasibility."""
+    L, eta, eps, h = b.L, b.eta, b.eps, float(b.h)
+    denom_core = (2.0 * eta - L * eta**2 - L * eps * eta**2
+                  - 4.0 * (eps + 1.0) * eps * eta**2)
+    if denom_core <= 0:
+        return float("inf")
+    term1 = 2.0 * b.f0_minus_fstar / (b.T * denom_core)
+    poly = (2.0 * eps + 2.0 * eps * eta**2 * L**2
+            + 2.0 * eta**2 * L**2 + 3.0)
+    term2 = (L * eps * eta**2 * b.sigma_sq_mean * (h - 1.0) * poly
+             / (h * denom_core))
+    term3 = L * eps * eta**2 * b.sigma_sq_mean / (h * denom_core)
+    return term1 + term2 + term3
+
+
+def residual_error(b: BoundInputs) -> float:
+    """Terms 2+3 of Eq. (22) (the non-vanishing residual)."""
+    full = theorem2_bound(b)
+    if full == float("inf"):
+        return full
+    t1 = theorem2_bound(dataclasses.replace(b, eps=0.0, T=b.T))
+    return full - t1

@@ -1,0 +1,66 @@
+"""Coverage rates CR(k) for heterogeneous client models — FedDD §4.2.
+
+When clients run sub-models pruned from a common full model (HeteroFL-style:
+same layer structure, shrunk channel counts), a channel ``k`` of the full
+model is *covered* by client ``n`` iff ``k < width_n(layer)``.  The server
+computes CR(k) = (#clients covering k) / N once from the clients' reported
+widths (first round: full upload) and broadcasts it.
+
+In FedDD the importance index is divided by CR(k) (Eq. (21)) so that rarely-
+covered channels are preferentially uploaded by the few clients that own
+them, boosting global-model generalisation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def channel_widths(params, channel_axis: int = -1) -> Dict[str, int]:
+    """Map flattened leaf-path -> channel count for a parameter pytree."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = jax.tree_util.keystr(path)
+        ax = channel_axis % max(leaf.ndim, 1)
+        out[name] = int(leaf.shape[ax]) if leaf.ndim > 0 else 1
+    return out
+
+
+def coverage_rates(client_widths: Sequence[Dict[str, int]],
+                   full_widths: Dict[str, int]) -> Dict[str, np.ndarray]:
+    """CR per layer: for each full-model layer, a (full_width,) array of
+    fractions of clients whose sub-model contains each channel.
+
+    Clients that lack a layer entirely contribute zero coverage for it.
+    """
+    n = len(client_widths)
+    out = {}
+    for name, full_w in full_widths.items():
+        counts = np.zeros(full_w, np.float32)
+        for cw in client_widths:
+            w = cw.get(name, 0)
+            counts[: min(w, full_w)] += 1.0
+        out[name] = counts / max(n, 1)
+    return out
+
+
+def coverage_pytree(params, cr_by_name: Dict[str, np.ndarray],
+                    channel_axis: int = -1):
+    """Build a pytree matching ``params``' structure whose leaves are the
+    (client-local slice of the) coverage arrays, shaped (local_channels,)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        ax = channel_axis % max(leaf.ndim, 1)
+        nch = int(leaf.shape[ax]) if leaf.ndim > 0 else 1
+        cr = cr_by_name.get(name)
+        if cr is None:
+            leaves.append(jnp.ones(nch, jnp.float32))
+        else:
+            leaves.append(jnp.asarray(cr[:nch], jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

@@ -1,0 +1,89 @@
+"""Parameter importance indices — FedDD §4.2, Eq. (20)/(21).
+
+The index for channel/neuron ``k`` of a layer is
+
+    I_n^k      = || dW * (W + dW) / W ||_(k)                (homogeneous)
+    I~_n^k     = I_n^k / CR(k)                              (heterogeneous)
+
+where the norm ``||.||_(k)`` groups parameters by output channel (row of a
+dense matrix / output channel of a conv).  ``CR(k)`` is the coverage rate —
+the fraction of clients whose local sub-model contains channel ``k``.
+
+Conventions used throughout the code base:
+
+* Every parameter tensor is viewed as ``(channels, fan_in...)``: for a dense
+  kernel stored ``(in, out)`` we reduce over ``in`` (axis 0 is fan-in, the
+  *output* dimension indexes channels);  utilities below take an explicit
+  ``channel_axis``.
+* A small ``eps`` guards the division by ``W`` (the paper implicitly assumes
+  non-zero weights).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def elementwise_importance(w_old: jax.Array, w_new: jax.Array,
+                           eps: float = _EPS) -> jax.Array:
+    """|dW * (W + dW) / W| per element (inner term of Eq. (20)).
+
+    ``w_old`` is W_n^t (before local update), ``w_new`` is W_n^t + dW.
+    """
+    dw = w_new - w_old
+    denom = jnp.where(jnp.abs(w_old) < eps,
+                      jnp.where(w_old < 0, -eps, eps), w_old)
+    return jnp.abs(dw * w_new / denom)
+
+
+def channel_importance(w_old: jax.Array, w_new: jax.Array, *,
+                       channel_axis: int = -1,
+                       coverage: Optional[jax.Array] = None,
+                       eps: float = _EPS) -> jax.Array:
+    """Per-channel importance: L2 norm of elementwise importance over all
+    non-channel axes, optionally divided by the coverage rate (Eq. (21)).
+
+    Returns shape ``(num_channels,)``.
+    """
+    imp = elementwise_importance(w_old, w_new, eps)
+    axes = tuple(a for a in range(imp.ndim)
+                 if a != (channel_axis % imp.ndim))
+    score = jnp.sqrt(jnp.sum(imp * imp, axis=axes))
+    if coverage is not None:
+        score = score / jnp.maximum(coverage, eps)
+    return score
+
+
+# --- ablation variants (paper §6.2 "FedDD w. X selection") -----------------
+
+def channel_score_max(w_old: jax.Array, w_new: jax.Array, *,
+                      channel_axis: int = -1) -> jax.Array:
+    """'max selection': rank channels by parameter magnitude |W+dW|."""
+    axes = tuple(a for a in range(w_new.ndim)
+                 if a != (channel_axis % w_new.ndim))
+    return jnp.sqrt(jnp.sum(w_new * w_new, axis=axes))
+
+
+def channel_score_delta(w_old: jax.Array, w_new: jax.Array, *,
+                        channel_axis: int = -1) -> jax.Array:
+    """'delta selection' (Aji & Heafield): rank channels by |dW|."""
+    dw = w_new - w_old
+    axes = tuple(a for a in range(dw.ndim)
+                 if a != (channel_axis % dw.ndim))
+    return jnp.sqrt(jnp.sum(dw * dw, axis=axes))
+
+
+def channel_score_random(key: jax.Array, num_channels: int) -> jax.Array:
+    """'random selection': uniform random scores."""
+    return jax.random.uniform(key, (num_channels,))
+
+
+def channel_score_ordered(num_channels: int) -> jax.Array:
+    """'ordered selection' (FjORD-style): a fixed prefix order — channel 0
+    always most important."""
+    return jnp.arange(num_channels, 0, -1).astype(jnp.float32)

@@ -1,0 +1,289 @@
+"""FedDD training protocol — the paper's Algorithm 1, plus baseline drivers.
+
+The driver is deliberately generic: it orchestrates *any* model exposing
+
+    local_train_fn(params, client_data, rng) -> (new_params, loss)
+    eval_fn(params) -> metrics dict            (optional)
+
+so the same code runs the paper's MLP/CNN FL simulations and the pod-scale
+transformer federation (examples/federated_pods.py uses the shard_map
+collectives in core/sparse_collective.py instead, for on-device execution;
+this driver is the faithful parameter-server formulation).
+
+Simulated wall-clock follows the paper's system model exactly
+(t = t_cmp + U(1-D)/r_u + U(1-D)/r_d; the round takes max over participating
+clients) — this is how the paper's own simulation computes time-to-accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, baselines, coverage as cov_mod, selection
+from repro.core.allocation import (AllocationResult, ClientTelemetry,
+                                   solve_dropout_rates)
+from repro.core.convergence import estimate_epsilon
+
+Params = object  # pytree
+
+
+@dataclasses.dataclass
+class ProtocolConfig:
+    scheme: str = "feddd"            # feddd | fedavg | fedcs | oort
+    selection: selection.SelectionConfig = dataclasses.field(
+        default_factory=selection.SelectionConfig)
+    a_server: float = 0.6            # communication budget (Table 4)
+    d_max: float = 0.8               # max dropout rate (Table 4)
+    delta: float = 1.0               # heterogeneity penalty factor
+    h: int = 5                       # full-broadcast period (Table 4)
+    rounds: int = 50
+    seed: int = 0
+    track_epsilon: bool = False      # Assumption-3 estimator (costly)
+
+    def __post_init__(self):
+        if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+
+
+@dataclasses.dataclass
+class ClientState:
+    params: Params                   # W_n^t
+    telemetry_idx: int               # row into the telemetry arrays
+    num_samples: int
+    mask: Optional[Params] = None    # M_n^t of the previous upload
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    sim_time: float                  # cumulative simulated seconds
+    wall_time: float                 # real seconds spent in this round
+    mean_loss: float
+    dropout_rates: np.ndarray
+    uploaded_fraction: float         # actual bytes uploaded / full bytes
+    participants: int
+    epsilon: Optional[float] = None
+    metrics: Optional[Dict] = None
+
+
+@dataclasses.dataclass
+class RunResult:
+    history: List[RoundRecord]
+    global_params: Params
+
+    def time_to_accuracy(self, target: float, key: str = "accuracy"
+                         ) -> Optional[float]:
+        for rec in self.history:
+            if rec.metrics and rec.metrics.get(key, -1.0) >= target:
+                return rec.sim_time
+        return None
+
+
+def _tree_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params))
+
+
+class FedDDServer:
+    """Parameter server for FedDD + the three baselines."""
+
+    def __init__(self, global_params: Params, cfg: ProtocolConfig,
+                 telemetry: ClientTelemetry,
+                 client_params: Optional[Sequence[Params]] = None):
+        self.cfg = cfg
+        self.global_params = global_params
+        self.tel = telemetry
+        n = telemetry.num_clients
+        # heterogeneous models: clients may hold pruned sub-models
+        if client_params is None:
+            client_params = [global_params] * n
+        self.clients = [
+            ClientState(params=jax.tree_util.tree_map(jnp.asarray, p),
+                        telemetry_idx=i,
+                        num_samples=int(telemetry.num_samples[i]))
+            for i, p in enumerate(client_params)
+        ]
+        full_w = cov_mod.channel_widths(global_params,
+                                        cfg.selection.channel_axis)
+        cw = [cov_mod.channel_widths(p, cfg.selection.channel_axis)
+              for p in client_params]
+        self.cr = cov_mod.coverage_rates(cw, full_w)
+        self.heterogeneous = any(w != full_w for w in cw)
+        self.dropout = np.zeros(n)           # D_n^1 = 0 (Algorithm 1)
+        self.rng = jax.random.PRNGKey(cfg.seed)
+
+    # -- per-round server logic ---------------------------------------------
+
+    def allocate(self, losses: np.ndarray) -> AllocationResult:
+        tel = dataclasses.replace(self.tel, train_loss=losses)
+        return solve_dropout_rates(
+            tel, a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+            delta=self.cfg.delta,
+            global_model_bytes=_tree_bytes(self.global_params))
+
+    def _participants(self, losses: np.ndarray) -> np.ndarray:
+        if self.cfg.scheme == "fedavg":
+            return baselines.select_fedavg(self.tel)
+        if self.cfg.scheme == "fedcs":
+            return baselines.select_fedcs(self.tel,
+                                          a_server=self.cfg.a_server)
+        if self.cfg.scheme == "oort":
+            tel = dataclasses.replace(self.tel, train_loss=losses)
+            return baselines.select_oort(tel, a_server=self.cfg.a_server)
+        return np.ones(self.tel.num_clients, bool)   # feddd: everyone
+
+    # -- the full loop --------------------------------------------------------
+
+    def run(self,
+            local_train_fn: Callable[[Params, int, jax.Array],
+                                     "tuple[Params, float]"],
+            eval_fn: Optional[Callable[[Params], Dict]] = None,
+            rounds: Optional[int] = None) -> RunResult:
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        n = self.tel.num_clients
+        losses = np.ones(n)
+        sim_time = 0.0
+        history: List[RoundRecord] = []
+
+        for t in range(1, rounds + 1):
+            t0 = time.perf_counter()
+            self.rng, rk = jax.random.split(self.rng)
+            part = self._participants(losses)
+
+            # --- Step 1: local training (participants only for baselines;
+            # in FedDD everyone trains — that is the paper's key point).
+            new_params: List[Params] = [None] * n
+            for i, cs in enumerate(self.clients):
+                if cfg.scheme == "feddd" or part[i]:
+                    p, l = local_train_fn(cs.params, i,
+                                          jax.random.fold_in(rk, i))
+                    new_params[i] = p
+                    losses[i] = float(l)
+
+            # --- Steps 2-3: mask building + (simulated) upload
+            uploaded_bytes = 0.0
+            full_bytes = float(np.sum(self.tel.model_bytes))
+            client_masks: List[Params] = [None] * n
+            if cfg.scheme == "feddd":
+                for i, cs in enumerate(self.clients):
+                    cov = (cov_mod.coverage_pytree(cs.params, self.cr,
+                                                   cfg.selection.channel_axis)
+                           if self.heterogeneous else None)
+                    m = selection.build_masks(
+                        cs.params, new_params[i],
+                        jnp.asarray(self.dropout[i], jnp.float32),
+                        config=cfg.selection, coverage=cov,
+                        rng=jax.random.fold_in(rk, 10_000 + i))
+                    client_masks[i] = m
+                    dens = float(selection.mask_density(new_params[i], m))
+                    uploaded_bytes += dens * float(self.tel.model_bytes[i])
+            else:
+                for i in range(n):
+                    if part[i]:
+                        client_masks[i] = jax.tree_util.tree_map(
+                            lambda w: jnp.ones((1,) * w.ndim, w.dtype),
+                            new_params[i])
+                        uploaded_bytes += float(self.tel.model_bytes[i])
+
+            # --- Step 4: aggregation (over uploaded clients only)
+            idxs = [i for i in range(n) if client_masks[i] is not None]
+            agg_params = [self._pad_to_global(new_params[i], i) for i in idxs]
+            agg_masks = [self._pad_mask_to_global(client_masks[i],
+                                                  new_params[i]) for i in idxs]
+            weights = [self.clients[i].num_samples for i in idxs]
+            eps_val = None
+            if cfg.track_epsilon:
+                eps_val = float(estimate_epsilon(agg_params, agg_masks))
+            self.global_params = aggregation.aggregate_sparse(
+                agg_params, agg_masks, weights,
+                prev_global=self.global_params)
+
+            # --- Step 5: dropout-rate allocation for round t+1
+            if cfg.scheme == "feddd":
+                alloc = self.allocate(np.maximum(losses, 1e-6))
+                self.dropout = alloc.dropout_rates
+
+            # --- Steps 6-7: download + local model update
+            full_round = (t % cfg.h == 0) or cfg.scheme != "feddd"
+            for i, cs in enumerate(self.clients):
+                if new_params[i] is None:      # non-participant (baselines)
+                    if full_round:
+                        cs.params = self._slice_to_local(cs.params)
+                    continue
+                if full_round or client_masks[i] is None:
+                    cs.params = self._slice_to_local(new_params[i],
+                                                     use_global=True)
+                else:
+                    g_local = self._slice_like(self.global_params,
+                                               new_params[i])
+                    cs.params = aggregation.client_update_sparse(
+                        g_local, new_params[i], client_masks[i])
+
+            # --- simulated wall clock (paper Eq. (12))
+            d_for_time = (self.dropout if cfg.scheme == "feddd"
+                          else np.zeros(n))
+            t_all = baselines.round_times(self.tel, d_for_time)
+            active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
+            sim_time += float(np.max(t_all[active]))
+
+            metrics = eval_fn(self.global_params) if eval_fn else None
+            history.append(RoundRecord(
+                round=t, sim_time=sim_time,
+                wall_time=time.perf_counter() - t0,
+                mean_loss=float(np.mean(losses)),
+                dropout_rates=self.dropout.copy(),
+                uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
+                participants=int(np.sum(active)),
+                epsilon=eps_val, metrics=metrics))
+        return RunResult(history, self.global_params)
+
+    # -- heterogeneous-model plumbing  (HeteroFL-style width slicing) --------
+
+    def _pad_to_global(self, params, client_idx):
+        """Zero-pad a client sub-model up to global widths."""
+        def _pad(p, g):
+            if p.shape == g.shape:
+                return p
+            pads = [(0, gs - ps) for ps, gs in zip(p.shape, g.shape)]
+            return jnp.pad(p, pads)
+        return jax.tree_util.tree_map(_pad, params, self.global_params)
+
+    def _pad_mask_to_global(self, masks, params):
+        """Masks are channel-shaped; pad with zeros so padded (absent)
+        channels never contribute to the aggregate."""
+        def _pad(m, p, g):
+            m_full = jnp.broadcast_to(m, p.shape)
+            if p.shape == g.shape:
+                return m_full
+            pads = [(0, gs - ps) for ps, gs in zip(p.shape, g.shape)]
+            return jnp.pad(m_full, pads)
+        return jax.tree_util.tree_map(_pad, masks, params,
+                                      self.global_params)
+
+    def _slice_like(self, global_params, local_params):
+        def _sl(g, l):
+            if g.shape == l.shape:
+                return g
+            sl = tuple(slice(0, s) for s in l.shape)
+            return g[sl]
+        return jax.tree_util.tree_map(_sl, global_params, local_params)
+
+    def _slice_to_local(self, local_params, use_global: bool = True):
+        src = self.global_params if use_global else local_params
+        return self._slice_like(src, local_params)
+
+
+def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
+               eval_fn=None, client_params=None, **cfg_kw) -> RunResult:
+    """One-call convenience wrapper used by benchmarks and examples."""
+    cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
+    server = FedDDServer(global_params, cfg, telemetry, client_params)
+    return server.run(local_train_fn, eval_fn)

@@ -1,0 +1,163 @@
+"""Uploaded-parameter selection — FedDD Algorithm 2.
+
+Given a client's dropout rate ``D`` and its parameter pytree before/after the
+local update, build the binary mask pytree ``M`` (same structure/shapes as the
+parameters) that keeps, per layer, the top ``ceil(N_l * (1 - D))`` channels by
+importance.
+
+Paper fidelity notes:
+
+* The paper performs dropout at *channel/neuron* granularity with the SAME
+  dropout rate for each layer (§4.2: "we set the same dropout rate for each
+  layer, and perform dropout at channel-wised manner").
+* Algorithm 2 writes ``n_l_up = N_l * D`` but the surrounding text ("select
+  the parameters with high importance indices ... to meet the required
+  uploaded number", and D being the *dropped* proportion) makes clear the
+  uploaded count is ``N_l * (1 - D)``; we implement the latter.
+* 1-D parameters (biases, norm scales) ride along with their channel: each is
+  treated as channels of fan-in 1.
+
+Masks are returned as the params' dtype (0/1 values) so that ``W * M`` and the
+aggregation maths need no casting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance as imp_mod
+
+SCHEMES = ("feddd", "max", "delta", "random", "ordered")
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionConfig:
+    scheme: str = "feddd"          # one of SCHEMES
+    channel_axis: int = -1         # which axis of each tensor is 'channels'
+    use_kernel: bool = False       # route importance through the Pallas kernel
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown selection scheme {self.scheme!r}")
+
+
+def mask_from_scores(scores: jax.Array, keep: jax.Array | int,
+                     num_channels: int) -> jax.Array:
+    """Binary (float32) mask of shape (num_channels,) keeping the top
+    ``keep`` scores.  ``keep`` may be a traced scalar; we use a threshold
+    compare against the keep-th largest value so the whole thing is jit-safe
+    with dynamic ``keep``.
+    """
+    # kth largest via sort (descending). keep==0 -> all-zero mask.
+    order = jnp.argsort(-scores)
+    ranks = jnp.zeros(num_channels, jnp.int32).at[order].set(
+        jnp.arange(num_channels, dtype=jnp.int32))
+    return (ranks < keep).astype(jnp.float32)
+
+
+def keep_count(num_channels: int, dropout_rate: jax.Array) -> jax.Array:
+    """ceil(N * (1-D)), clipped to [0, N], as int32 (jit-safe)."""
+    k = jnp.ceil(num_channels * (1.0 - dropout_rate))
+    return jnp.clip(k, 0, num_channels).astype(jnp.int32)
+
+
+def _tensor_scores(cfg: SelectionConfig, w_old, w_new, coverage, rng):
+    ax = cfg.channel_axis
+    if cfg.scheme == "feddd":
+        if cfg.use_kernel:
+            from repro.kernels.importance import ops as kops
+            return kops.channel_importance(w_old, w_new, channel_axis=ax,
+                                           coverage=coverage)
+        return imp_mod.channel_importance(w_old, w_new, channel_axis=ax,
+                                          coverage=coverage)
+    if cfg.scheme == "max":
+        return imp_mod.channel_score_max(w_old, w_new, channel_axis=ax)
+    if cfg.scheme == "delta":
+        return imp_mod.channel_score_delta(w_old, w_new, channel_axis=ax)
+    nch = w_new.shape[ax]
+    if cfg.scheme == "random":
+        return imp_mod.channel_score_random(rng, nch)
+    if cfg.scheme == "ordered":
+        return imp_mod.channel_score_ordered(nch)
+    raise AssertionError(cfg.scheme)
+
+
+def build_masks(
+    params_old,
+    params_new,
+    dropout_rate: jax.Array,
+    *,
+    config: SelectionConfig = SelectionConfig(),
+    coverage: Optional[Dict] = None,
+    rng: Optional[jax.Array] = None,
+    always_upload: Optional[Callable[[str], bool]] = None,
+) -> Dict:
+    """Build the mask pytree ``M_n^t``.
+
+    Args:
+      params_old / params_new: pytrees of identical structure (W, W-hat).
+      dropout_rate: scalar in [0, 1] (can be traced).
+      coverage: optional pytree of per-channel coverage rates CR(k), each leaf
+        shaped (num_channels,) matching the corresponding parameter's channel
+        axis (heterogeneous-model case, Eq. (21)).
+      rng: PRNG key, required for scheme='random'.
+      always_upload: predicate on the flattened leaf path name; leaves for
+        which it returns True get an all-ones mask (used for tiny critical
+        tensors, e.g. MoE router weights — see DESIGN.md).
+
+    Returns a mask pytree (leaves broadcastable against the params: shape is
+    1s everywhere except the channel axis).
+    """
+    if config.scheme == "random" and rng is None:
+        raise ValueError("scheme='random' requires rng")
+
+    flat_old = jax.tree_util.tree_flatten_with_path(params_old)[0]
+    flat_new, treedef = jax.tree_util.tree_flatten_with_path(params_new)
+    flat_cov = (jax.tree_util.tree_leaves(coverage)
+                if coverage is not None else [None] * len(flat_new))
+    if len(flat_old) != len(flat_new):
+        raise ValueError("params_old/params_new structure mismatch")
+
+    masks = []
+    for i, ((path, w_new), (_, w_old), cov) in enumerate(
+            zip(flat_new, flat_old, flat_cov)):
+        name = jax.tree_util.keystr(path)
+        ax = config.channel_axis % max(w_new.ndim, 1)
+        nch = w_new.shape[ax] if w_new.ndim > 0 else 1
+        if (always_upload is not None and always_upload(name)) or w_new.ndim == 0:
+            mask = jnp.ones((1,) * max(w_new.ndim, 1), w_new.dtype)
+            masks.append(jnp.broadcast_to(mask, w_new.shape)
+                         if w_new.ndim == 0 else mask)
+            continue
+        leaf_rng = (jax.random.fold_in(rng, i) if rng is not None else None)
+        scores = _tensor_scores(config, w_old, w_new, cov, leaf_rng)
+        k = keep_count(nch, dropout_rate)
+        m1d = mask_from_scores(scores, k, nch)
+        shape = [1] * w_new.ndim
+        shape[ax] = nch
+        masks.append(m1d.reshape(shape).astype(w_new.dtype))
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def apply_mask(params, masks):
+    """W ⊙ M with broadcasting (masks are channel-shaped)."""
+    return jax.tree_util.tree_map(lambda w, m: w * m, params, masks)
+
+
+def mask_density(params, masks) -> jax.Array:
+    """Fraction of parameter *elements* kept (for telemetry / byte counts)."""
+    def _counts(w, m):
+        kept = jnp.sum(jnp.broadcast_to(m, w.shape).astype(jnp.float32))
+        return kept, jnp.asarray(w.size, jnp.float32)
+    kept_tot = 0.0
+    size_tot = 0.0
+    for w, m in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(masks)):
+        kc, sc = _counts(w, m)
+        kept_tot = kept_tot + kc
+        size_tot = size_tot + sc
+    return kept_tot / size_tot

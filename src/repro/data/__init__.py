@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticImageDataset, make_dataset,
+                                  make_lm_dataset)
+from repro.data.partition import (partition_class_imbalanced,
+                                  partition_dirichlet, partition_iid,
+                                  partition_noniid_a, partition_noniid_b,
+                                  label_distribution, label_coverage_score)

@@ -1,0 +1,5 @@
+from repro.fl.heterogeneity import sample_system_telemetry
+from repro.fl.models import (init_cnn, init_mlp, make_eval_fn,
+                             make_local_train_fn, model_bytes,
+                             CNN1_SPEC, CNN2_SPEC, MLP_SPEC,
+                             HETERO_A_SPECS, HETERO_B_SPECS, init_cnn_spec)

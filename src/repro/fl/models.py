@@ -1,0 +1,211 @@
+"""The paper's FL models (Tables 2, 3, 6) in plain JAX.
+
+  MLP   FC(784,100)-ReLU-FC(100,64)-ReLU-FC(64,10)           (MNIST)
+  CNN1  Conv(1,10,5)-pool-Conv(10,20,5)-pool-FC(320,50)-FC(50,10)   (FMNIST)
+  CNN2  3xConv(16/32/64,k3)+pool-FC(1024,500)-FC(500,100)-FC(100,10) (CIFAR10)
+
+plus the five heterogeneous VGG-style sub-models of Tables 3 (hetero-a) and
+6 (hetero-b).  All parameters are dicts of (in..., out_channels) tensors so
+FedDD's channel masks (channel_axis=-1) apply directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# A spec is a list of layer tuples:
+#   ("conv", in_ch, out_ch, kernel)    3x3/5x5 conv + ReLU
+#   ("pool",)                          2x2 max pool
+#   ("fc", d_in, d_out)                dense (+ReLU except last)
+MLP_SPEC = [("fc", 784, 100), ("fc", 100, 64), ("fc", 64, 10)]
+CNN1_SPEC = [("conv", 1, 10, 5), ("pool",), ("conv", 10, 20, 5), ("pool",),
+             ("fc", 320, 50), ("fc", 50, 10)]
+CNN2_SPEC = [("conv", 3, 16, 3), ("pool",), ("conv", 16, 32, 3), ("pool",),
+             ("conv", 32, 64, 3), ("pool",),
+             ("fc", 1024, 500), ("fc", 500, 100), ("fc", 100, 10)]
+
+
+def _vgg(widths: Sequence[int], fcs: Sequence[int]) -> List[Tuple]:
+    spec: List[Tuple] = []
+    cin = 3
+    for w in widths:
+        spec += [("conv", cin, w, 3), ("pool",)]
+        cin = w
+    d = widths[-1]          # 32x32 through 5 pools -> 1x1 spatial
+    dims = [d] + list(fcs) + [10]
+    for i in range(len(dims) - 1):
+        spec.append(("fc", dims[i], dims[i + 1]))
+    return spec
+
+
+# Table 3 (model-heterogeneous-a): five VGG-ish sub-models
+HETERO_A_SPECS = [
+    _vgg([64, 128, 256, 512, 512], [100, 100]),   # full model
+    _vgg([64, 128, 256, 256, 512], [100, 100]),
+    _vgg([64, 128, 256, 256, 512], [80, 100]),
+    _vgg([32, 128, 256, 256, 512], [80, 100]),
+    _vgg([32, 128, 128, 256, 512], [80, 100]),
+]
+
+# Table 6 (model-heterogeneous-b): larger spread
+HETERO_B_SPECS = [
+    _vgg([64, 128, 256, 512, 512], [100, 100]),   # full model
+    _vgg([64, 128, 256, 256, 256], [100, 100]),
+    _vgg([64, 128, 256, 256, 256], [80, 80]),
+    _vgg([32, 96, 256, 256, 256], [80, 80]),
+    _vgg([32, 96, 128, 128, 256], [80, 80]),
+]
+
+
+def init_cnn_spec(key, spec: Sequence[Tuple]) -> Dict:
+    params: Dict[str, Dict] = {}
+    li = 0
+    for layer in spec:
+        if layer[0] == "conv":
+            _, cin, cout, k = layer
+            key, sub = jax.random.split(key)
+            scale = 1.0 / math.sqrt(cin * k * k)
+            params[f"conv{li}"] = {
+                "w": jax.random.normal(sub, (k, k, cin, cout)) * scale,
+                "b": jnp.zeros((cout,)),
+            }
+            li += 1
+        elif layer[0] == "fc":
+            _, din, dout = layer
+            key, sub = jax.random.split(key)
+            params[f"fc{li}"] = {
+                "w": jax.random.normal(sub, (din, dout)) / math.sqrt(din),
+                "b": jnp.zeros((dout,)),
+            }
+            li += 1
+    return params
+
+
+def init_mlp(key) -> Dict:
+    return init_cnn_spec(key, MLP_SPEC)
+
+
+def init_cnn(key, which: str) -> Dict:
+    return init_cnn_spec(key, CNN1_SPEC if which == "cnn1" else CNN2_SPEC)
+
+
+def apply_spec(params: Dict, spec: Sequence[Tuple], x: jax.Array
+               ) -> jax.Array:
+    """x: (B, H, W, C) images or (B, D) flats for pure-MLP specs."""
+    li = 0
+    n_fc_seen = 0
+    n_fc = sum(1 for l in spec if l[0] == "fc")
+    for layer in spec:
+        if layer[0] == "conv":
+            p = params[f"conv{li}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+            li += 1
+        elif layer[0] == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+        elif layer[0] == "fc":
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            p = params[f"fc{li}"]
+            x = x @ p["w"] + p["b"]
+            n_fc_seen += 1
+            if n_fc_seen < n_fc:
+                x = jax.nn.relu(x)
+            li += 1
+    return x
+
+
+def model_bytes(params) -> int:
+    return int(sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(params)))
+
+
+# ------------------------------------------------------- train / eval ------
+
+def _ce(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_local_train_fn(spec: Sequence[Tuple], ds, parts,
+                        *, lr: float = 0.05, batch_size: int = 64,
+                        local_epochs: int = 1, flatten: bool = False):
+    """Returns local_train_fn(params, client_idx, rng) -> (params, loss)
+    running ``local_epochs`` epochs of minibatch SGD on the client's shard.
+
+    Per-client data is bound eagerly (numpy indexing) and each step is a
+    jitted SGD update.
+    """
+    xs = [jnp.asarray(ds.x[p]) for p in parts]
+    ys = [jnp.asarray(ds.y[p]) for p in parts]
+    if flatten:
+        xs = [x.reshape(x.shape[0], -1) for x in xs]
+
+    @jax.jit
+    def _step(params, xb, yb):
+        def _loss(p):
+            return _ce(apply_spec(p, spec, xb), yb)
+        loss, g = jax.value_and_grad(_loss)(params)
+        params = jax.tree_util.tree_map(lambda p_, g_: p_ - lr * g_,
+                                        params, g)
+        return params, loss
+
+    def local_train(params, client_idx: int, rng) -> Tuple[Dict, float]:
+        x, y = xs[client_idx], ys[client_idx]
+        n = x.shape[0]
+        if n == 0:
+            return params, 0.0
+        loss = 0.0
+        steps = 0
+        for ep in range(local_epochs):
+            perm = jax.random.permutation(
+                jax.random.fold_in(rng, ep), n)
+            for s in range(0, max(n - batch_size + 1, 1), batch_size):
+                idx = perm[s:s + batch_size]
+                params, l = _step(params, x[idx], y[idx])
+                loss += float(l)
+                steps += 1
+        return params, loss / max(steps, 1)
+
+    return local_train
+
+
+def make_eval_fn(spec: Sequence[Tuple], test_ds, *, flatten: bool = False,
+                 batch_size: int = 512, per_class: bool = False):
+    x = jnp.asarray(test_ds.x)
+    y = np.asarray(test_ds.y)
+    if flatten:
+        x = x.reshape(x.shape[0], -1)
+
+    @jax.jit
+    def _logits(params, xb):
+        return apply_spec(params, spec, xb)
+
+    def eval_fn(params) -> Dict:
+        preds = []
+        for s in range(0, x.shape[0], batch_size):
+            preds.append(np.asarray(
+                jnp.argmax(_logits(params, x[s:s + batch_size]), -1)))
+        pred = np.concatenate(preds)
+        acc = float(np.mean(pred == y))
+        out = {"accuracy": acc}
+        if per_class:
+            for c in range(test_ds.num_classes):
+                m = y == c
+                out[f"acc_class_{c}"] = (float(np.mean(pred[m] == y[m]))
+                                         if m.any() else 0.0)
+        return out
+
+    return eval_fn

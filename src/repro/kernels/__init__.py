@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for FedDD's compute hot-spots (DESIGN.md §6).
+
+  importance   fused |dW (W+dW)/W| + per-channel row reduction   (Step 2)
+  sparse_agg   masked weighted aggregation over stacked clients  (Step 4)
+  masked_merge fused Eq.(5) sparse global/local merge            (Step 7)
+
+Each kernel ships ``ref.py`` (pure-jnp oracle), the Pallas kernel with
+explicit BlockSpec VMEM tiling, and ``ops.py`` (jit'd wrapper; on CPU it
+runs interpret=True so tests validate the kernel body bit-for-bit).
+"""

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA).
+
+Grid (batch*kv_heads*g, Sq/BQ, Skv/BK): each step loads a (BQ, hd) query
+tile and a (BK, hd) K/V tile into VMEM, accumulates the online-softmax
+running (m, l, o) in VMEM scratch across the KV grid axis (minor-most, so
+the scratch stays resident), and writes the normalised output tile on the
+last KV step.  Scores therefore NEVER touch HBM — this removes the
+S^2-score traffic that dominates the XLA-only lowering of 32k prefill
+(EXPERIMENTS.md §Perf Q4).
+
+Default tiles BQ=512, BK=1024, hd<=256: VMEM ~= (512+2*1024)*256*4B +
+512*1024*4B (p-matrix) + scratch ~= 5 MiB — comfortably inside the 16 MiB
+v5e budget, MXU-aligned (128 multiples).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+DEFAULT_BQ = 512
+DEFAULT_BK = 1024
+
+
+def _flash_kernel(causal: bool, window: int, sq: int, skv: int, scale: float,
+                  q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)
+    bq, hd = q.shape
+    bk = k.shape[0]
+    # zero the padded tails (undefined memory; 0 * NaN would poison p @ v)
+    q_valid = (qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, hd), 0)
+               ) < sq
+    kv_valid = (kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, hd), 0)
+                ) < skv
+    q = jnp.where(q_valid, q, 0.0)
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (rows < sq) & (cols < skv)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # (BQ, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    p = jnp.exp(s - m_new)                            # (BQ, BK)
+    corr = jnp.exp(m_prev - m_new)                    # (BQ, 1)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=1)[:, None]
+    acc = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kj == nk - 1)
+    def _finalise():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, H, hd).
+
+    GQA: query head h reads kv head h // (H/Hkv).  Heads/batch are folded
+    into the leading grid axis.
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    # fold (b, hkv, g): q -> (b*hkv*g, sq, hd); kv indexed by (b*hkv)
+    qf = (q.reshape(b, sq, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * hkv * g, sq, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, hd)
+
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    grid = (b * hkv * g, pl.cdiv(sq, bq_), pl.cdiv(skv, bk_))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal, window, sq, skv, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda n, i, j, g=g: (n // g, j, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda n, i, j, g=g: (n // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv * g, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return (out.reshape(b, hkv, g, sq, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(b, sq, h, hd))

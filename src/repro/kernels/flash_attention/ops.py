@@ -1,0 +1,16 @@
+"""jit'd wrapper: flash attention with CPU interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=not _on_tpu())

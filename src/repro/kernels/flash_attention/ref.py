@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel: dense causal /
+sliding-window GQA attention with fp32 softmax."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def gqa_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd); window 0 = unlimited."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg,
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

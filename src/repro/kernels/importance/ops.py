@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the importance kernel.
+
+Handles arbitrary tensor ranks / channel axes by folding every non-channel
+axis into the fan-in dimension, then calls the Pallas kernel (interpret=True
+automatically on CPU so the kernel body itself is what tests validate).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.importance.importance import channel_importance_sumsq
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def channel_importance(w_old: jax.Array, w_new: jax.Array, *,
+                       channel_axis: int = -1,
+                       coverage: Optional[jax.Array] = None) -> jax.Array:
+    """Per-channel importance score (Eq. (20)/(21)); returns (C,) fp32."""
+    ax = channel_axis % w_old.ndim
+    wo = jnp.moveaxis(w_old, ax, 0)
+    wn = jnp.moveaxis(w_new, ax, 0)
+    c = wo.shape[0]
+    wo = wo.reshape(c, -1)
+    wn = wn.reshape(c, -1)
+    ss = channel_importance_sumsq(wo, wn, interpret=not _on_tpu())
+    score = jnp.sqrt(ss)
+    if coverage is not None:
+        score = score / jnp.maximum(coverage, 1e-8)
+    return score

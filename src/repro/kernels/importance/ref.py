@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused importance kernel (FedDD Eq. (20)).
+
+score[c] = sqrt( sum_f ( |dW * (W + dW) / W| )^2 )   over fan-in f,
+with dW = W_new - W_old and an epsilon-guarded division.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def channel_importance_ref(w_old: jnp.ndarray, w_new: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """w_old/w_new: (C, F) float; returns (C,) float32."""
+    wo = w_old.astype(jnp.float32)
+    wn = w_new.astype(jnp.float32)
+    dw = wn - wo
+    denom = jnp.where(jnp.abs(wo) < EPS, jnp.where(wo < 0, -EPS, EPS), wo)
+    imp = jnp.abs(dw * wn / denom)
+    return jnp.sqrt(jnp.sum(imp * imp, axis=1))

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the masked merge kernel (rank/axis handling)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_merge.masked_merge import masked_merge_2d
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_merge(global_w: jax.Array, local_w: jax.Array,
+                 mask_row: jax.Array, *, channel_axis: int = -1) -> jax.Array:
+    """Eq. (5) merge.  mask_row: (C,) where C = shape[channel_axis]."""
+    ax = channel_axis % local_w.ndim
+    g = jnp.moveaxis(global_w, ax, 0)
+    l = jnp.moveaxis(local_w, ax, 0)
+    c = l.shape[0]
+    shape = l.shape
+    out = masked_merge_2d(g.reshape(c, -1), l.reshape(c, -1),
+                          mask_row.reshape(c), interpret=not _on_tpu())
+    return jnp.moveaxis(out.reshape(shape), 0, ax)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the masked merge kernel (FedDD Eq. (5)):
+
+out = G * M + W_local * (1 - M),   M a per-channel 0/1 vector broadcast
+over the fan-in dimension.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_merge_ref(global_w: jnp.ndarray, local_w: jnp.ndarray,
+                     mask_row: jnp.ndarray) -> jnp.ndarray:
+    """global_w/local_w: (C, F); mask_row: (C,) in {0,1}.  Same dtype out."""
+    m = mask_row.astype(jnp.float32)[:, None]
+    out = (global_w.astype(jnp.float32) * m
+           + local_w.astype(jnp.float32) * (1.0 - m))
+    return out.astype(local_w.dtype)

@@ -1,0 +1,35 @@
+"""jit'd wrapper: reshapes arbitrary-rank stacked client tensors to
+(N, C, F) and dispatches to the Pallas kernel (interpret=True off-TPU)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_agg.sparse_agg import masked_weighted_sum_2d
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_weighted_sum(stack_w: jax.Array, stack_m: jax.Array,
+                        weights: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """stack_w/stack_m: (N, ...) identical shapes; weights: (N,).
+
+    Returns (num, den) with the original trailing shape, fp32.
+    """
+    n = stack_w.shape[0]
+    orig = stack_w.shape[1:]
+    if stack_w.ndim == 2:
+        sw = stack_w.reshape(n, 1, -1)
+        sm = stack_m.reshape(n, 1, -1)
+    else:
+        c = stack_w.shape[1]
+        sw = stack_w.reshape(n, c, -1)
+        sm = jnp.broadcast_to(stack_m, stack_w.shape).reshape(n, c, -1)
+    num, den = masked_weighted_sum_2d(sw, sm, weights,
+                                      interpret=not _on_tpu())
+    return num.reshape(orig), den.reshape(orig)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the sparse aggregation kernel (FedDD Eq. (4)).
+
+num[c,f] = sum_n  w_n * W[n,c,f] * M[n,c,f]
+den[c,f] = sum_n  w_n * M[n,c,f]
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def masked_weighted_sum_ref(stack_w: jnp.ndarray, stack_m: jnp.ndarray,
+                            weights: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """stack_w/stack_m: (N, C, F); weights: (N,).  fp32 outputs (C, F)."""
+    wts = weights.astype(jnp.float32).reshape(-1, 1, 1)
+    sw = stack_w.astype(jnp.float32)
+    sm = stack_m.astype(jnp.float32)
+    num = jnp.sum(sw * sm * wts, axis=0)
+    den = jnp.sum(sm * wts, axis=0)
+    return num, den

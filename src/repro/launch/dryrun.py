@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+MUST be run as a module:  PYTHONPATH=src python -m repro.launch.dryrun \
+    [--arch ID ...] [--shape NAME ...] [--mesh single|multi|both] [--force]
+
+The XLA_FLAGS line above precedes every other import (jax locks the device
+count on first initialisation).  Results are cached incrementally under
+results/dryrun/ so interrupted sweeps resume.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as specs_mod
+from repro.launch.hlo_analysis import (Hardware, Roofline,
+                                       collective_bytes_per_device,
+                                       model_flops)
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.sharding import reset_rules, set_rules
+from repro.optim import adafactor, adamw
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _opt(name: str):
+    return adafactor(1e-2) if name == "adafactor" else adamw(3e-4)
+
+
+def build_lowerable(cfg, shape_name: str):
+    """Returns (fn, example_args (abstract), in_shardings) for jit."""
+    seq, batch, kind = specs_mod.SHAPES[shape_name]
+    pol = specs_mod.policy_for(cfg)
+    if kind == "train":
+        opt = _opt(pol.optimizer)
+        step = lm.make_train_step(cfg, opt,
+                                  num_microbatches=pol.num_microbatches)
+        ts_shape = jax.eval_shape(
+            lambda: lm.init_train_state(jax.random.PRNGKey(0), cfg, opt))
+        batch_abs = specs_mod.input_specs(cfg, shape_name)
+        ts_specs = lm.train_state_pspecs(cfg, ts_shape)
+        b_specs = jax.tree_util.tree_map(
+            lambda s: _batch_spec(s), batch_abs)
+        return step, (ts_shape, batch_abs), (ts_specs, b_specs)
+    if kind == "prefill":
+        def prefill(params, batch_in):
+            logits, _ = lm.forward(params, cfg, batch_in)
+            return logits[:, -1]
+        p_shape = lm.abstract_params(cfg)
+        batch_abs = specs_mod.input_specs(cfg, shape_name)
+        p_specs = lm.param_pspecs(cfg, p_shape)
+        b_specs = jax.tree_util.tree_map(lambda s: _batch_spec(s), batch_abs)
+        return prefill, (p_shape, batch_abs), (p_specs, b_specs)
+    # decode
+    cfg_eff = specs_mod.effective_decode_config(cfg, shape_name)
+    serve = lm.make_serve_step(cfg_eff)
+    p_shape = lm.abstract_params(cfg_eff)
+    state_abs, tok_abs = specs_mod.decode_specs(cfg, shape_name)
+    p_specs = lm.param_pspecs(cfg_eff, p_shape)
+    s_specs = lm.decode_state_pspecs(cfg_eff, state_abs)
+    t_spec = _batch_spec(tok_abs)
+    return serve, (p_shape, state_abs, tok_abs), (p_specs, s_specs, t_spec)
+
+
+def _batch_spec(sds):
+    from repro.models.sharding import spec
+    if sds.ndim >= 2:
+        axes = ("batch", "seq") + (None,) * (sds.ndim - 2)
+    elif sds.ndim == 1:
+        axes = ("batch",)
+    else:
+        axes = ()
+    return spec(*axes, shape=sds.shape)
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             rules: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    ok, reason = specs_mod.should_run(cfg, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "status": "skip", "reason": reason}
+    if not ok:
+        return rec
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    reset_rules()
+    pol_rules = specs_mod.policy_for(cfg).rules
+    if pol_rules:
+        set_rules(**pol_rules)
+    if rules:
+        set_rules(**rules)
+    try:
+        seqk = specs_mod.SHAPES[shape_name][2]
+        donate = (0,) if seqk == "train" else ((1,) if seqk == "decode" else ())
+        with jax.sharding.set_mesh(mesh):
+            fn, args, in_specs = build_lowerable(cfg, shape_name)
+            lowered = jax.jit(fn, in_shardings=in_specs,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_per_device(hlo)
+        seq, batch, kind = specs_mod.SHAPES[shape_name]
+        rl = Roofline(
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collective_per_device=coll, num_devices=n_dev)
+        mf = model_flops(cfg, seq, batch, kind)
+        hlo_total_flops = rl.flops_per_device * n_dev
+        rec.update({
+            "status": "ok",
+            "num_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                        + mem.output_size_in_bytes
+                                        + mem.temp_size_in_bytes
+                                        - mem.alias_size_in_bytes),
+            },
+            "roofline": rl.as_dict(),
+            "model_flops_total": mf,
+            "hlo_flops_total": hlo_total_flops,
+            "useful_flops_ratio": (mf / hlo_total_flops
+                                   if hlo_total_flops else None),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    finally:
+        reset_rules()
+    return rec
+
+
+def result_path(arch: str, shape: str, mesh: str, tag: str = "") -> Path:
+    sfx = f"_{tag}" if tag else ""
+    return RESULTS_DIR / f"{arch}_{shape}_{mesh}{sfx}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=ARCH_IDS)
+    ap.add_argument("--shape", nargs="*", default=list(specs_mod.SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rules", default="",
+                    help="JSON dict of sharding-rule overrides (perf exps)")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact HLO accounting "
+                         "(analysis-grade; slower compiles)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="override the arch policy's grad-accum count")
+    args = ap.parse_args()
+    if args.unroll:
+        os.environ["REPRO_UNROLL_SCAN"] = "1"
+    if args.microbatches:
+        from repro.launch.specs import RUN_POLICY, ArchRunPolicy, policy_for
+        for a in args.arch:
+            from repro.configs import get_config as _gc
+            cfg0 = _gc(a)
+            pol = policy_for(cfg0)
+            RUN_POLICY[cfg0.name] = ArchRunPolicy(
+                optimizer=pol.optimizer,
+                num_microbatches=args.microbatches)
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    rules = json.loads(args.rules) if args.rules else None
+    for arch in args.arch:
+        for shape in args.shape:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                path = result_path(get_config(arch).name, shape, mesh_name,
+                                   args.tag)
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    print(f"[cached] {rec['arch']} {shape} {mesh_name}: "
+                          f"{rec['status']}")
+                    continue
+                print(f"[run] {arch} {shape} {mesh_name} ...", flush=True)
+                rec = run_pair(arch, shape, mp, rules=rules, tag=args.tag)
+                path.write_text(json.dumps(rec, indent=1))
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"mem={rec['memory']['peak_estimate_bytes']/1e9:.2f}GB/dev "
+                          f"terms(s): c={r['compute_term_s']:.3e} "
+                          f"m={r['memory_term_s']:.3e} "
+                          f"coll={r['collective_term_s']:.3e} "
+                          f"dom={r['dominant']}", flush=True)
+                else:
+                    print(f"  {rec['status']}: {rec.get('reason') or rec.get('error')}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

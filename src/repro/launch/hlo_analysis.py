@@ -1,0 +1,192 @@
+"""Post-SPMD HLO analysis: collective byte counting + roofline terms.
+
+``collective_bytes`` parses the *compiled* (partitioned, per-device) HLO
+text and sums the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.  cost_analysis() does not
+expose collective traffic, so this is the source for the roofline
+collective term (system prompt §ROOFLINE).
+
+Conventions: the compiled module is per-device, so parsed byte counts are
+per-device; we report ``collective_bytes = per_device_bytes * num_devices``
+so the roofline formula  ``collective_term = collective_bytes /
+(chips * link_bw)``  reduces to per-device bytes / link bandwidth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %foo.12 = bf16[16,128]{1,0} all-reduce(%bar.3), replica_groups=...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"([\w\-]+)\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device operand bytes per collective kind.
+
+    Operand shapes are recovered from the instruction-definition table; for
+    ``all-gather`` the operand (pre-gather shard) is what each device sends
+    per ring hop aggregated over the ring, so we follow the assignment and
+    count operand sizes uniformly.
+    """
+    # instruction name -> result shape string
+    shapes: Dict[str, str] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shapes[m.group(1)] = m.group(2)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):   # *-start/-done variants
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue                                  # counted at -start
+        # operand list: text between the first '(' after op name and its ')'
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(hlo_text) and depth:
+            if hlo_text[i] == "(":
+                depth += 1
+            elif hlo_text[i] == ")":
+                depth -= 1
+            i += 1
+        operands = hlo_text[start:i - 1]
+        n = 0
+        for om in re.finditer(r"%?([\w.\-]+)", operands):
+            name = om.group(1)
+            if name in shapes:
+                n += _shape_bytes(shapes[name])
+        if n == 0:
+            # fallback: use the result shape (all-reduce: same size)
+            n = _shape_bytes(m.group(2))
+        out[kind] += n
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """TPU v5e per-chip numbers (system prompt §ROOFLINE)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    link_bw: float = 50e9            # bytes/s per ICI link
+    hbm_bytes: float = 16e9          # capacity
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: Dict[str, int]
+    num_devices: int
+    hw: Hardware = dataclasses.field(default_factory=Hardware)
+
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def collective_term(self) -> float:
+        total = sum(self.collective_per_device.values())
+        return total / self.hw.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_term, "memory": self.memory_term,
+                 "collective": self.collective_term}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_per_device": dict(self.collective_per_device),
+            "num_devices": self.num_devices,
+            "compute_term_s": self.compute_term,
+            "memory_term_s": self.memory_term,
+            "collective_term_s": self.collective_term,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens.
+
+    N counts *active* parameters: for MoE layers top_k/num_experts of the
+    expert params; embeddings excluded from the 6ND rule's N (standard
+    convention) but the lm_head matmul is included via 2*D*d*V.
+    """
+    import numpy as np
+    n_active = 0
+    layout = cfg.layout()
+    d = cfg.d_model
+    hd = cfg.head_dim_
+    for spec in layout:
+        if spec.mixer in ("attn", "attn_local"):
+            n_active += d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        elif spec.mixer == "mamba":
+            di = cfg.mamba.expand * d
+            dr = cfg.mamba.dt_rank or max(1, int(np.ceil(d / 16)))
+            n_active += (d * 2 * di + di * (dr + 2 * cfg.mamba.d_state)
+                         + dr * di + di * d)
+        elif spec.mixer in ("mlstm", "slstm"):
+            di = int(cfg.xlstm.proj_factor * d)
+            n_active += d * 2 * di + di * d
+            hd_x = di // cfg.num_heads
+            # mlstm q/k/v are per-head block-diagonal
+            n_active += (3 * di * hd_x if spec.mixer == "mlstm"
+                         else 4 * di * di + 4 * di * hd_x)
+        if spec.cross_attention:
+            n_active += d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        if spec.ff == "dense":
+            mats = 3 if cfg.activation in ("swiglu", "geglu") else 2
+            n_active += mats * d * cfg.d_ff
+        elif spec.ff == "moe":
+            mats = 3 if cfg.activation in ("swiglu", "geglu") else 2
+            n_active += mats * d * cfg.moe.d_ff_expert * cfg.moe.top_k
+    # encoder layers (audio)
+    for spec in (cfg.encoder_layout() if cfg.is_encdec else []):
+        n_active += d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        mats = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        n_active += mats * d * cfg.d_ff
+
+    tokens = batch * (1 if kind == "decode" else seq)
+    factor = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    head = 2.0 * tokens * d * cfg.vocab_size * (3.0 if kind == "train" else 1.0)
+    return factor * n_active * tokens + head

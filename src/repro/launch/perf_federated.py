@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf F-series: FedDD's cross-pod parameter sync on the production mesh.
+
+Measures the collective bytes of one federated synchronisation round of the
+full granite-3-8b parameter set on the (pod=2, data=16, model=16) mesh:
+
+  baseline  — paper-faithful FedAvg sync: dense weighted all-reduce of every
+              parameter over the ``pod`` axis (this is also what a
+              multi-pod data-parallel trainer does every step);
+  feddd(D)  — the paper's technique, TPU-adapted: per-tensor channel
+              importance -> top-(1-D) compaction -> all-gather of compacted
+              (values, indices) over ``pod`` + scatter/mean (DESIGN.md §3).
+
+Within-pod sharding of every parameter matches the training layout, so the
+sync composes with the real trainer: shard_map runs over ALL mesh axes and
+each (data, model) cell exchanges only its local shard with its cross-pod
+peer.
+
+    PYTHONPATH=src python -m repro.launch.perf_federated [--arch ID]
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.importance import channel_importance
+from repro.core.sparse_collective import (compact_topk,
+                                          dense_allreduce_mean,
+                                          scatter_accumulate)
+from repro.launch.hlo_analysis import collective_bytes_per_device
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _leaf_sync_dense(new):
+    if new.ndim == 0:
+        return new
+    return dense_allreduce_mean(new, "pod")
+
+
+def _leaf_sync_sparse(old, new, d_rate: float, quant: str = "none"):
+    """FedDD compacted exchange of the LOCAL shard over the pod axis.
+
+    quant='int8': beyond-paper — compacted channel values are exchanged as
+    int8 with a per-channel fp32 absmax scale (F3), halving the value bytes
+    at any dropout rate."""
+    if new.ndim <= 1:
+        return dense_allreduce_mean(new, "pod")
+    cax = new.ndim - 1
+    nm = jnp.moveaxis(new, cax, 0)
+    om = jnp.moveaxis(old, cax, 0)
+    c = nm.shape[0]
+    k = max(1, int(np.ceil(c * (1.0 - d_rate))))
+    scores = channel_importance(om.reshape(c, -1), nm.reshape(c, -1),
+                                channel_axis=0)
+    compact, idx = compact_topk(nm, scores, k)
+    if quant == "int8":
+        flat = compact.reshape(k, -1).astype(jnp.float32)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        q = jnp.clip(jnp.round(flat / jnp.maximum(scale, 1e-12)),
+                     -127, 127).astype(jnp.int8)
+        all_q = jax.lax.all_gather(q, "pod")
+        all_s = jax.lax.all_gather(scale, "pod")
+        all_i = jax.lax.all_gather(idx, "pod")
+        p = all_i.shape[0]
+        deq = (all_q.astype(jnp.float32) * all_s).reshape(
+            (p * k,) + compact.shape[1:])
+        num, cnt = scatter_accumulate(nm.shape, deq, all_i.reshape(p * k))
+    else:
+        all_c = jax.lax.all_gather(compact, "pod")
+        all_i = jax.lax.all_gather(idx, "pod")
+        p = all_i.shape[0]
+        num, cnt = scatter_accumulate(
+            nm.shape, all_c.reshape((p * k,) + compact.shape[1:]),
+            all_i.reshape(p * k))
+    wshape = (c,) + (1,) * (nm.ndim - 1)
+    agg = num / jnp.maximum(cnt, 1e-12).reshape(wshape)
+    keep_local = (cnt <= 1e-12).reshape(wshape)
+    out = jnp.where(keep_local, nm, agg.astype(nm.dtype)).astype(nm.dtype)
+    return jnp.moveaxis(out, 0, cax)
+
+
+def build_sync(cfg, mesh, mode: str, d_rate: float, quant: str = "none"):
+    p_shape = lm.abstract_params(cfg)
+    p_specs = lm.param_pspecs(cfg, p_shape)
+
+    def sync(p_old, p_new):
+        def body(*leaves):
+            n = len(leaves) // 2
+            olds, news = leaves[:n], leaves[n:]
+            outs = []
+            for o, nw in zip(olds, news):
+                if mode == "dense":
+                    outs.append(_leaf_sync_dense(nw))
+                else:
+                    outs.append(_leaf_sync_sparse(o, nw, d_rate, quant))
+            return tuple(outs)
+
+        flat_old, treedef = jax.tree_util.tree_flatten(p_old)
+        flat_new = jax.tree_util.tree_leaves(p_new)
+        flat_specs = jax.tree_util.tree_leaves(
+            lm.param_pspecs(cfg, p_old), is_leaf=lambda x: x is None or
+            isinstance(x, jax.sharding.PartitionSpec))
+        in_specs = tuple(flat_specs) + tuple(flat_specs)
+        out = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=tuple(flat_specs),
+                            check_vma=False)(*flat_old, *flat_new)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return sync, (p_shape, p_shape), (p_specs, p_specs)
+
+
+def run_one(arch: str, mode: str, d_rate: float, quant: str = "none") -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    tag = f"fed_{mode}" + (f"_d{int(d_rate * 100)}" if mode == "feddd" else "")
+    if quant != "none":
+        tag += f"_{quant}"
+    with jax.sharding.set_mesh(mesh):
+        fn, args, in_specs = build_sync(cfg, mesh, mode, d_rate, quant)
+        lowered = jax.jit(fn, in_shardings=in_specs).lower(*args)
+        compiled = lowered.compile()
+        coll = collective_bytes_per_device(compiled.as_text())
+        mem = compiled.memory_analysis()
+    total = sum(coll.values())
+    rec = {
+        "arch": cfg.name, "shape": "train_4k", "mesh": "multi", "tag": tag,
+        "status": "ok", "mode": mode, "d_rate": d_rate,
+        "collective_per_device": coll,
+        "collective_bytes_per_device": total,
+        "collective_term_s": total / 50e9,
+        "temp_bytes": mem.temp_size_in_bytes,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_8b")
+    ap.add_argument("--rates", nargs="*", type=float,
+                    default=[0.0, 0.4, 0.6, 0.8])
+    args = ap.parse_args()
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = []
+    rec = run_one(args.arch, "dense", 0.0)
+    out.append(rec)
+    print(f"dense    : {rec['collective_bytes_per_device'] / 1e6:9.1f} "
+          f"MB/dev  term={rec['collective_term_s'] * 1e3:.2f} ms")
+    for d in args.rates:
+        rec = run_one(args.arch, "feddd", d)
+        out.append(rec)
+        print(f"feddd D={d:.1f}: "
+              f"{rec['collective_bytes_per_device'] / 1e6:9.1f} MB/dev  "
+              f"term={rec['collective_term_s'] * 1e3:.2f} ms")
+    for d in (0.6, 0.8):
+        rec = run_one(args.arch, "feddd", d, quant="int8")
+        out.append(rec)
+        print(f"feddd D={d:.1f} int8: "
+              f"{rec['collective_bytes_per_device'] / 1e6:9.1f} MB/dev  "
+              f"term={rec['collective_term_s'] * 1e3:.2f} ms")
+    path = RESULTS_DIR / f"federated_sync_{args.arch}.json"
+    path.write_text(json.dumps(out, indent=1))
+    print("written", path)
+
+
+if __name__ == "__main__":
+    main()

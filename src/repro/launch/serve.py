@@ -1,0 +1,80 @@
+"""Production serving driver: batched autoregressive decode with a static
+(ring-buffered where sliding-window) KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3_27b \
+        --batch 4 --steps 32 [--reduced]
+
+On a real TPU slice, drop ``--reduced`` and add ``--production-mesh`` to
+shard the cache (batch over data, kv-heads over model) with the same specs
+the decode dry-run validated.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+
+
+def sample_greedy(logits: jax.Array, rng=None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_topk(logits: jax.Array, rng: jax.Array, k: int = 40,
+                temperature: float = 0.8) -> jax.Array:
+    v, idx = jax.lax.top_k(logits / temperature, k)
+    choice = jax.random.categorical(rng, v)
+    return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0] \
+        .astype(jnp.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_27b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--sample", choices=("greedy", "topk"), default="topk")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(len(jax.devices())))
+    cache_len = args.cache_len or args.steps + 8
+    key = jax.random.PRNGKey(0)
+    sampler = sample_topk if args.sample == "topk" else sample_greedy
+
+    with jax.sharding.set_mesh(mesh):
+        params = lm.init_model(key, cfg)
+        serve = jax.jit(lm.make_serve_step(cfg), donate_argnums=(1,))
+        enc = (jnp.zeros((args.batch, 24, cfg.d_model), jnp.bfloat16)
+               if cfg.is_encdec else None)
+        state = lm.init_decode_state(params, cfg, args.batch, cache_len,
+                                     enc_frames=enc)
+        tok = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab_size)
+        outs = [np.asarray(tok)]
+        t0 = time.perf_counter()
+        for t in range(args.steps):
+            logits, state = serve(params, state, tok)
+            key, rk = jax.random.split(key)
+            tok = sampler(logits, rk)[:, None]
+            outs.append(np.asarray(tok))
+        dt = time.perf_counter() - t0
+    seq = np.concatenate(outs, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} steps={args.steps} "
+          f"{dt / args.steps * 1e3:.1f} ms/token")
+    print("request 0 token ids:", seq[0, :16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.models.config import (BlockSpec, MambaConfig, ModelConfig,
+                                 MoEConfig, XLSTMConfig)
+from repro.models.lm import (DecodeState, TrainState, abstract_params,
+                             forward, init_decode_state, init_model,
+                             init_train_state, loss_fn, make_serve_step,
+                             make_train_step, param_pspecs,
+                             decode_state_pspecs, train_state_pspecs)

@@ -1,0 +1,262 @@
+"""Grouped-query attention: training forward, decode step, cross-attention.
+
+Supports
+  * GQA (num_kv_heads < num_heads) with head replication via einsum grouping,
+  * causal full attention,
+  * sliding-window ("local") causal attention with a static window,
+  * bidirectional encoder self-attention,
+  * cross-attention over encoder outputs,
+  * RoPE (full or partial / "2d"), optional QK-norm,
+  * decode: single-token query against a (possibly ring-buffered) KV cache.
+
+Shapes: x (B, S, D); q (B, S, H, hd); kv (B, S, Hkv, hd).
+Softmax in fp32; matmuls in the compute dtype (bf16 target).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+NEG_INF = -2.3819763e38   # lowest bf16-representable; standard flash value
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_dense(ks[0], d, h * hd, dtype)["kernel"]
+              .reshape(d, h, hd),
+        "wk": layers.init_dense(ks[1], d, hkv * hd, dtype)["kernel"]
+              .reshape(d, hkv, hd),
+        "wv": layers.init_dense(ks[2], d, hkv * hd, dtype)["kernel"]
+              .reshape(d, hkv, hd),
+        "wo": layers.init_dense(ks[3], h * hd, d, dtype,
+                                scale=1.0 / math.sqrt(h * hd))["kernel"]
+              .reshape(h, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_norm(hd, "rmsnorm")
+        p["k_norm"] = layers.init_norm(hd, "rmsnorm")
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = layers.apply_norm(p["q_norm"], q, "rmsnorm")
+        k = layers.apply_norm(p["k_norm"], k, "rmsnorm")
+    if cfg.rope != "none":
+        rot = int(cfg.head_dim_ * cfg.rotary_pct)
+        rot -= rot % 2
+        cos, sin = layers.rotary_angles(positions, rot, cfg.rope_theta)
+        cos, sin = cos.astype(jnp.float32), sin.astype(jnp.float32)
+        q = layers.apply_rotary(q, cos, sin, cfg.rotary_pct)
+        k = layers.apply_rotary(k, cos, sin, cfg.rotary_pct)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+          ) -> jax.Array:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd); mask broadcastable to
+    (B, H, Sq, Skv) (True = attend).
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k) / math.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        # mask: (B|1, sq, skv) boolean -> broadcast over (hkv, g)
+        m = mask[:, None, None, :, :]
+        scores = jnp.where(m, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+# KV-chunked online-softmax attention kicks in above this sequence length:
+# materialising (B, H, S, S) scores at 32k+ dominates HBM traffic
+# (EXPERIMENTS.md §Perf Q2); the chunked path bounds it to (B, H, S, CHUNK).
+FLASH_CHUNK = 2048
+FLASH_MIN_SEQ = 8192
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  mode: str, window: int) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with running max/sum.
+
+    q: (B, S, H, hd); k/v: (B, S, Hkv, hd).  Causal ('full') or sliding
+    window ('local') masking, self-attention alignment (sq == skv).
+    """
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    c = FLASH_CHUNK
+    n_chunks = (s + c - 1) // c
+    pad = n_chunks * c - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(kp.reshape(b, n_chunks, c, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(b, n_chunks, c, hkv, hd), 1, 0)
+
+    qg = (q.reshape(b, s, hkv, g, hd) / math.sqrt(hd)).astype(jnp.float32)
+    qi = jnp.arange(s)[:, None]
+
+    def step(carry, inp):
+        m_run, l_run, o_run = carry            # (b,hkv,g,s), ., (b,hkv,g,s,hd)
+        kj, vj, j0 = inp
+        scores = jnp.einsum("bqhgk,bjhk->bhgqj", qg,
+                            kj.astype(jnp.float32))
+        kid = j0 * c + jnp.arange(c)[None, :]
+        valid = kid < s
+        if mode == "local":
+            m = (kid <= qi) & (kid > qi - window) & valid
+        else:
+            m = (kid <= qi) & valid
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        o_new = (o_run * corr[..., None]
+                 + jnp.einsum("bhgqj,bjhk->bhgqk", p,
+                              vj.astype(jnp.float32)))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    o0 = jnp.zeros((b, hkv, g, s, hd), jnp.float32)
+    (m_f, l_f, o_f), _ = jax.lax.scan(
+        step, (m0, l0, o0), (kc, vc, jnp.arange(n_chunks)))
+    out = o_f / jnp.maximum(l_f[..., None], 1e-30)
+    out = jnp.moveaxis(out, -2, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def causal_mask(sq: int, skv: int, offset: int = 0) -> jax.Array:
+    """(sq, skv) boolean mask; query i attends kv j iff j <= i + offset."""
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    return kj <= qi + offset
+
+
+def local_mask(sq: int, skv: int, window: int, offset: int = 0) -> jax.Array:
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    return (kj <= qi + offset) & (kj > qi + offset - window)
+
+
+def self_attention(p, cfg: ModelConfig, x: jax.Array, *,
+                   mode: str, positions: Optional[jax.Array] = None,
+                   window: Optional[int] = None) -> jax.Array:
+    """Training/prefill self-attention.  mode: full|local|bidir."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if (mode in ("full", "local") and s >= FLASH_MIN_SEQ
+            and jax.default_backend() == "tpu"):
+        # TPU target: fused Pallas flash kernel — scores stay in VMEM
+        from repro.kernels.flash_attention.ops import gqa_flash_attention
+        out = gqa_flash_attention(
+            q, k, v, causal=True,
+            window=(window or cfg.window_size) if mode == "local" else 0)
+    elif mode in ("full", "local") and s >= FLASH_MIN_SEQ:
+        out = _sdpa_chunked(q, k, v, mode=mode,
+                            window=window or cfg.window_size)
+    elif mode == "full":
+        out = _sdpa(q, k, v, causal_mask(s, s)[None])
+    elif mode == "local":
+        out = _sdpa(q, k, v, local_mask(s, s, window or cfg.window_size)[None])
+    elif mode == "bidir":
+        out = _sdpa(q, k, v, None)
+    else:
+        raise ValueError(mode)
+    out = shard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(y, "batch", "seq", None)
+
+
+# ------------------------------------------------------------- decode ------
+
+class KVCache(NamedTuple):
+    """Static-shape KV cache for one attention layer (group).
+
+    k/v: (B, C, Hkv, hd) where C = full seq budget (full/global layers) or
+    the window size (local layers — ring buffer indexed pos % C).
+    """
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def zeros(b: int, c: int, hkv: int, hd: int, dtype) -> "KVCache":
+        z = jnp.zeros((b, c, hkv, hd), dtype)
+        return KVCache(k=z, v=z)
+
+
+def decode_self_attention(p, cfg: ModelConfig, x: jax.Array, cache: KVCache,
+                          pos: jax.Array, *, mode: str
+                          ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode.  x: (B, 1, D); pos: scalar int32 current position.
+
+    Returns (output (B,1,D), updated cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    c = cache.k.shape[1]
+    slot = (pos % c if mode == "local"
+            else jnp.minimum(pos, c - 1)).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0))
+    idx = jnp.arange(c)
+    if mode == "local":
+        # Ring buffer: slot j currently holds the token written at time
+        # t_j = pos - ((pos - j) mod c).  It is valid iff t_j >= 0; the
+        # window constraint (t_j > pos - c) holds automatically since the
+        # buffer length equals the window.
+        tj = pos - ((pos - idx) % c)
+        valid = (tj >= 0)[None, :]
+    else:
+        valid = (idx <= pos)[None, :]
+    mask = valid[:, None, :]                      # (1, sq=1, C)
+    out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v)
+
+
+# ------------------------------------------------------- cross-attention ---
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> dict:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(p, cfg: ModelConfig, x: jax.Array, enc: jax.Array,
+                    ) -> jax.Array:
+    """Decoder->encoder attention (no positional rotation, bidirectional)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wv"].astype(dt))
+    out = _sdpa(q, k, v, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))

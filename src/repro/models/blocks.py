@@ -1,0 +1,288 @@
+"""Block assembly + the scan-over-superblocks layer stack.
+
+A model's layer layout (config.layout()) is decomposed into
+``(period_specs, n_super, remainder_specs)``.  Parameters for each position
+in the period are stacked with a leading ``n_super`` axis, and the stack
+executes as one ``jax.lax.scan`` whose body applies the whole period — this
+keeps HLO size O(period) instead of O(num_layers) (essential at 40-96 layers
+x 40 dry-run configs on a single-core compile budget).
+
+Recurrent/KV state for decode is stacked the same way and threaded through
+the scan as (xs -> ys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mlp, moe, ssm, xlstm
+from repro.models.config import BlockSpec, ModelConfig, split_layout
+from repro.models.sharding import shard
+
+
+# --------------------------------------------------------------- params ----
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"pre_norm": layers.init_norm(cfg.d_model, cfg.norm)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = attention.init_attention(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(ks[0], cfg, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attention:
+        p["cross_norm"] = layers.init_norm(cfg.d_model, cfg.norm)
+        p["cross"] = attention.init_cross_attention(ks[1], cfg, dtype)
+    if spec.ff == "dense":
+        p["post_norm"] = layers.init_norm(cfg.d_model, cfg.norm)
+        p["ff"] = mlp.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                               cfg.activation, dtype)
+    elif spec.ff == "moe":
+        p["post_norm"] = layers.init_norm(cfg.d_model, cfg.norm)
+        p["ff"] = moe.init_moe(ks[2], cfg.d_model, cfg.moe,
+                               cfg.activation, dtype)
+    return p
+
+
+# --------------------------------------------------------------- states ----
+
+def init_block_state(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     cache_len: int, dtype) -> Optional[Any]:
+    """Decode-time state for one layer (None for pure-FF encoder use)."""
+    if spec.mixer == "attn":
+        return attention.KVCache.zeros(batch, cache_len, cfg.num_kv_heads,
+                                       cfg.head_dim_, dtype)
+    if spec.mixer == "attn_local":
+        w = spec.window or cfg.window_size
+        return attention.KVCache.zeros(batch, min(w, cache_len),
+                                       cfg.num_kv_heads, cfg.head_dim_, dtype)
+    if spec.mixer == "mamba":
+        return ssm.MambaState.zeros(batch, cfg, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm.MLSTMState.zeros(batch, cfg)
+    if spec.mixer == "slstm":
+        return xlstm.SLSTMState.zeros(batch, cfg)
+    raise ValueError(spec.mixer)
+
+
+# --------------------------------------------------------------- apply -----
+
+def apply_block(p, cfg: ModelConfig, spec: BlockSpec, x: jax.Array, *,
+                enc: Optional[jax.Array] = None,
+                mode: str = "causal") -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill application.  Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(p["pre_norm"], x, cfg.norm)
+    if spec.mixer in ("attn", "attn_local"):
+        attn_mode = ("bidir" if mode == "bidir" else
+                     ("local" if spec.mixer == "attn_local" else "full"))
+        y = attention.self_attention(p["mixer"], cfg, h, mode=attn_mode,
+                                     window=spec.window)
+    elif spec.mixer == "mamba":
+        y = ssm.mamba_forward(p["mixer"], cfg, h)
+    elif spec.mixer == "mlstm":
+        y = xlstm.mlstm_forward(p["mixer"], cfg, h)
+    elif spec.mixer == "slstm":
+        y = xlstm.slstm_forward(p["mixer"], cfg, h)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.cross_attention and enc is not None:
+        h = layers.apply_norm(p["cross_norm"], x, cfg.norm)
+        x = x + attention.cross_attention(p["cross"], cfg, h, enc)
+    if spec.ff == "dense":
+        h = layers.apply_norm(p["post_norm"], x, cfg.norm)
+        x = x + mlp.apply_mlp(p["ff"], h, cfg.activation)
+    elif spec.ff == "moe":
+        h = layers.apply_norm(p["post_norm"], x, cfg.norm)
+        y, a = moe.apply_moe(p["ff"], h, cfg.moe, cfg.activation)
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+def apply_block_decode(p, cfg: ModelConfig, spec: BlockSpec, x: jax.Array,
+                       state, pos: jax.Array, *,
+                       enc: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Any]:
+    """Single-token decode.  x: (B,1,D)."""
+    h = layers.apply_norm(p["pre_norm"], x, cfg.norm)
+    if spec.mixer in ("attn", "attn_local"):
+        amode = "local" if spec.mixer == "attn_local" else "full"
+        y, state = attention.decode_self_attention(p["mixer"], cfg, h, state,
+                                                   pos, mode=amode)
+    elif spec.mixer == "mamba":
+        y, state = ssm.mamba_decode(p["mixer"], cfg, h, state)
+    elif spec.mixer == "mlstm":
+        y, state = xlstm.mlstm_decode(p["mixer"], cfg, h, state)
+    elif spec.mixer == "slstm":
+        y, state = xlstm.slstm_decode(p["mixer"], cfg, h, state)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.cross_attention and enc is not None:
+        h = layers.apply_norm(p["cross_norm"], x, cfg.norm)
+        x = x + attention.cross_attention(p["cross"], cfg, h, enc)
+    if spec.ff == "dense":
+        h = layers.apply_norm(p["post_norm"], x, cfg.norm)
+        x = x + mlp.apply_mlp(p["ff"], h, cfg.activation)
+    elif spec.ff == "moe":
+        h = layers.apply_norm(p["post_norm"], x, cfg.norm)
+        y, _ = moe.apply_moe(p["ff"], h, cfg.moe, cfg.activation)
+        x = x + y
+    return x, state
+
+
+# ---------------------------------------------------------------- stack ----
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    period: Tuple[BlockSpec, ...]
+    n_super: int
+    remainder: Tuple[BlockSpec, ...]
+
+    @staticmethod
+    def from_layout(specs: List[BlockSpec]) -> "StackPlan":
+        p, n, r = split_layout(specs)
+        return StackPlan(tuple(p), n, tuple(r))
+
+
+def init_stack(key, cfg: ModelConfig, plan: StackPlan, dtype) -> Dict:
+    """Stacked parameters: {'super': {'p0': stacked, ...}, 'rem': {...}}."""
+    out: Dict[str, Any] = {"super": {}, "rem": {}}
+    for pi, spec in enumerate(plan.period):
+        keys = jax.random.split(jax.random.fold_in(key, pi), plan.n_super)
+        stacked = jax.vmap(
+            lambda k, s=spec: init_block(k, cfg, s, dtype))(keys)
+        out["super"][f"p{pi}"] = stacked
+    for ri, spec in enumerate(plan.remainder):
+        out["rem"][f"r{ri}"] = init_block(
+            jax.random.fold_in(key, 10_000 + ri), cfg, spec, dtype)
+    return out
+
+
+def init_stack_state(cfg: ModelConfig, plan: StackPlan, batch: int,
+                     cache_len: int, dtype) -> Dict:
+    out: Dict[str, Any] = {"super": {}, "rem": {}}
+    for pi, spec in enumerate(plan.period):
+        one = init_block_state(cfg, spec, batch, cache_len, dtype)
+        out["super"][f"p{pi}"] = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t[None], (plan.n_super,) + t.shape),
+            one)
+    for ri, spec in enumerate(plan.remainder):
+        out["rem"][f"r{ri}"] = init_block_state(cfg, spec, batch,
+                                                cache_len, dtype)
+    return out
+
+
+def _checkpoint_group(n_super: int) -> int:
+    """Group size for sqrt-L checkpointing (0/1 = disabled).  Enabled for
+    deep stacks; override with REPRO_CKPT_GROUP."""
+    import os
+    v = os.environ.get("REPRO_CKPT_GROUP")
+    if v is not None:
+        return int(v)
+    # MEASURED NEGATIVE (EXPERIMENTS.md §Perf N5): on the CPU-XLA dry-run
+    # the grouped recompute DOUBLED nemotron's footprint (58 -> 122 GB/dev)
+    # because the hoisted bf16->f32 convert of the saved stack happens per
+    # group on top of the recompute buffers.  Disabled by default; opt in
+    # via REPRO_CKPT_GROUP for TPU-pipeline verification.
+    return 1
+
+
+def _unroll_for_analysis() -> bool:
+    """When REPRO_UNROLL_SCAN=1, layer scans fully unroll so that
+    cost_analysis / collective parsing count every layer (XLA's
+    HloCostAnalysis counts while bodies once — see EXPERIMENTS.md
+    §Roofline).  Analysis-only: never set for real training."""
+    import os
+    return os.environ.get("REPRO_UNROLL_SCAN", "0") == "1"
+
+
+def apply_stack(params: Dict, cfg: ModelConfig, plan: StackPlan,
+                x: jax.Array, *, enc: Optional[jax.Array] = None,
+                mode: str = "causal", remat: bool = True
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Forward through the full stack.  Returns (x, total_moe_aux)."""
+
+    def superblock(carry, stacked_slice):
+        h, aux = carry
+        for pi, spec in enumerate(plan.period):
+            h, a = apply_block(stacked_slice[f"p{pi}"], cfg, spec, h,
+                               enc=enc, mode=mode)
+            aux = aux + a
+        # residual-stream layout hook: default replicated-over-(seq,hidden);
+        # perf experiments reshard via set_rules(seq_act=..., residual=...)
+        h = shard(h, "batch", "seq_act", "residual")
+        return (h, aux), None
+
+    body = jax.checkpoint(superblock) if remat else superblock
+    aux0 = jnp.zeros((), jnp.float32)
+    unroll = plan.n_super if _unroll_for_analysis() else 1
+    # sqrt-L two-level checkpointing: for deep stacks, scan over G groups
+    # (outer carries saved) each rescanning n_super/G super-blocks whose
+    # carries are RECOMPUTED in the backward pass — saved-activation stack
+    # shrinks from O(L) to O(G + L/G) at ~1 extra group forward
+    # (EXPERIMENTS.md §Perf N5).
+    group = _checkpoint_group(plan.n_super) if remat else 0
+    if plan.n_super > 0 and group > 1 and plan.n_super % group == 0:
+        n_groups = plan.n_super // group
+
+        def group_body(carry, group_params):
+            def inner(c, slice_):
+                return superblock(c, slice_)
+            out, _ = jax.lax.scan(inner, carry, group_params)
+            return out, None
+
+        grouped = jax.tree_util.tree_map(
+            lambda t: t.reshape((n_groups, group) + t.shape[1:]),
+            params["super"])
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body), (x, aux0),
+                                   grouped)
+    elif plan.n_super > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["super"],
+                                   unroll=unroll)
+    else:
+        aux = aux0
+    for ri, spec in enumerate(plan.remainder):
+        x, a = apply_block(params["rem"][f"r{ri}"], cfg, spec, x,
+                           enc=enc, mode=mode)
+        aux = aux + a
+    return x, aux
+
+
+def apply_stack_decode(params: Dict, cfg: ModelConfig, plan: StackPlan,
+                       x: jax.Array, state: Dict, pos: jax.Array, *,
+                       enc: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Dict]:
+    def superblock(h, slices):
+        param_slice, state_slice = slices
+        new_states = {}
+        for pi, spec in enumerate(plan.period):
+            h, ns = apply_block_decode(param_slice[f"p{pi}"], cfg, spec, h,
+                                       state_slice[f"p{pi}"], pos, enc=enc)
+            new_states[f"p{pi}"] = ns
+        return h, new_states
+
+    if plan.n_super > 0:
+        x, new_super = jax.lax.scan(superblock, x,
+                                    (params["super"], state["super"]),
+                                    unroll=(plan.n_super
+                                            if _unroll_for_analysis() else 1))
+    else:
+        new_super = state["super"]
+    new_rem = {}
+    for ri, spec in enumerate(plan.remainder):
+        x, ns = apply_block_decode(params["rem"][f"r{ri}"], cfg, spec, x,
+                                   state["rem"][f"r{ri}"], pos, enc=enc)
+        new_rem[f"r{ri}"] = ns
+    return x, {"super": new_super, "rem": new_rem}

@@ -1,0 +1,133 @@
+"""Basic layers: norms, dense projections, embeddings, rotary embeddings.
+
+All ``init_*`` functions return plain dict pytrees; ``apply`` logic is free
+functions so everything composes under jit/scan without framework magic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- norms ----
+
+def init_norm(d: int, norm: str, dtype=jnp.float32):
+    if norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x: jax.Array, norm: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------- dense -----
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+    return {"kernel": w.astype(dtype)}
+
+
+def apply_dense(p, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,df->...f", x, p["kernel"].astype(x.dtype))
+
+
+# ------------------------------------------------------------ embedding ----
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (1.0 / math.sqrt(d))
+    return {"table": w.astype(dtype)}
+
+
+def embed_tokens(p, tokens: jax.Array, *, scale: bool = False) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(p["table"].shape[1]), x.dtype)
+    return x
+
+
+def unembed(p, x: jax.Array, *, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        p["table"].astype(jnp.float32))
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# --------------------------------------------------------------- rotary ----
+
+def rotary_angles(positions: jax.Array, rotary_dim: int, theta: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions.  Shapes (..., rotary_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2,
+                                        dtype=jnp.float32) / rotary_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array,
+                 rotary_pct: float = 1.0) -> jax.Array:
+    """Apply RoPE to the leading ``rotary_pct`` fraction of the head dim.
+
+    ``x``: (..., seq, heads, head_dim); cos/sin: (..., seq, rot/2) broadcast.
+
+    rotary_pct < 1 gives ChatGLM-style partial ("2d") rotary: only the first
+    half of each head rotates, the rest passes through.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    xf = x_rot.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    c = cos[..., None, :]     # broadcast over heads axis
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    y = jnp.stack([y1, y2], axis=-1).reshape(xf.shape).astype(x.dtype)
+    return jnp.concatenate([y, x_pass], axis=-1) if x_pass.shape[-1] else y
+
+
+# ----------------------------------------------------- sinusoidal (abs) ----
+
+def sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    """Single-position sinusoidal embedding (d,) for a traced position."""
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (seq, d), float32."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

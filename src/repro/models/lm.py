@@ -1,0 +1,342 @@
+"""The full model: embeddings -> (encoder) -> decoder stack -> logits,
+plus train_step / serve_step factories and parameter sharding specs.
+
+Input contract (matches launch/dryrun.py input_specs):
+  dense/moe/hybrid/ssm : {"tokens": (B, S) int32}
+  vlm                  : {"tokens": (B, S_text) int32,
+                          "patch_embeds": (B, P, D)}       # stub frontend
+  audio (enc-dec)      : {"tokens": (B, S_dec) int32,
+                          "enc_frames": (B, S_enc, D)}     # stub frontend
+
+Training computes next-token CE over the text tokens (VLM: patches are
+prefix context only; audio: decoder tokens).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks, layers
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard, spec as pspec
+from repro.optim import Optimizer
+from repro.optim.optimizers import apply_updates
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def plan_for(cfg: ModelConfig) -> blocks.StackPlan:
+    return blocks.StackPlan.from_layout(cfg.layout())
+
+
+def encoder_plan_for(cfg: ModelConfig) -> Optional[blocks.StackPlan]:
+    if not cfg.is_encdec:
+        return None
+    return blocks.StackPlan.from_layout(cfg.encoder_layout())
+
+
+# ----------------------------------------------------------------- init ----
+
+def init_model(key, cfg: ModelConfig) -> Dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "stack": blocks.init_stack(ks[1], cfg, plan_for(cfg), dt),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_embedding(ks[2], cfg.vocab_size,
+                                                  cfg.d_model, dt)
+    if cfg.is_encdec:
+        params["encoder"] = blocks.init_stack(ks[3], cfg,
+                                              encoder_plan_for(cfg), dt)
+        params["enc_norm"] = layers.init_norm(cfg.d_model, cfg.norm)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+# -------------------------------------------------------------- forward ----
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    dt = _dtype(cfg)
+    x = layers.embed_tokens(params["embed"], batch["tokens"],
+                            scale=cfg.embed_scale).astype(dt)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        patches = batch["patch_embeds"].astype(dt)
+        x = jnp.concatenate([patches, x], axis=1)
+    return shard(x, "batch", "seq", None)
+
+
+def _run_encoder(params, cfg: ModelConfig, batch: Dict) -> Optional[jax.Array]:
+    if not cfg.is_encdec:
+        return None
+    frames = batch["enc_frames"].astype(_dtype(cfg))
+    pe = layers.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    h = frames + pe.astype(frames.dtype)
+    h = shard(h, "batch", "seq", None)
+    h, _ = blocks.apply_stack(params["encoder"], cfg, encoder_plan_for(cfg),
+                              h, mode="bidir")
+    return layers.apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S_out, V) fp32, moe_aux)."""
+    enc = _run_encoder(params, cfg, batch)
+    x = _embed_inputs(params, cfg, batch)
+    if cfg.is_encdec:
+        pe = layers.sinusoidal_positions(x.shape[1], cfg.d_model)
+        x = x + pe.astype(x.dtype)
+    x, aux = blocks.apply_stack(params["stack"], cfg, plan_for(cfg), x,
+                                enc=enc, remat=remat)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:]   # logits for text only
+    head = params.get("lm_head", params["embed"])
+    logits = layers.unembed(head, x, softcap=cfg.logits_softcap)
+    return shard(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict,
+            remat: bool = True) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    total = ce + aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+# ----------------------------------------------------------- train step ----
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optimizer) -> TrainState:
+    params = init_model(key, cfg)
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    num_microbatches: int = 1, remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``num_microbatches > 1`` the global batch is split along axis 0 and
+    gradients are accumulated with a ``lax.scan`` (activation memory divides
+    by the microbatch count; see EXPERIMENTS.md §Perf)."""
+
+    def _grads(params, batch):
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, remat)
+        return l, m, g
+
+    def train_step(state: TrainState, batch: Dict):
+        if num_microbatches <= 1:
+            loss, metrics, grads = _grads(state.params, batch)
+        else:
+            def _split(t):
+                b = t.shape[0]
+                mb = b // num_microbatches
+                return t.reshape((num_microbatches, mb) + t.shape[1:])
+            micro = jax.tree_util.tree_map(_split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, _, g = _grads(state.params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, lsum), _ = jax.lax.scan(acc, (g0, 0.0), micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / num_microbatches, grads)
+            loss = lsum / num_microbatches
+            metrics = {"ce": loss, "moe_aux": jnp.zeros(())}
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return TrainState(params, opt_state, state.step + 1), {
+            "loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step
+
+
+# ----------------------------------------------------------- serve step ----
+
+class DecodeState(NamedTuple):
+    stack: Any                    # per-layer recurrent / KV states
+    pos: jax.Array                # scalar int32 current position
+    enc: Optional[jax.Array] = None   # enc-dec: cached encoder output
+
+
+def init_decode_state(params, cfg: ModelConfig, batch_size: int,
+                      cache_len: int,
+                      enc_frames: Optional[jax.Array] = None) -> DecodeState:
+    dt = _dtype(cfg)
+    st = blocks.init_stack_state(cfg, plan_for(cfg), batch_size,
+                                 cache_len, dt)
+    enc = None
+    if cfg.is_encdec:
+        if enc_frames is None:
+            raise ValueError("enc-dec decode requires enc_frames")
+        enc = _run_encoder(params, cfg, {"enc_frames": enc_frames})
+    return DecodeState(stack=st, pos=jnp.zeros((), jnp.int32), enc=enc)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch_size: int, cache_len: int,
+                          enc_len: int = 0):
+    """ShapeDtypeStructs for the decode state (dry-run input)."""
+    dt = _dtype(cfg)
+    st = jax.eval_shape(lambda: blocks.init_stack_state(
+        cfg, plan_for(cfg), batch_size, cache_len, dt))
+    enc = (jax.ShapeDtypeStruct((batch_size, enc_len, cfg.d_model), dt)
+           if cfg.is_encdec else None)
+    return DecodeState(
+        stack=st, pos=jax.ShapeDtypeStruct((), jnp.int32), enc=enc)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, state, tokens (B,1)) -> (logits (B,V), state)."""
+
+    def serve_step(params, state: DecodeState, tokens: jax.Array):
+        dt = _dtype(cfg)
+        x = layers.embed_tokens(params["embed"], tokens,
+                                scale=cfg.embed_scale).astype(dt)
+        if cfg.is_encdec:
+            # absolute sinusoid at the current decode position
+            pe = layers.sinusoid_at(state.pos, cfg.d_model)
+            x = x + pe.astype(dt)
+        x = shard(x, "batch", "seq", None)
+        x, new_stack = blocks.apply_stack_decode(
+            params["stack"], cfg, plan_for(cfg), x, state.stack, state.pos,
+            enc=state.enc)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        head = params.get("lm_head", params["embed"])
+        logits = layers.unembed(head, x[:, 0], softcap=cfg.logits_softcap)
+        logits = shard(logits, "batch", "vocab")
+        return logits, DecodeState(stack=new_stack, pos=state.pos + 1,
+                                   enc=state.enc)
+
+    return serve_step
+
+
+# ------------------------------------------------------- sharding specs ----
+
+_SPEC_BY_NAME_RANK = {
+    # name -> {rank: logical axes}
+    "table": {2: ("vocab", "table_embed")},
+    "wq": {3: ("embed", "heads", None), 2: ("embed", "inner")},
+    "wk": {3: ("embed", "kv_heads", None), 2: ("embed", "inner")},
+    "wv": {3: ("embed", "kv_heads", None), 2: ("embed", "inner")},
+    "wo": {3: ("heads", None, "embed")},
+    "w_up": {2: ("embed", "mlp"), 3: ("experts", "embed", None)},
+    "w_gate": {2: ("embed", "mlp"), 3: ("experts", "embed", None)},
+    "w_down": {2: ("mlp", "embed"), 3: ("experts", None, "embed")},
+    "router": {2: (None, None)},
+    "in_proj": {2: ("embed", "inner")},
+    "conv_w": {2: (None, "inner")},
+    "conv_b": {1: ("inner",)},
+    "x_proj": {2: ("inner", None)},
+    "dt_proj": {2: (None, "inner")},
+    "dt_bias": {1: ("inner",)},
+    "a_log": {2: ("inner", None)},
+    "d_skip": {1: ("inner",)},
+    "out_proj": {2: ("inner", "embed")},
+    "up": {2: ("embed", "inner")},
+    "down": {2: ("inner", "embed")},
+    "w_gates": {2: ("inner", None)},
+    "w_i": {2: ("inner", None)},
+    "w_f": {2: ("inner", None)},
+    "b_i": {1: (None,)},
+    "b_f": {1: (None,)},
+    "b_gates": {1: (None,)},
+}
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):          # DictKey
+            names.append(str(p.key))
+        elif hasattr(p, "name"):       # GetAttrKey (NamedTuple field)
+            names.append(str(p.name))
+    return names
+
+
+def _leaf_logical_axes(path, leaf_shape) -> Tuple:
+    names = _path_names(path)
+    stacked = "super" in names
+    base = names[-1] if names else None
+    rank = len(leaf_shape) - (1 if stacked else 0)
+    axes = _SPEC_BY_NAME_RANK.get(base, {}).get(rank)
+    if axes is None:
+        axes = (None,) * rank
+    if stacked:
+        axes = ("layers",) + axes
+    return axes
+
+
+def param_pspecs(cfg: ModelConfig, params_shape) -> Any:
+    """PartitionSpec pytree for params (divisibility-aware, current mesh).
+
+    Also correct for TrainState shapes: optimizer moments mirror the params
+    subtree, so name-based lookup lands on the same entries."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        axes = _leaf_logical_axes(path, leaf.shape)
+        out.append(pspec(*axes, shape=tuple(leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+train_state_pspecs = param_pspecs
+
+
+def decode_state_pspecs(cfg: ModelConfig, state_shape) -> Any:
+    """Specs for DecodeState: KV caches shard batch over data and kv-heads
+    over model; recurrent states shard batch (and mamba inner dim)."""
+    def _one(path, leaf):
+        names = _path_names(path)
+        stacked = "super" in names
+        rank = len(leaf.shape) - (1 if stacked else 0)
+        base = names[-1] if names else None
+        if base in ("k", "v") and rank == 4:       # KV cache
+            axes = ("batch", "kv_seq", "kv_heads", None)
+        elif base == "conv" and rank == 3:         # mamba conv window
+            axes = ("batch", None, "inner")
+        elif base == "ssm" and rank == 3:          # mamba SSM state
+            axes = ("batch", "inner", None)
+        elif base == "enc" and rank == 3:          # cached encoder output
+            axes = ("batch", "seq", None)
+        elif rank >= 1 and base != "pos":          # lstm c/n/h/m etc.
+            axes = ("batch",) + (None,) * (rank - 1)
+        else:
+            axes = (None,) * rank
+        if stacked:
+            axes = ("layers",) + axes
+        return pspec(*axes, shape=tuple(leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_one(p, l) for p, l in flat])

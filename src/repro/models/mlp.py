@@ -1,0 +1,46 @@
+"""Feed-forward blocks: SwiGLU / GEGLU (gated), GELU, squared-ReLU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+GATED = ("swiglu", "geglu")
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": layers.init_dense(ks[0], d_model, d_ff, dtype)["kernel"],
+         "w_down": layers.init_dense(ks[1], d_ff, d_model, dtype)["kernel"]}
+    if activation in GATED:
+        p["w_gate"] = layers.init_dense(ks[2], d_model, d_ff, dtype)["kernel"]
+    return p
+
+
+def _act(activation: str, x: jax.Array) -> jax.Array:
+    if activation in ("swiglu",):
+        return jax.nn.silu(x)
+    if activation in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    if activation == "squared_relu":            # nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(activation)
+
+
+def apply_mlp(p, x: jax.Array, activation: str) -> jax.Array:
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    up = shard(up, "batch", "seq", "mlp")
+    if activation in GATED:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        gate = shard(gate, "batch", "seq", "mlp")
+        h = _act(activation, gate) * up
+    else:
+        h = _act(activation, up)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return shard(y, "batch", "seq", None)

@@ -1,0 +1,266 @@
+"""Mixture-of-Experts layer with top-k token-choice routing.
+
+TPU-native dispatch (DESIGN.md §5): sort-based capacity dispatch —
+
+  1. router logits -> top-k expert ids + normalised probs per token;
+  2. position-in-expert via a stable sort over expert ids (O(T log T), no
+     (T, E) one-hot materialisation);
+  3. scatter into a static (E, capacity, d) buffer, einsum per-expert FFN,
+     gather back and combine with routing probs.
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism); the
+token->expert buffer transition is a resharding GSPMD lowers to an
+all-to-all.  Load-balance auxiliary loss follows Switch/Shard designs
+(mean(prob_per_expert * frac_tokens_per_expert) * E).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.sharding import shard
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, activation: str, dtype
+             ) -> dict:
+    ks = jax.random.split(key, 4)
+    e, f = mcfg.num_experts, mcfg.d_ff_expert
+    import math
+    s_in = 1.0 / math.sqrt(d_model)
+    s_ff = 1.0 / math.sqrt(f)
+    p = {
+        "router": layers.init_dense(ks[0], d_model, e, jnp.float32)["kernel"],
+        "w_up": (jax.random.normal(ks[1], (e, d_model, f), jnp.float32)
+                 * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d_model), jnp.float32)
+                   * s_ff).astype(dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d_model, f), jnp.float32)
+                       * s_in).astype(dtype)
+    return p
+
+
+def _capacity(num_tokens: int, mcfg: MoEConfig) -> int:
+    cap = int(num_tokens * mcfg.top_k * mcfg.capacity_factor
+              / mcfg.num_experts)
+    return max(8, (cap + 7) // 8 * 8)   # pad to 8 for TPU-friendly tiling
+
+
+def route(p, x_flat: jax.Array, mcfg: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (expert_ids (T,k), probs (T,k), aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"])
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs_full, mcfg.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss
+    e = mcfg.num_experts
+    me = jnp.mean(probs_full, axis=0)                          # (E,)
+    ce = jnp.zeros(e).at[top_ids.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(jnp.sum(ce), 1.0)
+    aux = jnp.sum(me * ce) * e
+    return top_ids.astype(jnp.int32), top_p.astype(x_flat.dtype), aux
+
+
+def _data_shards(t: int) -> int:
+    """Number of token blocks for shard-local dispatch = size of the
+    ('pod','data') mesh axes (1 off-mesh).  Blocked dispatch keeps routing,
+    scatter, and combine LOCAL to each data shard (its own capacity slice),
+    so GSPMD never all-reduces the dispatch buffer — see EXPERIMENTS.md
+    §Perf Q1."""
+    from repro.models.sharding import _mesh, _rules
+    m = _mesh()
+    if m is None:
+        return 1
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    rule = _rules.get("batch", ("pod", "data"))
+    cand = rule if isinstance(rule, tuple) else (rule,)
+    n = 1
+    for a in cand:
+        n *= sizes.get(a, 1)
+    # blocks need >= 256 tokens each: smaller blocks inflate the per-expert
+    # capacity padding (min 8 slots/expert/block — measured +43% footprint
+    # on jamba decode_32k) and the original single-buffer path wins.
+    while n > 1 and (t % n != 0 or t // n < 256):
+        n //= 2
+    return max(n, 1)
+
+
+def _positions_in_expert(flat_ids: jax.Array, e: int, cap: int):
+    """Stable-sort ranking of assignments within their expert's run."""
+    n = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    counts = jnp.zeros(e, jnp.int32).at[flat_ids].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids]
+    pos = jnp.zeros(n, jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    return jnp.where(keep, pos, cap - 1), keep
+
+
+def _ep_mesh_info(t: int, e: int):
+    """(mesh, data_axes, n_blocks, model_size) when the explicit
+    expert-parallel path is usable, else None."""
+    from repro.models.sharding import _mesh
+    m = _mesh()
+    if m is None:
+        return None
+    sizes = dict(zip(m.axis_names, m.axis_sizes))
+    ms = sizes.get("model", 1)
+    if ms <= 1 or e % ms != 0:
+        return None
+    data_axes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+    nb = 1
+    for a in data_axes:
+        nb *= sizes[a]
+    if t % max(nb, 1) != 0:
+        return None
+    # decode-size batches: the EP path's fixed shard_map overheads exceed
+    # the win when each block routes only a handful of tokens (measured:
+    # jamba decode_32k +40% footprint) — fall back to the GSPMD path.
+    if t // max(nb, 1) < 64:
+        return None
+    return m, data_axes, max(nb, 1), ms
+
+
+def apply_moe(p, x: jax.Array, mcfg: MoEConfig, activation: str
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Dispatcher: explicit expert-parallel shard_map path on meshes with a
+    'model' axis (EXPERIMENTS.md §Perf Q3 — dispatch is shard-local, the
+    only cross-shard traffic is one (tl, d) psum at combine); blocked
+    GSPMD path otherwise."""
+    t = x.shape[0] * x.shape[1]
+    info = _ep_mesh_info(t, mcfg.num_experts)
+    if info is not None:
+        return _apply_moe_ep(p, x, mcfg, activation, info)
+    return _apply_moe_gspmd(p, x, mcfg, activation)
+
+
+def _apply_moe_ep(p, x: jax.Array, mcfg: MoEConfig, activation: str, info
+                  ) -> Tuple[jax.Array, jax.Array]:
+    from jax.sharding import PartitionSpec as P
+    mesh, data_axes, nb, ms = info
+    b, s, d = x.shape
+    t = b * s
+    dt = x.dtype
+    k, e = mcfg.top_k, mcfg.num_experts
+    e_local = e // ms
+    tl = t // nb
+    cap = _capacity(tl, mcfg)
+    gated = activation in ("swiglu", "geglu")
+
+    xf = x.reshape(t, d)
+    ids, probs, aux = route(p, xf, mcfg)
+    ids_b = ids.reshape(nb, tl * k)
+    probs_b = probs.reshape(nb, tl * k).astype(jnp.float32)
+    x_b = xf.reshape(nb, tl, d)
+    token_idx = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+
+    dspec = data_axes if len(data_axes) > 1 else (data_axes[0]
+                                                  if data_axes else None)
+
+    def body(x_blk, ids_blk, pr_blk, wu, wg, wd):
+        x_blk, ids_blk, pr_blk = x_blk[0], ids_blk[0], pr_blk[0]
+        mi = jax.lax.axis_index("model")
+        lo = mi * e_local
+        local = (ids_blk >= lo) & (ids_blk < lo + e_local)
+        # rank only the LOCAL assignments (sentinel bucket for the rest)
+        ids_loc = jnp.where(local, ids_blk - lo, e_local)
+        pos, keep = _positions_in_expert(ids_loc, e_local + 1, cap)
+        keep = keep & local
+        ids_safe = jnp.where(local, ids_loc, 0)
+        contrib = jnp.where(keep[:, None], x_blk[token_idx], 0.0)
+        buf = jnp.zeros((e_local, cap, d), dt).at[ids_safe, pos].add(contrib)
+        up = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+        if gated:
+            g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
+            act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+            h = act * up
+        else:
+            h = (jax.nn.gelu(up) if activation == "gelu"
+                 else jax.nn.relu(up) ** 2)
+        out = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+        rows = out[ids_safe, pos]
+        rows = jnp.where(keep[:, None], rows, 0.0)
+        y_part = jnp.zeros((tl, d), jnp.float32).at[token_idx].add(
+            rows.astype(jnp.float32) * pr_blk[:, None])
+        # the ONLY cross-shard traffic: combine partial sums over experts
+        y = jax.lax.psum(y_part, "model").astype(dt)
+        return y[None]
+
+    wg_in = p.get("w_gate", p["w_up"])
+    y_b = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dspec), P(dspec), P(dspec),
+                  P("model"), P("model"), P("model")),
+        out_specs=P(dspec),
+        check_vma=False,
+    )(x_b, ids_b, probs_b, p["w_up"], wg_in, p["w_down"])
+    y = y_b.reshape(b, s, d)
+    return shard(y, "batch", "seq", None), aux * mcfg.router_aux_loss
+
+
+def _apply_moe_gspmd(p, x: jax.Array, mcfg: MoEConfig, activation: str
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss).
+
+    Blocked (hierarchical) dispatch: tokens are viewed as (n_blocks,
+    t_local) with n_blocks = data-shard count; each block routes into its
+    OWN capacity slice of the (E, n_blocks, cap_local, D) buffer, which is
+    sharded (experts->model, blocks->data).  Scatter and combine are then
+    block-local; the only cross-device traffic is the expert-dim gather at
+    combine time (bounded by assignment bytes), not a full-buffer
+    all-reduce."""
+    b, s, d = x.shape
+    t = b * s
+    dt = x.dtype
+    xf = x.reshape(t, d)
+    ids, probs, aux = route(p, xf, mcfg)
+    k, e = mcfg.top_k, mcfg.num_experts
+    nb = _data_shards(t)
+    tl = t // nb
+    cap = _capacity(tl, mcfg)
+
+    ids_b = ids.reshape(nb, tl * k)
+    xf_b = xf.reshape(nb, tl, d)
+    probs_b = probs.reshape(nb, tl * k)
+    token_idx = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+
+    def _dispatch(ids_blk, x_blk):
+        pos, keep = _positions_in_expert(ids_blk, e, cap)
+        contrib = jnp.where(keep[:, None], x_blk[token_idx], 0.0)
+        buf = jnp.zeros((e, cap, d), dt).at[ids_blk, pos].add(contrib)
+        return buf, pos, keep
+
+    buf, pos_b, keep_b = jax.vmap(_dispatch)(ids_b, xf_b)   # (nb,E,cap,d)
+    buf = jnp.swapaxes(buf, 0, 1)                           # (E,nb,cap,d)
+    buf = shard(buf, "experts", "batch", None, None)
+
+    up = jnp.einsum("encd,edf->encf", buf, p["w_up"].astype(dt))
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("encd,edf->encf", buf, p["w_gate"].astype(dt))
+        act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up) if activation == "gelu" else jax.nn.relu(up) ** 2
+    out_buf = jnp.einsum("encf,efd->encd", h, p["w_down"].astype(dt))
+    out_buf = shard(out_buf, "experts", "batch", None, None)
+    out_buf = jnp.swapaxes(out_buf, 0, 1)                   # (nb,E,cap,d)
+
+    def _combine(out_blk, ids_blk, pos, keep, pr):
+        gathered = out_blk[ids_blk, pos]                    # (tl*k, d)
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        weighted = gathered * pr[:, None]
+        return jnp.zeros((tl, d), dt).at[token_idx].add(weighted)
+
+    y = jax.vmap(_combine)(out_buf, ids_b, pos_b, keep_b, probs_b)
+    y = y.reshape(b, s, d)
+    return shard(y, "batch", "seq", None), aux * mcfg.router_aux_loss

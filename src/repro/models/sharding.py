@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules.
+
+Every parameter/activation carries *logical* axis names; a rules table maps
+them to mesh axes.  The production mesh is ``(data=16, model=16)`` per pod,
+with an optional leading ``pod`` axis (see launch/mesh.py).
+
+Default rules (MaxText-style FSDP + TP):
+
+  batch     -> ("pod", "data")     activations' batch dim
+  embed     -> ("pod", "data")     parameter fan-in  (FSDP)
+  heads     -> "model"             attention heads   (TP)
+  mlp       -> "model"             FFN hidden        (TP)
+  vocab     -> "model"             embedding/logits vocab dim
+  experts   -> "model"             MoE expert-parallel
+  kv_heads  -> "model"             (GQA: only when kv_heads >= mesh model dim)
+  seq, layers, conv, state, ...    -> replicated
+
+``shard(x, *logical_axes)`` applies a with_sharding_constraint when running
+under a mesh context; it is the single choke-point the perf iterations tune.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical name -> mesh axes (None = replicate). Tuples mean "shard over the
+# product of these mesh axes". Mutated only by perf experiments via
+# set_rules().
+_DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),
+    # embedding-table fan-in: FSDP-sharded like other weights.  Replicating
+    # it (tried in §Perf N1) was REFUTED twice: it did not fix nemotron's
+    # blowup and it regressed every small-model train pair by replicating
+    # the table's optimizer moments (observed +0.5..3.5 GB/dev).
+    "table_embed": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "seq": None,
+    "seq_act": None,           # residual-stream seq dim (perf experiments)
+    "residual": None,          # residual-stream hidden dim (perf experiments)
+    "kv_seq": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "capacity": None,
+    "dconv": None,
+    "inner": "model",          # mamba/xlstm inner (expanded) dim
+    "head_out": None,
+    None: None,
+}
+
+_rules = dict(_DEFAULT_RULES)
+
+
+def set_rules(**overrides):
+    """Override logical->mesh mappings (perf experiments)."""
+    _rules.update(overrides)
+
+
+def reset_rules():
+    _rules.clear()
+    _rules.update(_DEFAULT_RULES)
+
+
+def _mesh() :
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def _resolve(ax: Optional[str], dim: Optional[int], axis_sizes: dict):
+    """Map one logical axis to mesh axes, honouring divisibility of ``dim``.
+
+    Returns None / str / tuple-of-str suitable for a PartitionSpec entry.
+    Mesh axes missing from the active mesh are dropped; if ``dim`` is given,
+    axes whose (product) size does not divide it are dropped greedily.
+    """
+    m = _rules.get(ax, None)
+    if m is None:
+        return None
+    cand = m if isinstance(m, tuple) else (m,)
+    kept = []
+    prod = 1
+    for a in cand:
+        sz = axis_sizes.get(a)
+        if sz is None:
+            continue
+        if dim is not None and dim % (prod * sz) != 0:
+            continue
+        kept.append(a)
+        prod *= sz
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def spec(*logical_axes: Optional[str], shape: Optional[Tuple[int, ...]] = None,
+         mesh=None) -> P:
+    """PartitionSpec for the given logical axes under the current (or given)
+    mesh, dropping unavailable mesh axes and non-divisible dims."""
+    m = mesh or _mesh()
+    sizes = {}
+    if m is not None:
+        types = getattr(m, "axis_types", None) or ()
+        for i, (name, size) in enumerate(zip(m.axis_names, m.axis_sizes)):
+            # inside shard_map an axis is Manual — constraints must not
+            # reference it (it is already fully mapped)
+            t = types[i] if i < len(types) else None
+            if t is not None and "Manual" in str(t):
+                continue
+            sizes[name] = size
+    out = []
+    used = set()
+    for i, ax in enumerate(logical_axes):
+        dim = shape[i] if shape is not None else None
+        r = _resolve(ax, dim, sizes)
+        # a mesh axis may appear at most once in a PartitionSpec: first wins
+        if isinstance(r, tuple):
+            r = tuple(a for a in r if a not in used)
+            r = r if len(r) > 1 else (r[0] if r else None)
+        if isinstance(r, str) and r in used:
+            r = None
+        for a in ((r,) if isinstance(r, str) else (r or ())):
+            if isinstance(a, str):
+                used.add(a)
+        out.append(r)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under an active mesh; identity otherwise."""
+    if _mesh() is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): {len(logical_axes)} axes for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(
+        x, spec(*logical_axes, shape=x.shape))
+
+
+def named_sharding(mesh, *logical_axes,
+                   shape: Optional[Tuple[int, ...]] = None
+                   ) -> jax.sharding.NamedSharding:
+    return jax.sharding.NamedSharding(
+        mesh, spec(*logical_axes, shape=shape, mesh=mesh))

@@ -1,0 +1,309 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+* mLSTM — matrix-memory LSTM with exponential gating.  Training/prefill uses
+  the *chunkwise-parallel stabilised* form (official repo's
+  ``parallel_stabilized`` generalised with an inter-chunk carry): an outer
+  ``lax.scan`` over chunks carries stabilised ``(C, n, m)`` states; within a
+  chunk the quadratic (Q x Q) masked-decay attention computes exact outputs.
+  Decode is the exact single-step recurrence.
+
+* sLSTM — scalar-memory LSTM with recurrent (per-head block-diagonal) hidden
+  connections; inherently sequential, implemented as ``lax.scan`` over time
+  (this is the architecture's stated trade-off, noted in DESIGN.md).
+
+Both are wrapped in xLSTM's pre-norm up-projection block:
+    x -> norm -> up(2*di) -> [core(x_half) * silu(gate_half)] -> down(d)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm.proj_factor * cfg.d_model)
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    h = cfg.num_heads
+    di = d_inner(cfg)
+    assert di % h == 0
+    return h, di // h
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    h, hd = _heads(cfg)
+    ks = jax.random.split(key, 8)
+
+    def _blockdiag(k):
+        # official xLSTM uses per-head block-diagonal q/k/v projections
+        return (jax.random.normal(k, (h, hd, hd), jnp.float32)
+                / math.sqrt(hd)).astype(dtype)
+
+    return {
+        "up": layers.init_dense(ks[0], d, 2 * di, dtype)["kernel"],
+        "wq": _blockdiag(ks[1]),
+        "wk": _blockdiag(ks[2]),
+        "wv": _blockdiag(ks[3]),
+        "w_i": layers.init_dense(ks[4], di, h, jnp.float32)["kernel"],
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": layers.init_dense(ks[5], di, h, jnp.float32)["kernel"],
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "out_norm": layers.init_norm(di, "rmsnorm"),
+        "down": layers.init_dense(ks[6], di, d, dtype)["kernel"],
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd, hd) fp32, stabilised by exp(-m)
+    n: jax.Array   # (B, H, hd)
+    m: jax.Array   # (B, H)
+
+    @staticmethod
+    def zeros(b: int, cfg: ModelConfig) -> "MLSTMState":
+        h, hd = _heads(cfg)
+        return MLSTMState(c=jnp.zeros((b, h, hd, hd), jnp.float32),
+                          n=jnp.zeros((b, h, hd), jnp.float32),
+                          m=jnp.full((b, h), -1e30, jnp.float32))
+
+
+def _qkv_gates(p, cfg, xin):
+    """xin: (B,S,di) -> q,k,v (B,S,H,hd); log_i, log_f (B,S,H) fp32.
+
+    q/k/v are per-head block-diagonal (official xLSTM)."""
+    b, s, di = xin.shape
+    h, hd = _heads(cfg)
+    dt = xin.dtype
+    xh = xin.reshape(b, s, h, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"].astype(dt))
+    xf = xin.astype(jnp.float32)
+    log_i = jnp.einsum("bsd,dh->bsh", xf, p["w_i"]) + p["b_i"]
+    f_raw = jnp.einsum("bsd,dh->bsh", xf, p["w_f"]) + p["b_f"]
+    log_f = -jax.nn.softplus(-f_raw)      # log sigmoid
+    q = q / math.sqrt(hd)
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_chunk(state: MLSTMState, q, k, v, log_i, log_f):
+    """Exact stabilised chunk step.
+
+    q,k,v: (B,Q,H,hd); log_i/log_f: (B,Q,H).  Returns (state', h (B,Q,H,hd)).
+    """
+    bsz, qlen, h, hd = q.shape
+    c_st, n_st, m_st = state
+    bq = jnp.cumsum(log_f, axis=1)                       # (B,Q,H) inclusive
+    # local stabiliser: m_loc[q] = b_q + cummax_j<=q (log_i_j - b_j)
+    a = log_i - bq
+    cmax = jax.lax.cummax(a, axis=1)
+    m_loc = bq + cmax
+    m_new = jnp.maximum(m_loc, m_st[:, None, :] + bq)    # (B,Q,H)
+
+    # intra-chunk decay matrix: logD[q,j] = b_q - b_j + log_i_j  (j <= q)
+    logd = (bq[:, :, None, :] - bq[:, None, :, :]
+            + log_i[:, None, :, :])                      # (B,Q,J,H)
+    mask = (jnp.arange(qlen)[:, None] >= jnp.arange(qlen)[None, :])
+    logd = jnp.where(mask[None, :, :, None], logd, -jnp.inf)
+    w = jnp.exp(logd - m_new[:, :, None, :])             # (B,Q,J,H)
+
+    qk = jnp.einsum("bqhd,bjhd->bqjh", q.astype(jnp.float32),
+                    k.astype(jnp.float32))               # (B,Q,J,H)
+    s_mat = qk * w
+    num_intra = jnp.einsum("bqjh,bjhd->bqhd", s_mat, v.astype(jnp.float32))
+    den_intra = jnp.sum(s_mat, axis=2)                   # (B,Q,H)
+
+    scale_inter = jnp.exp(m_st[:, None, :] + bq - m_new) # (B,Q,H)
+    num_inter = jnp.einsum("bqhd,bhde->bqhe", q.astype(jnp.float32), c_st)
+    num_inter = num_inter * scale_inter[..., None]
+    den_inter = jnp.einsum("bqhd,bhd->bqh",
+                           q.astype(jnp.float32), n_st) * scale_inter
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h_out = num / denom                                  # (B,Q,H,hd)
+
+    # carry update (decay everything to end-of-chunk, stabilise by m')
+    b_tot = bq[:, -1, :]                                 # (B,H)
+    m_next = jnp.maximum(m_st + b_tot, b_tot + cmax[:, -1, :])
+    kv_w = jnp.exp(b_tot[:, None, :] - bq + log_i
+                   - m_next[:, None, :])                 # (B,Q,H)
+    c_new = (c_st * jnp.exp(m_st + b_tot - m_next)[..., None, None]
+             + jnp.einsum("bqh,bqhd,bqhe->bhde", kv_w,
+                          k.astype(jnp.float32), v.astype(jnp.float32)))
+    n_new = (n_st * jnp.exp(m_st + b_tot - m_next)[..., None]
+             + jnp.einsum("bqh,bqhd->bhd", kv_w, k.astype(jnp.float32)))
+    return MLSTMState(c_new, n_new, m_next), h_out
+
+
+def mlstm_forward(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    di = d_inner(cfg)
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    up = shard(up, "batch", "seq", "inner")
+    xin, z = up[..., :di], up[..., di:]
+    q, k, v, log_i, log_f = _qkv_gates(p, cfg, xin)
+
+    qc = max(1, min(cfg.xlstm.chunk_size, s))
+    n_chunks = (s + qc - 1) // qc
+    pad = n_chunks * qc - s
+
+    def _p(t):   # pad seq axis then split chunks to leading axis
+        t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        return jnp.moveaxis(
+            t.reshape((b, n_chunks, qc) + t.shape[2:]), 1, 0)
+
+    def step(st, inp):
+        st2, h = _mlstm_chunk(st, *inp)
+        return st2, h
+
+    _, hs = jax.lax.scan(step, MLSTMState.zeros(b, cfg),
+                         tuple(_p(t) for t in (q, k, v, log_i, log_f)))
+    hcat = jnp.moveaxis(hs, 0, 1).reshape(b, n_chunks * qc, di)[:, :s]
+    hcat = layers.apply_norm(p["out_norm"], hcat.astype(dt), "rmsnorm")
+    y = hcat * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"].astype(dt))
+    return shard(out, "batch", "seq", None)
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jax.Array, state: MLSTMState
+                 ) -> Tuple[jax.Array, MLSTMState]:
+    """x: (B,1,D)."""
+    b = x.shape[0]
+    di = d_inner(cfg)
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    xin, z = up[..., :di], up[..., di:]
+    q, k, v, log_i, log_f = _qkv_gates(p, cfg, xin)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B,H,hd)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]              # (B,H)
+    c_st, n_st, m_st = state
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    fs = jnp.exp(log_f + m_st - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = fs[..., None, None] * c_st + is_[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = fs[..., None] * n_st + is_[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    hflat = h.reshape(b, 1, di).astype(dt)
+    hflat = layers.apply_norm(p["out_norm"], hflat, "rmsnorm")
+    y = hflat * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"].astype(dt))
+    return out, MLSTMState(c_new, n_new, m_new)
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    h, hd = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    def _r(k):   # per-head recurrent block-diagonal
+        return (jax.random.normal(k, (h, hd, hd), jnp.float32)
+                / math.sqrt(hd)).astype(jnp.float32)
+    return {
+        "up": layers.init_dense(ks[0], d, 2 * di, dtype)["kernel"],
+        "w_gates": layers.init_dense(ks[1], di, 4 * di, dtype)["kernel"],
+        "r_z": _r(ks[2]), "r_i": _r(ks[3]),
+        "r_f": _r(ks[4]), "r_o": _r(ks[5]),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((2 * di,)), jnp.full((di,), 3.0), jnp.zeros((di,))]
+        ).astype(jnp.float32),
+        "out_norm": layers.init_norm(di, "rmsnorm"),
+        "down": layers.init_dense(ks[6], di, d, dtype)["kernel"],
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array   # (B, H, hd)
+
+    @staticmethod
+    def zeros(b: int, cfg: ModelConfig) -> "SLSTMState":
+        hh, hd = _heads(cfg)
+        z = jnp.zeros((b, hh, hd), jnp.float32)
+        return SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)
+
+
+def _slstm_step(p, cfg, st: SLSTMState, wx: jax.Array
+                ) -> Tuple[SLSTMState, jax.Array]:
+    """wx: (B, 4*di) precomputed input contribution (fp32)."""
+    h, hd = _heads(cfg)
+    b = wx.shape[0]
+    di = h * hd
+    hprev = st.h                                          # (B,H,hd)
+    def _rec(r):  # (B,H,hd) x (H,hd,hd) -> (B,H,hd)
+        return jnp.einsum("bhd,hde->bhe", hprev, r)
+    wz, wi, wf, wo = [wx[:, i * di:(i + 1) * di].reshape(b, h, hd)
+                      for i in range(4)]
+    z = jnp.tanh(wz + _rec(p["r_z"]))
+    log_i = wi + _rec(p["r_i"])
+    log_f = -jax.nn.softplus(-(wf + _rec(p["r_f"])))      # log sigmoid
+    o = jax.nn.sigmoid(wo + _rec(p["r_o"]))
+    m_new = jnp.maximum(log_f + st.m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + st.m - m_new)
+    c = f_s * st.c + i_s * z
+    n = f_s * st.n + i_s
+    h_out = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h_out, m_new), h_out
+
+
+def slstm_forward(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    di = d_inner(cfg)
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    up = shard(up, "batch", "seq", "inner")
+    xin, zgate = up[..., :di], up[..., di:]
+    wx = (jnp.einsum("bse,ef->bsf", xin, p["w_gates"].astype(dt))
+          .astype(jnp.float32) + p["b_gates"])
+
+    def step(st, wx_t):
+        return _slstm_step(p, cfg, st, wx_t)
+
+    _, hs = jax.lax.scan(step, SLSTMState.zeros(b, cfg),
+                         jnp.moveaxis(wx, 1, 0))
+    hcat = jnp.moveaxis(hs, 0, 1).reshape(b, s, di).astype(dt)
+    hcat = layers.apply_norm(p["out_norm"], hcat, "rmsnorm")
+    y = hcat * jax.nn.silu(zgate)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"].astype(dt))
+    return shard(out, "batch", "seq", None)
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jax.Array, state: SLSTMState
+                 ) -> Tuple[jax.Array, SLSTMState]:
+    b = x.shape[0]
+    di = d_inner(cfg)
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(dt))
+    xin, zgate = up[..., :di], up[..., di:]
+    wx = (jnp.einsum("bse,ef->bsf", xin, p["w_gates"].astype(dt))
+          .astype(jnp.float32)[:, 0] + p["b_gates"])
+    st, h = _slstm_step(p, cfg, state, wx)
+    hcat = h.reshape(b, 1, di).astype(dt)
+    hcat = layers.apply_norm(p["out_norm"], hcat, "rmsnorm")
+    y = hcat * jax.nn.silu(zgate)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"].astype(dt))
+    return out, st

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, adamw, sgd)

@@ -1,0 +1,152 @@
+"""Pure-JAX optimizers (no optax dependency in this container).
+
+Functional API in the optax style:
+
+    opt = adamw(lr=1e-3, weight_decay=0.01)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+States are pytrees matching ``params`` so they shard identically (FSDP: the
+optimizer state inherits the parameter sharding — crucial for the 340B
+config's memory budget, see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Grads, Any, Optional[Params]], Tuple[Any, Any]]
+
+
+def apply_updates(params: Params, updates: Any) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# --------------------------------------------------------------- sgd -------
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            ups = _tmap(lambda g: -lr * g.astype(jnp.float32), grads)
+            return ups, {"step": state["step"] + 1}
+        mu = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                   state["mu"], grads)
+        ups = _tmap(lambda m: -lr * m, mu)
+        return ups, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- adam ------
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z,
+                "v": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def _u(m_, v_, p=None):
+            upd = -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if weight_decay and params is not None:
+            ups = _tmap(_u, m, v, params)
+        else:
+            ups = _tmap(_u, m, v)
+        return ups, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+# ------------------------------------------------------------ adafactor ----
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30
+              ) -> Optimizer:
+    """Factored second-moment optimizer (memory-lean — used by the 340B
+    config where full Adam moments exceed HBM; see EXPERIMENTS.md §Perf)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def _s(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree_util.tree_map(_s, params)}
+
+    def update(grads, state, params=None):
+        del params
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def _u(g, s):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None],
+                                       eps))
+                upd = -lr * gf / jnp.sqrt(jnp.maximum(denom, eps))
+                return upd, {"vr": vr, "vc": vc}
+            v = beta * s["v"] + (1 - beta) * g2
+            return -lr * gf / jnp.sqrt(jnp.maximum(v, eps)), {"v": v}
+
+        leaves_g, tdef = jax.tree_util.tree_flatten(grads)
+        leaves_s = tdef.flatten_up_to(state["v"])
+        outs = [_u(g, s) for g, s in zip(leaves_g, leaves_s)]
+        ups = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        vs = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return ups, {"step": step, "v": vs}
+
+    return Optimizer(init, update)

@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single device; only launch/dryrun.py forces
+# 512 placeholder devices (and only in its own process).
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,105 @@
+"""Sparse aggregation (Eq. (4)) + client updates (Eq. (5)/(6))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, selection
+from repro.core.convergence import estimate_epsilon
+
+
+def _clients(key, n, shape=(6, 10)):
+    ks = jax.random.split(key, n)
+    return [{"w": jax.random.normal(k, shape)} for k in ks]
+
+
+def test_full_masks_reduce_to_fedavg():
+    key = jax.random.PRNGKey(0)
+    ps = _clients(key, 4)
+    ones = [{"w": jnp.ones((1, 10))} for _ in ps]
+    wts = [1.0, 2.0, 3.0, 4.0]
+    got = aggregation.aggregate_sparse(ps, ones, wts)
+    want = aggregation.fedavg_aggregate(ps, wts)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=1e-5)
+
+
+def test_uncovered_positions_keep_prev_global():
+    key = jax.random.PRNGKey(1)
+    ps = _clients(key, 2)
+    # both clients drop channel 0
+    m = jnp.ones((1, 10)).at[0, 0].set(0.0)
+    masks = [{"w": m}, {"w": m}]
+    prev = {"w": jnp.full((6, 10), 7.0)}
+    got = aggregation.aggregate_sparse(ps, masks, [1.0, 1.0],
+                                       prev_global=prev)
+    np.testing.assert_allclose(np.asarray(got["w"][:, 0]), 7.0)
+    assert not np.allclose(np.asarray(got["w"][:, 1]), 7.0)
+
+
+def test_eq4_weighted_elementwise_division():
+    p1 = {"w": jnp.ones((2, 2))}
+    p2 = {"w": 3.0 * jnp.ones((2, 2))}
+    m1 = {"w": jnp.asarray([[1.0, 0.0]])}     # client 1 uploads ch 0 only
+    m2 = {"w": jnp.asarray([[1.0, 1.0]])}
+    got = aggregation.aggregate_sparse([p1, p2], [m1, m2], [1.0, 1.0])
+    # ch0: (1+3)/2 = 2 ; ch1: 3/1 = 3
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               [[2.0, 3.0], [2.0, 3.0]])
+
+
+def test_client_update_sparse_eq5():
+    g = {"w": jnp.full((2, 4), 10.0)}
+    l = {"w": jnp.full((2, 4), 1.0)}
+    m = {"w": jnp.asarray([[1.0, 0.0, 1.0, 0.0]])}
+    got = aggregation.client_update_sparse(g, l, m)
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               [[10, 1, 10, 1], [10, 1, 10, 1]])
+
+
+def test_client_update_full_eq6():
+    g = {"w": jnp.ones((2, 2))}
+    l = {"w": jnp.zeros((2, 2))}
+    got = aggregation.client_update_full(g, l)
+    np.testing.assert_allclose(np.asarray(got["w"]), 1.0)
+
+
+def test_epsilon_zero_for_full_masks():
+    key = jax.random.PRNGKey(3)
+    ps = _clients(key, 3)
+    ones = [{"w": jnp.ones((1, 10))} for _ in ps]
+    eps = float(estimate_epsilon(ps, ones))
+    assert eps < 1e-10
+
+
+def test_epsilon_grows_with_dropout():
+    key = jax.random.PRNGKey(4)
+    ps = _clients(key, 5, shape=(20, 40))
+    old = {"w": jnp.zeros((20, 40))}
+    eps_at = {}
+    for rate in (0.2, 0.8):
+        masks = [selection.build_masks(old, p, jnp.asarray(rate),
+                                       config=selection.SelectionConfig(
+                                           scheme="random"),
+                                       rng=jax.random.fold_in(key, i))
+                 for i, p in enumerate(ps)]
+        eps_at[rate] = float(estimate_epsilon(ps, masks))
+    assert eps_at[0.8] > eps_at[0.2]
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 6), c=st.integers(2, 12), seed=st.integers(0, 99))
+def test_property_kernel_path_matches_jnp_path(n, c, seed):
+    key = jax.random.PRNGKey(seed)
+    ps = _clients(key, n, shape=(64, c))
+    masks = [{"w": (jax.random.uniform(jax.random.fold_in(key, 50 + i),
+                                       (1, c)) > 0.4).astype(jnp.float32)}
+             for i in range(n)]
+    wts = list(np.random.default_rng(seed).uniform(0.5, 2.0, n))
+    a = aggregation.aggregate_sparse(ps, masks, wts, use_kernel=False)
+    b = aggregation.aggregate_sparse(ps, masks, wts, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=2e-5, atol=1e-6)

@@ -1,0 +1,128 @@
+"""Dropout-rate allocation LP (paper §4.1): exactness + invariants."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (ClientTelemetry, regularizer,
+                                   solve_dropout_rates,
+                                   solve_dropout_rates_jax)
+
+
+def _tel(rng, n):
+    return ClientTelemetry(
+        model_bytes=rng.uniform(1e5, 5e6, n),
+        uplink_rate=rng.uniform(1e3, 1e4, n),
+        downlink_rate=rng.uniform(5e3, 3e4, n),
+        compute_latency=rng.uniform(0.1, 10.0, n),
+        num_samples=rng.integers(10, 1000, n).astype(float),
+        label_coverage=rng.uniform(1.0, 10.0, n),
+        train_loss=rng.uniform(0.1, 3.0, n),
+    )
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("a_server", [0.2, 0.5, 0.8])
+def test_budget_constraint_met_exactly(seed, a_server):
+    rng = np.random.default_rng(seed)
+    tel = _tel(rng, 30)
+    res = solve_dropout_rates(tel, a_server=a_server, d_max=0.9, delta=1.0)
+    assert res.feasible
+    uploaded = np.sum(tel.model_bytes * (1 - res.dropout_rates))
+    np.testing.assert_allclose(uploaded, a_server * np.sum(tel.model_bytes),
+                               rtol=1e-5)
+    assert np.all(res.dropout_rates >= -1e-9)
+    assert np.all(res.dropout_rates <= 0.9 + 1e-9)
+
+
+def test_infeasible_when_dmax_too_small():
+    # A_server=0.1 requires dropping 90% of mass but D_max=0.2 allows 20%.
+    rng = np.random.default_rng(0)
+    tel = _tel(rng, 10)
+    res = solve_dropout_rates(tel, a_server=0.1, d_max=0.2, delta=1.0)
+    assert not res.feasible
+
+
+def test_slow_clients_get_higher_dropout():
+    """System heterogeneity: with delta=0 (pure makespan objective), the
+    slowest client must not upload more than the LP's straggler bound."""
+    n = 8
+    up = np.full(n, 1e3)
+    up[0] = 20.0            # client 0: terrible uplink
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, 1e5), uplink_rate=up,
+        downlink_rate=np.full(n, 1e4),
+        compute_latency=np.full(n, 1.0),
+        num_samples=np.full(n, 100.0),
+        label_coverage=np.full(n, 10.0),
+        train_loss=np.full(n, 1.0))
+    res = solve_dropout_rates(tel, a_server=0.6, d_max=0.9, delta=0.0)
+    assert res.feasible
+    assert res.dropout_rates[0] == max(res.dropout_rates)
+    assert res.dropout_rates[0] > 0.85    # near D_max for the straggler
+
+
+def test_valuable_clients_get_lower_dropout():
+    """Data heterogeneity: all else equal, higher re_n -> lower D_n."""
+    n = 6
+    cov = np.full(n, 5.0)
+    cov[2] = 10.0           # client 2 has the best label coverage
+    cov[3] = 1.0
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, 1e5), uplink_rate=np.full(n, 1e3),
+        downlink_rate=np.full(n, 1e4),
+        compute_latency=np.full(n, 1.0),
+        num_samples=np.full(n, 100.0),
+        label_coverage=cov,
+        train_loss=np.full(n, 1.0))
+    res = solve_dropout_rates(tel, a_server=0.6, d_max=0.9, delta=100.0)
+    assert res.dropout_rates[2] <= res.dropout_rates[3] + 1e-9
+
+
+def test_jax_matches_numpy():
+    rng = np.random.default_rng(7)
+    tel = _tel(rng, 25)
+    res = solve_dropout_rates(tel, a_server=0.55, d_max=0.8, delta=2.0)
+    dj, tj = solve_dropout_rates_jax(
+        jnp.asarray(tel.model_bytes), jnp.asarray(tel.uplink_rate),
+        jnp.asarray(tel.downlink_rate), jnp.asarray(tel.compute_latency),
+        jnp.asarray(tel.num_samples), jnp.asarray(tel.label_coverage),
+        jnp.asarray(tel.train_loss),
+        a_server=0.55, d_max=0.8, delta=2.0)
+    np.testing.assert_allclose(np.asarray(dj), res.dropout_rates, atol=2e-3)
+    np.testing.assert_allclose(float(tj), res.t_server, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 40), seed=st.integers(0, 10_000),
+       a_server=st.floats(0.3, 0.9), delta=st.floats(0.0, 10.0))
+def test_property_feasibility_and_optimality_vs_uniform(n, seed, a_server,
+                                                        delta):
+    """The LP optimum never exceeds the objective of the uniform-dropout
+    feasible point (when that point is feasible)."""
+    rng = np.random.default_rng(seed)
+    tel = _tel(rng, n)
+    d_max = 0.95
+    res = solve_dropout_rates(tel, a_server=a_server, d_max=d_max,
+                              delta=delta)
+    d_uni = 1.0 - a_server
+    if d_uni <= d_max:
+        assert res.feasible
+        re = regularizer(tel, float(np.max(tel.model_bytes)))
+        k = tel.model_bytes * (1 / tel.uplink_rate + 1 / tel.downlink_rate)
+        obj_uni = (np.max(tel.compute_latency + k * (1 - d_uni))
+                   + delta * np.sum(re * d_uni))
+        assert res.objective <= obj_uni + 1e-4 * max(1.0, abs(obj_uni))
+
+
+def test_regularizer_formula():
+    rng = np.random.default_rng(1)
+    tel = _tel(rng, 4)
+    re = regularizer(tel, 1e6)
+    m = tel.num_samples.sum()
+    want = (tel.num_samples / m) * tel.label_coverage \
+        * (tel.model_bytes / 1e6) * tel.train_loss
+    np.testing.assert_allclose(re, want)

@@ -1,0 +1,47 @@
+"""Theorem 2 bound: feasibility condition + monotonicity claims (§5)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.convergence import (BoundInputs, eta_max, residual_error,
+                                    theorem2_bound)
+
+BASE = BoundInputs(L=4.0, eta=0.01, eps=0.1, sigma_sq_mean=1.0,
+                   f0_minus_fstar=10.0, h=5, T=1000)
+
+
+def test_bound_finite_for_small_eta():
+    assert theorem2_bound(BASE) < float("inf")
+
+
+def test_bound_infinite_beyond_eta_max():
+    bad = dataclasses.replace(BASE, eta=eta_max(BASE.L, BASE.eps) * 1.01)
+    assert theorem2_bound(bad) == float("inf")
+
+
+def test_residual_monotone_in_h():
+    """Paper §5: residual error is monotone increasing in h."""
+    vals = [residual_error(dataclasses.replace(BASE, h=h))
+            for h in (1, 2, 5, 10, 50)]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_residual_monotone_in_eps():
+    vals = [residual_error(dataclasses.replace(BASE, eps=e))
+            for e in (0.0, 0.05, 0.1, 0.2)]
+    assert vals[0] == pytest.approx(0.0, abs=1e-12)
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_bound_vanishes_with_T_when_eps_zero():
+    """eps=0 (full upload) -> FedAvg O(1/T) rate (paper §5)."""
+    b0 = dataclasses.replace(BASE, eps=0.0, T=100)
+    b1 = dataclasses.replace(BASE, eps=0.0, T=100_000)
+    assert theorem2_bound(b1) < theorem2_bound(b0)
+    assert theorem2_bound(b1) == pytest.approx(
+        theorem2_bound(b0) * 100 / 100_000, rel=1e-6)
+
+
+def test_eta_max_decreases_with_eps():
+    assert eta_max(4.0, 0.5) < eta_max(4.0, 0.1) < eta_max(4.0, 0.0)

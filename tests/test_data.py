@@ -1,0 +1,119 @@
+"""Data pipeline + partitioners (paper §6.1 settings)."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (label_coverage_score, label_distribution,
+                        make_dataset, partition_class_imbalanced,
+                        partition_dirichlet, partition_iid,
+                        partition_noniid_a, partition_noniid_b)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    train, _ = make_dataset("mnist", num_train=5000, num_test=100, seed=0)
+    return train
+
+
+def _assert_partition(parts, n_total):
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(np.unique(all_idx))     # disjoint
+    assert len(all_idx) <= n_total
+
+
+def test_iid_uniform_classes(ds):
+    parts = partition_iid(ds, 10, seed=0)
+    _assert_partition(parts, len(ds))
+    assert sum(map(len, parts)) == len(ds)
+    for p in parts:
+        dist = label_distribution(ds, p)
+        assert dist.max() < 0.2          # roughly uniform over 10 classes
+
+
+def test_noniid_b_three_classes(ds):
+    parts = partition_noniid_b(ds, 10, seed=0)
+    _assert_partition(parts, len(ds))
+    for p in parts:
+        assert (label_distribution(ds, p) > 0).sum() <= 3
+
+
+def test_noniid_a_class_counts(ds):
+    parts = partition_noniid_a(ds, 10, seed=0)
+    for p in parts:
+        k = (label_distribution(ds, p) > 0).sum()
+        assert 1 <= k <= 10
+
+
+def test_coverage_score_range(ds):
+    parts = partition_noniid_b(ds, 10, seed=0)
+    for p in parts:
+        s = label_coverage_score(ds, p)
+        assert 0.0 < s <= 10.0
+        assert s <= 3.0 + 1e-9           # 3 classes max under Non-IID-b
+
+
+def test_class_imbalanced_rare_classes(ds):
+    parts = partition_class_imbalanced(ds, 10, rare_classes=(0, 1, 2),
+                                       rare_ratio=0.4, seed=0)
+    all_idx = np.concatenate(parts)
+    counts = np.bincount(ds.y[all_idx], minlength=10)
+    common = counts[3:].mean()
+    for c in (0, 1, 2):
+        assert counts[c] < 0.6 * common
+
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.05, 5.0), seed=st.integers(0, 100))
+def test_dirichlet_partition_valid(ds, alpha, seed):
+    parts = partition_dirichlet(ds, 8, alpha=alpha, seed=seed)
+    _assert_partition(parts, len(ds))
+    assert sum(map(len, parts)) == len(ds)
+
+
+def test_dataset_learnable_structure():
+    """Classes must be separable (synthetic data sanity)."""
+    train, test = make_dataset("mnist", num_train=2000, num_test=500, seed=0)
+    # nearest-class-mean classifier should beat chance comfortably
+    xf = train.x.reshape(len(train), -1)
+    means = np.stack([xf[train.y == c].mean(0) for c in range(10)])
+    xt = test.x.reshape(len(test), -1)
+    pred = np.argmin(((xt[:, None] - means[None]) ** 2).sum(-1), axis=1)
+    assert (pred == test.y).mean() > 0.5
+
+
+def test_lm_dataset():
+    from repro.data import make_lm_dataset
+    toks = make_lm_dataset(vocab_size=128, num_tokens=1000, seed=0)
+    assert toks.shape == (1000,)
+    assert toks.min() >= 0 and toks.max() < 128
+
+
+def test_batch_iterator_deterministic_and_complete():
+    from repro.data.pipeline import BatchIterator
+    import numpy as np
+    x = np.arange(100).reshape(100, 1).astype(np.float32)
+    y = np.arange(100).astype(np.int32)
+    it = BatchIterator(x, y, batch_size=16, seed=3)
+    assert it.steps_per_epoch() == 6
+    b1 = list(it.epoch(0))
+    b2 = list(it.epoch(0))
+    assert len(b1) == 6
+    for (xa, ya), (xb, yb) in zip(b1, b2):
+        np.testing.assert_array_equal(xa, xb)   # deterministic per epoch
+    b3 = list(it.epoch(1))
+    assert not all(np.array_equal(a[1], b[1]) for a, b in zip(b1, b3))
+    seen = np.concatenate([b[1] for b in b1])
+    assert len(np.unique(seen)) == 96           # no repeats within epoch
+
+
+def test_packed_lm_batcher():
+    from repro.data.pipeline import PackedLMBatcher
+    import numpy as np
+    toks = np.arange(1000, dtype=np.int32)
+    b = PackedLMBatcher(toks, seq_len=32, batch_size=4, seed=0)
+    out = b.batch(0)
+    assert out["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b.batch(5)["tokens"],
+                                  b.batch(5)["tokens"])

@@ -1,0 +1,124 @@
+"""Launch-layer units: shape policies, HLO collective parser, analytic
+cost model, and the dry-run skip table."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as specs_mod
+from repro.launch.analytic_cost import (analytic_bytes, analytic_flops,
+                                        total_params)
+from repro.launch.hlo_analysis import (Hardware, Roofline, _shape_bytes,
+                                       collective_bytes_per_device)
+
+HLO_SAMPLE = """
+HloModule test
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+ENTRY %main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ar = bf16[16,128]{1,0} all-reduce(%p0), to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%ar), dimensions={0}
+  %a2a = bf16[16,128]{1,0} all-to-all(%ar), dimensions={0}
+  %cp = bf16[16,128]{1,0} collective-permute(%ar)
+  ROOT %t = tuple(%ag, %a2a, %cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[8]") == 32
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 4 * 4 * 2 + 8
+
+
+def test_collective_parser_counts_operands():
+    out = collective_bytes_per_device(HLO_SAMPLE)
+    sz = 16 * 128 * 2
+    assert out["all-reduce"] == sz
+    assert out["all-gather"] == sz          # operand, not gathered result
+    assert out["all-to-all"] == sz
+    assert out["collective-permute"] == sz
+    assert out["reduce-scatter"] == 0
+
+
+def test_roofline_terms_and_dominant():
+    rl = Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                  collective_per_device={"all-reduce": int(50e9)},
+                  num_devices=256)
+    assert rl.compute_term == pytest.approx(1.0)
+    assert rl.memory_term == pytest.approx(1.0)
+    assert rl.collective_term == pytest.approx(1.0)
+    rl2 = Roofline(flops_per_device=1, bytes_per_device=819e9,
+                   collective_per_device={}, num_devices=1)
+    assert rl2.dominant == "memory"
+
+
+@pytest.mark.parametrize("arch,expect_b", [
+    ("nemotron_4_340b", 340e9), ("granite_3_8b", 8e9),
+    ("qwen3_moe_30b_a3b", 30e9), ("jamba_1p5_large_398b", 398e9),
+    # assignment's 48L xlstm is ~1.5x the official 24-block 1.3B card
+    ("xlstm_1p3b", 1.9e9), ("gemma3_27b", 27e9),
+    ("pixtral_12b", 12e9), ("chatglm3_6b", 6e9),
+    ("granite_moe_1b_a400m", 1.3e9), ("whisper_medium", 0.7e9),
+])
+def test_total_params_match_model_names(arch, expect_b):
+    """Config param counts land within ~35% of the models' nameplates —
+    catches layout/config regressions."""
+    n = total_params(get_config(arch))
+    assert 0.65 * expect_b < n < 1.45 * expect_b, f"{arch}: {n / 1e9:.2f}B"
+
+
+def test_analytic_flops_monotone_in_tokens():
+    cfg = get_config("granite_3_8b")
+    f1 = analytic_flops(cfg, 4096, 8, "train")
+    f2 = analytic_flops(cfg, 4096, 16, "train")
+    assert f2 > 1.9 * f1
+
+
+def test_analytic_decode_is_param_bound():
+    cfg = get_config("granite_3_8b")
+    by = analytic_bytes(cfg, 32768, 1, "decode")
+    assert by > 2.0 * total_params(cfg)     # params read + cache
+
+
+def test_should_run_skip_table():
+    skips = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ok, reason = specs_mod.should_run(cfg, "long_500k")
+        if not ok:
+            skips.append(cfg.name)
+            assert "quadratic" in reason
+    assert sorted(skips) == sorted([
+        "pixtral-12b", "chatglm3-6b", "qwen3-moe-30b-a3b", "granite-3-8b",
+        "whisper-medium", "nemotron-4-340b", "granite-moe-1b-a400m"])
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert specs_mod.should_run(get_config(arch), shape)[0]
+
+
+def test_input_specs_shapes():
+    cfg = get_config("pixtral_12b")
+    sp = specs_mod.input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096 - cfg.num_patch_tokens)
+    assert sp["patch_embeds"].shape == (256, cfg.num_patch_tokens,
+                                        cfg.d_model)
+    cfg = get_config("whisper_medium")
+    sp = specs_mod.input_specs(cfg, "prefill_32k")
+    assert sp["enc_frames"].shape == (32, 32768, cfg.d_model)
+    assert sp["tokens"].shape[1] <= 512
+
+
+def test_decode_specs_long500k_windows_global_layers():
+    cfg = get_config("gemma3_27b")
+    state, tok = specs_mod.decode_specs(cfg, "long_500k")
+    # every KV cache leaf must be capped at the windowed sizes
+    import jax
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state.stack)[0]:
+        if leaf.ndim >= 4:   # KV cache (L?, B, C, H, hd)
+            cache_len = leaf.shape[-3]
+            assert cache_len <= specs_mod.LONG_GLOBAL_WINDOW
+    assert tok.shape == (1, 1)

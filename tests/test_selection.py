@@ -1,0 +1,109 @@
+"""Uploaded-parameter selection (Algorithm 2): masks + variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection
+from repro.core.importance import (channel_importance,
+                                   elementwise_importance)
+
+
+def _params(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "l1": {"w": scale * jax.random.normal(k1, (12, 32)),
+               "b": jnp.zeros(32)},
+        "l2": {"w": scale * jax.random.normal(k2, (32, 16))},
+        "out": {"w": scale * jax.random.normal(k3, (16, 8))},
+    }
+
+
+@pytest.mark.parametrize("scheme", selection.SCHEMES)
+@pytest.mark.parametrize("rate", [0.0, 0.25, 0.5, 0.9])
+def test_mask_density_matches_rate(scheme, rate):
+    key = jax.random.PRNGKey(0)
+    p_old = _params(key)
+    p_new = jax.tree_util.tree_map(
+        lambda x: x + 0.1 * jax.random.normal(key, x.shape), p_old)
+    m = selection.build_masks(p_old, p_new, jnp.asarray(rate),
+                              config=selection.SelectionConfig(scheme=scheme),
+                              rng=jax.random.PRNGKey(1))
+    for (path, leaf), (_, mask) in zip(
+            jax.tree_util.tree_flatten_with_path(p_new)[0],
+            jax.tree_util.tree_flatten_with_path(m)[0]):
+        nch = leaf.shape[-1]
+        keep = int(np.ceil(nch * (1 - rate)))
+        assert int(mask.sum()) == keep, jax.tree_util.keystr(path)
+        assert set(np.unique(np.asarray(mask))) <= {0.0, 1.0}
+
+
+def test_feddd_selects_highest_importance_channels():
+    key = jax.random.PRNGKey(0)
+    w_old = jax.random.normal(key, (6, 10))
+    # channel 3 gets a huge update -> must be kept at any rate < 1
+    w_new = w_old.at[:, 3].add(100.0)
+    scores = channel_importance(w_old, w_new, channel_axis=-1)
+    assert int(jnp.argmax(scores)) == 3
+    m = selection.build_masks({"w": w_old}, {"w": w_new}, jnp.asarray(0.8))
+    assert float(m["w"][0, 3]) == 1.0
+
+
+def test_zero_rate_keeps_everything():
+    key = jax.random.PRNGKey(0)
+    p = _params(key)
+    m = selection.build_masks(p, p, jnp.asarray(0.0))
+    assert float(selection.mask_density(p, m)) == 1.0
+
+
+def test_elementwise_importance_eps_guard():
+    w_old = jnp.zeros((4, 4))
+    w_new = jnp.ones((4, 4))
+    imp = elementwise_importance(w_old, w_new)
+    assert bool(jnp.all(jnp.isfinite(imp)))
+
+
+def test_coverage_rectification_prefers_rare_channels():
+    """Eq. (21): lower CR(k) boosts the index."""
+    key = jax.random.PRNGKey(2)
+    w_old = jax.random.normal(key, (8, 6))
+    w_new = w_old * 1.1
+    cov = jnp.ones(6).at[2].set(0.1)      # channel 2 is rarely covered
+    base = channel_importance(w_old, w_new, channel_axis=-1)
+    rect = channel_importance(w_old, w_new, channel_axis=-1, coverage=cov)
+    ratio = rect / base
+    assert float(ratio[2]) == pytest.approx(10.0, rel=1e-4)
+
+
+def test_always_upload_predicate():
+    key = jax.random.PRNGKey(0)
+    p = _params(key)
+    m = selection.build_masks(
+        p, p, jnp.asarray(0.9),
+        always_upload=lambda name: "out" in name)
+    assert float(m["out"]["w"].min()) == 1.0
+    assert float(m["l1"]["w"].sum()) < m["l1"]["w"].size
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(2, 64), f=st.integers(1, 32),
+       rate=st.floats(0.0, 0.99), seed=st.integers(0, 1000))
+def test_property_mask_exact_topk(c, f, rate, seed):
+    key = jax.random.PRNGKey(seed)
+    w_old = jax.random.normal(key, (f, c))
+    w_new = w_old + 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                            (f, c))
+    m = selection.build_masks({"w": w_old}, {"w": w_new}, jnp.asarray(rate))
+    keep = int(np.ceil(c * (1 - rate)))
+    scores = channel_importance(w_old, w_new, channel_axis=-1)
+    kept_idx = set(np.where(np.asarray(m["w"][0]) > 0)[0].tolist())
+    top_idx = set(np.argsort(-np.asarray(scores))[:keep].tolist())
+    # identical up to score ties
+    s = np.asarray(scores)
+    if len(np.unique(s)) == c:
+        assert kept_idx == top_idx
+    else:
+        assert len(kept_idx) == keep

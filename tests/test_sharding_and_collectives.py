@@ -1,0 +1,204 @@
+"""Sharding-rule resolution + sparse collectives under shard_map.
+
+Multi-device cases run in a subprocess with
+``--xla_force_host_platform_device_count`` so the main pytest process keeps
+a single device (conftest policy)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run_sub(code: str, devices: int = 4) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+           "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+def test_spec_divisibility_dropping():
+    """Non-divisible dims must drop to replication, never error."""
+    code = """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import spec
+    mesh = jax.make_mesh((2,2), ("data","model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    with jax.sharding.set_mesh(mesh):
+        # kv_heads=3 not divisible by model=2 -> None
+        s = spec("batch","kv_seq","kv_heads",None, shape=(4,16,3,8))
+        assert s[2] is None, s
+        # vocab 10 divisible by 2 -> model
+        s2 = spec("vocab","embed", shape=(10,8))
+        assert s2[0] == "model", s2
+        # batch=1 -> dropped
+        s3 = spec("batch",None, shape=(1,8))
+        assert s3[0] is None, s3
+        print("OK")
+    """
+    assert "OK" in _run_sub(code)
+
+
+def test_spec_mesh_axis_dedup():
+    code = """
+    import jax
+    from repro.models.sharding import spec, set_rules, reset_rules
+    mesh = jax.make_mesh((2,2), ("data","model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    with jax.sharding.set_mesh(mesh):
+        set_rules(kv_seq="model")
+        s = spec("batch","kv_seq","kv_heads",None, shape=(4,16,2,8))
+        flat = [a for a in s if a is not None]
+        # "model" must appear at most once
+        assert flat.count("model") <= 1, s
+        reset_rules()
+        print("OK")
+    """
+    assert "OK" in _run_sub(code)
+
+
+def test_sparse_allgather_mean_matches_dense_when_full():
+    """k = full channels -> sparse collective == dense weighted mean."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.sparse_collective import (sparse_allgather_mean,
+                                              dense_allreduce_mean)
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    C, F = 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, C, F))
+    sc = jax.random.uniform(jax.random.PRNGKey(1), (4, C))
+    def f(xl, sl):
+        return sparse_allgather_mean(xl[0], sl[0], k=C, axis_name="pod")[None]
+    y = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                      out_specs=P("pod"))(x, sc)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x.mean(0)),
+                               rtol=1e-5)
+    print("OK")
+    """
+    assert "OK" in _run_sub(code)
+
+
+def test_sparse_allgather_mean_partial_k():
+    """With k < C: selected channels average over their contributors;
+    channels nobody selected keep local values."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.sparse_collective import sparse_allgather_mean
+    P_, C, F, K = 4, 8, 4, 2
+    x = jnp.arange(P_*C*F, dtype=jnp.float32).reshape(P_, C, F)
+    # every pod ranks channel (pod_id) and (pod_id+1)%C highest
+    sc = jnp.zeros((P_, C))
+    for p in range(P_):
+        sc = sc.at[p, p].set(2.0).at[p, (p+1) % C].set(1.0)
+    mesh = jax.make_mesh((P_,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    def f(xl, sl):
+        return sparse_allgather_mean(xl[0], sl[0], k=K, axis_name="pod")[None]
+    y = np.asarray(jax.shard_map(
+        f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+        out_specs=P("pod"))(x, sc))
+    xn = np.asarray(x)
+    # channel 0 selected only by pod 0 -> equals pod0's row everywhere
+    for p in range(P_):
+        np.testing.assert_allclose(y[p, 0], xn[0, 0], rtol=1e-6)
+    # channel 1 selected by pods 0 and 1 -> mean of their rows
+    for p in range(P_):
+        np.testing.assert_allclose(y[p, 1], (xn[0,1]+xn[1,1])/2, rtol=1e-6)
+    # channels 6,7 selected by nobody (P_=4 pods cover 0..4) -> local kept
+    for p in range(P_):
+        np.testing.assert_allclose(y[p, 6], xn[p, 6], rtol=1e-6)
+        np.testing.assert_allclose(y[p, 7], xn[p, 7], rtol=1e-6)
+    print("OK")
+    """
+    assert "OK" in _run_sub(code)
+
+
+def test_make_production_mesh_shapes():
+    code = """
+    from repro.launch.mesh import make_production_mesh
+    m1 = make_production_mesh(multi_pod=False)
+    assert m1.devices.size == 256 and m1.axis_names == ("data","model")
+    m2 = make_production_mesh(multi_pod=True)
+    assert m2.devices.size == 512
+    assert m2.axis_names == ("pod","data","model")
+    print("OK")
+    """
+    assert "OK" in _run_sub(code, devices=512)
+
+
+def test_moe_ep_matches_gspmd_path():
+    """The explicit expert-parallel shard_map MoE must produce the same
+    outputs as the single-device blocked path (no capacity drops)."""
+    code = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import moe
+    from repro.models.config import MoEConfig
+
+    mcfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                     capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe.init_moe(key, 64, mcfg, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 64))
+
+    y_ref, aux_ref = moe._apply_moe_gspmd(p, x, mcfg, "swiglu")
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.sharding.set_mesh(mesh):
+        assert moe._ep_mesh_info(256, 4) is not None
+        y_ep, aux_ep = jax.jit(
+            lambda pp, xx: moe.apply_moe(pp, xx, mcfg, "swiglu"))(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(float(aux_ep), float(aux_ref), rtol=1e-5)
+    print("OK")
+    """
+    assert "OK" in _run_sub(code)
+
+
+def test_chunked_attention_used_at_long_seq():
+    """self_attention must route through the chunked path at >= 8192 and
+    produce finite outputs."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import attention as A
+
+    cfg = dataclasses.replace(get_config("granite_3_8b", reduced=True),
+                              param_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = A.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 24, cfg.d_model)) * 0.1
+    # force the chunked path by lowering the threshold
+    old = A.FLASH_MIN_SEQ
+    try:
+        A.FLASH_MIN_SEQ = 16
+        y_chunked = A.self_attention(p, cfg, x, mode="full")
+        A.FLASH_MIN_SEQ = 10_000
+        y_dense = A.self_attention(p, cfg, x, mode="full")
+    finally:
+        A.FLASH_MIN_SEQ = old
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_dense),
+                               rtol=3e-5, atol=3e-6)
