@@ -14,11 +14,12 @@ from benchmarks.common import csv_row
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)                      # compile/warm
+    jax.block_until_ready(fn(*args))   # compile/warm, fully retired
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        # block every iteration: async dispatch would otherwise overlap the
+        # timed region and hide nearly all device work.
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters
 
 
@@ -43,7 +44,9 @@ def run(full: bool = False, out_dir=None):
     rows.append(csv_row("kernel_sparse_agg", t, f"shape={n}x{c}x{f}"))
 
     m = (jax.random.uniform(key, (c,)) > 0.5).astype(jnp.float32)
-    t = _time(mm_ops.masked_merge, wo, wn, m)
+    # mask is per-channel; (c, f) tensors here are channel-major (axis 0)
+    t = _time(lambda a, b, mm: mm_ops.masked_merge(a, b, mm, channel_axis=0),
+              wo, wn, m)
     rows.append(csv_row("kernel_masked_merge", t, f"shape={c}x{f}"))
     return rows
 

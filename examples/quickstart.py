@@ -1,10 +1,15 @@
 """Quickstart: FedDD federated training on a synthetic MNIST-like task.
 
-    PYTHONPATH=src python examples/quickstart.py [--rounds 10]
+    PYTHONPATH=src python examples/quickstart.py [--rounds 10] [--loop]
 
 Trains the paper's MLP across 10 heterogeneous clients with differential
 parameter dropout, then compares against FedAvg: same model, ~60% of the
 bytes, large simulated wall-clock win.
+
+Homogeneous FedDD runs go through the batched round engine
+(core/round_engine.py) by default — one jit-compiled device step per round.
+``--loop`` forces the per-client Python loop (bit-identical results, just
+slower); ``benchmarks/perf_federated.py`` measures the gap.
 """
 
 import argparse
@@ -28,6 +33,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--a-server", type=float, default=0.6)
+    ap.add_argument("--loop", action="store_true",
+                    help="force the per-client loop instead of the "
+                         "batched round engine")
     args = ap.parse_args()
 
     train, test = make_dataset("mnist", num_train=6000, num_test=1500)
@@ -40,12 +48,14 @@ def main():
     ltf = make_local_train_fn(MLP_SPEC, train, parts, flatten=True, lr=0.1)
     ef = make_eval_fn(MLP_SPEC, test, flatten=True)
 
-    print(f"== FedDD (A_server={args.a_server}) ==")
+    engine = "per-client loop" if args.loop else "batched round engine"
+    print(f"== FedDD (A_server={args.a_server}, {engine}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
-                       a_server=args.a_server, h=5)
+                       a_server=args.a_server, h=5, batched=not args.loop)
     for r in feddd.history:
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
-              f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}")
+              f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}  "
+              f"wall={r.wall_time:.2f}s")
 
     print("== FedAvg (full uploads) ==")
     fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds)

@@ -8,6 +8,7 @@ Modules
   coverage          CR(k) coverage rates for heterogeneous models
   baselines         FedAvg / FedCS / Oort client selection
   protocol          Algorithm-1 orchestration (server + clients)
+  round_engine      batched jit-compiled round step (homogeneous hot path)
   sparse_collective compacted cross-pod collectives (TPU adaptation)
   convergence       Theorem-2 bound evaluation + epsilon estimator
 """
@@ -15,15 +16,20 @@ Modules
 from repro.core.allocation import (AllocationResult, ClientTelemetry,
                                    regularizer, solve_dropout_rates,
                                    solve_dropout_rates_jax)
-from repro.core.aggregation import (aggregate_sparse, client_update_full,
+from repro.core.aggregation import (aggregate_sparse,
+                                    aggregate_sparse_stacked,
+                                    client_update_full,
                                     client_update_sparse, fedavg_aggregate)
 from repro.core.convergence import (BoundInputs, estimate_epsilon, eta_max,
                                     residual_error, theorem2_bound)
 from repro.core.importance import channel_importance, elementwise_importance
 from repro.core.protocol import (FedDDServer, ProtocolConfig, RoundRecord,
                                  RunResult, run_scheme)
+from repro.core.round_engine import (BatchedRoundEngine, RoundOutputs,
+                                     make_batched_train_fn, stack_pytrees,
+                                     unstack_pytree)
 from repro.core.selection import (SelectionConfig, apply_mask, build_masks,
-                                  mask_density)
+                                  build_masks_batched, mask_density)
 from repro.core.sparse_collective import (dense_allreduce_mean,
                                           make_federated_allreduce,
                                           sparse_allgather_mean)

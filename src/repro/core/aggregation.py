@@ -20,6 +20,61 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
+def _leaf_masked_mean(stack_w: jax.Array, stack_m: jax.Array, w: jax.Array,
+                      gprev, use_kernel: bool) -> jax.Array:
+    """Eq. (4) for one client-stacked leaf: (N, *leaf) -> (*leaf).
+
+    Shared by the list-of-pytrees path (:func:`aggregate_sparse`) and the
+    batched round engine (:func:`aggregate_sparse_stacked`) so the two are
+    bit-identical.
+    """
+    n = stack_w.shape[0]
+    if use_kernel and stack_w.ndim >= 2 and stack_w.size >= 1024:
+        from repro.kernels.sparse_agg import ops as agg_ops
+        num, den = agg_ops.masked_weighted_sum(stack_w, stack_m, w)
+    else:
+        wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
+        num = jnp.sum(stack_w.astype(jnp.float32) * stack_m * wts, axis=0)
+        den = jnp.sum(stack_m * wts, axis=0)
+    agg = num / jnp.maximum(den, _EPS)
+    if gprev is not None:
+        agg = jnp.where(den > _EPS, agg, gprev.astype(jnp.float32))
+    return agg.astype(stack_w.dtype)
+
+
+def aggregate_sparse_stacked(
+    stacked_params,
+    stacked_masks,
+    client_weights: Sequence[float] | jax.Array,
+    *,
+    prev_global: Optional[object] = None,
+    use_kernel: bool = False,
+):
+    """Eq. (4) over client-STACKED pytrees (leaves shaped (N, *leaf)).
+
+    The batched round engine's aggregation: no per-client list handling, no
+    jnp.stack — leaves arrive already stacked along the client axis, and the
+    whole reduction traces into the engine's single jitted round step.
+    ``stacked_masks`` leaves are channel-shaped (N, 1, ..., C, ..., 1) and
+    broadcast against the parameters.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_params)
+    mleaves = jax.tree_util.tree_leaves(stacked_masks)
+    treedef = jax.tree_util.tree_structure(stacked_params)
+    gleaves = (jax.tree_util.tree_leaves(prev_global)
+               if prev_global is not None else [None] * len(leaves))
+    n = leaves[0].shape[0]
+    w = jnp.asarray(client_weights, jnp.float32)
+    if w.shape[0] != n:
+        raise ValueError("weights count mismatch")
+    out = [
+        _leaf_masked_mean(sw, jnp.broadcast_to(sm, sw.shape), w, gprev,
+                          use_kernel)
+        for sw, sm, gprev in zip(leaves, mleaves, gleaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def aggregate_sparse(
     client_params: Sequence,
     client_masks: Sequence,
@@ -59,17 +114,7 @@ def aggregate_sparse(
         stack_m = jnp.stack([jnp.broadcast_to(mleaves[ci][li],
                                               leaves[ci][li].shape)
                              for ci in range(n)])
-        if use_kernel and stack_w.ndim >= 2 and stack_w.size >= 1024:
-            from repro.kernels.sparse_agg import ops as agg_ops
-            num, den = agg_ops.masked_weighted_sum(stack_w, stack_m, w)
-        else:
-            wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
-            num = jnp.sum(stack_w.astype(jnp.float32) * stack_m * wts, axis=0)
-            den = jnp.sum(stack_m * wts, axis=0)
-        agg = num / jnp.maximum(den, _EPS)
-        if gprev is not None:
-            agg = jnp.where(den > _EPS, agg, gprev.astype(jnp.float32))
-        out.append(agg.astype(leaves[0][li].dtype))
+        out.append(_leaf_masked_mean(stack_w, stack_m, w, gprev, use_kernel))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

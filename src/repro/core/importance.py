@@ -59,6 +59,48 @@ def channel_importance(w_old: jax.Array, w_new: jax.Array, *,
     return score
 
 
+# --- batched (client-stacked) variants -------------------------------------
+#
+# The batched round engine stacks client parameters along a leading axis and
+# scores every client's channels in one traced computation.  These mirror the
+# per-client functions exactly: the reduction runs over the same per-client
+# axes, so results are bit-identical to looping channel_importance over
+# clients (the round-engine parity tests assert this).
+
+def _leaf_axes(ndim: int, channel_axis: int):
+    """Reduction axes of a (N, *leaf) stacked tensor: everything except the
+    client axis (0) and the channel axis (shifted by the client axis)."""
+    ax = channel_axis % (ndim - 1) + 1
+    return ax, tuple(a for a in range(1, ndim) if a != ax)
+
+
+def channel_importance_batched(w_old: jax.Array, w_new: jax.Array, *,
+                               channel_axis: int = -1,
+                               coverage: Optional[jax.Array] = None,
+                               eps: float = _EPS) -> jax.Array:
+    """Eq. (20)/(21) over a leading client axis: (N, *leaf) -> (N, C) fp32."""
+    imp = elementwise_importance(w_old, w_new, eps)
+    _, axes = _leaf_axes(imp.ndim, channel_axis)
+    score = jnp.sqrt(jnp.sum(imp * imp, axis=axes))
+    if coverage is not None:
+        score = score / jnp.maximum(coverage, eps)
+    return score
+
+
+def channel_score_max_batched(w_old: jax.Array, w_new: jax.Array, *,
+                              channel_axis: int = -1) -> jax.Array:
+    del w_old
+    _, axes = _leaf_axes(w_new.ndim, channel_axis)
+    return jnp.sqrt(jnp.sum(w_new * w_new, axis=axes))
+
+
+def channel_score_delta_batched(w_old: jax.Array, w_new: jax.Array, *,
+                                channel_axis: int = -1) -> jax.Array:
+    dw = w_new - w_old
+    _, axes = _leaf_axes(dw.ndim, channel_axis)
+    return jnp.sqrt(jnp.sum(dw * dw, axis=axes))
+
+
 # --- ablation variants (paper §6.2 "FedDD w. X selection") -----------------
 
 def channel_score_max(w_old: jax.Array, w_new: jax.Array, *,

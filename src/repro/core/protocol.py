@@ -10,6 +10,23 @@ transformer federation (examples/federated_pods.py uses the shard_map
 collectives in core/sparse_collective.py instead, for on-device execution;
 this driver is the faithful parameter-server formulation).
 
+Two execution paths share the same maths (bit-identical, see
+tests/test_round_engine.py):
+
+* **batched** (default for homogeneous FedDD): client params are stacked
+  along a leading client axis and the whole server side of the round —
+  importance scoring, lax.top_k mask building, Eq. (4) aggregation,
+  Eq. (5)/(6) client updates — runs as ONE jit-compiled step
+  (core/round_engine.py).  Per-round device->host traffic is a single
+  small telemetry transfer (losses + upload densities).  Pass
+  ``batched_train_fn`` to :meth:`FedDDServer.run` to fuse local training
+  into the device step as well.  Benchmark:
+  ``PYTHONPATH=src python benchmarks/perf_federated.py`` (loop-vs-batched
+  A/B, rounds/sec).
+* **per-client loop** (heterogeneous ragged-width models, track_epsilon,
+  the non-FedDD baselines, or ``ProtocolConfig(batched=False)``): the
+  original Python loop over clients.
+
 Simulated wall-clock follows the paper's system model exactly
 (t = t_cmp + U(1-D)/r_u + U(1-D)/r_d; the round takes max over participating
 clients) — this is how the paper's own simulation computes time-to-accuracy.
@@ -26,7 +43,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, baselines, coverage as cov_mod, selection
+from repro.core import (aggregation, baselines, coverage as cov_mod,
+                        round_engine, selection)
 from repro.core.allocation import (AllocationResult, ClientTelemetry,
                                    solve_dropout_rates)
 from repro.core.convergence import estimate_epsilon
@@ -46,6 +64,9 @@ class ProtocolConfig:
     rounds: int = 50
     seed: int = 0
     track_epsilon: bool = False      # Assumption-3 estimator (costly)
+    batched: bool = True             # batched round engine for homogeneous
+                                     # feddd runs (falls back to the loop
+                                     # for hetero / track_epsilon / baselines)
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -141,21 +162,95 @@ class FedDDServer:
 
     # -- the full loop --------------------------------------------------------
 
+    def _use_engine(self, batched_train_fn) -> bool:
+        """Batched engine is valid only for homogeneous FedDD rounds;
+        track_epsilon needs the per-client mask pytrees of the loop path."""
+        ok = (self.cfg.scheme == "feddd" and self.cfg.batched
+              and not self.heterogeneous and not self.cfg.track_epsilon)
+        if batched_train_fn is not None and not ok:
+            raise ValueError(
+                "batched_train_fn requires a homogeneous feddd run with "
+                "batched=True and track_epsilon=False")
+        return ok
+
     def run(self,
-            local_train_fn: Callable[[Params, int, jax.Array],
-                                     "tuple[Params, float]"],
+            local_train_fn: Optional[Callable[[Params, int, jax.Array],
+                                              "tuple[Params, float]"]] = None,
             eval_fn: Optional[Callable[[Params], Dict]] = None,
-            rounds: Optional[int] = None) -> RunResult:
+            rounds: Optional[int] = None,
+            batched_train_fn: Optional[Callable] = None) -> RunResult:
+        """Run the protocol.
+
+        Args:
+          local_train_fn: per-client ``(params, client_idx, rng) ->
+            (params, loss)`` — required unless ``batched_train_fn`` given.
+          batched_train_fn: optional ``(stacked_params, rng) ->
+            (stacked_params, (N,) losses)`` operating on client-STACKED
+            pytrees; when provided (homogeneous feddd only) local training
+            fuses into the device-side round and client state stays stacked
+            across rounds.
+        """
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         n = self.tel.num_clients
+        if local_train_fn is None and batched_train_fn is None:
+            raise ValueError("need local_train_fn or batched_train_fn")
         losses = np.ones(n)
         sim_time = 0.0
         history: List[RoundRecord] = []
+        full_bytes = float(np.sum(self.tel.model_bytes))
+
+        use_engine = self._use_engine(batched_train_fn)
+        engine = (round_engine.BatchedRoundEngine(cfg.selection)
+                  if use_engine else None)
+        weights = np.asarray([cs.num_samples for cs in self.clients], float)
+        # Engine path: client state stays STACKED across rounds (lazy device
+        # slices feed the per-client python trainer; nothing re-stacks the
+        # old params) and syncs back into self.clients after the last round.
+        stacked = (round_engine.stack_pytrees(
+                       [cs.params for cs in self.clients])
+                   if use_engine else None)
 
         for t in range(1, rounds + 1):
             t0 = time.perf_counter()
             self.rng, rk = jax.random.split(self.rng)
+            eps_val = None
+
+            if use_engine:
+                # ---- batched path: one fused device step per round ------
+                if batched_train_fn is not None:
+                    stacked_new, loss_dev = batched_train_fn(stacked, rk)
+                else:
+                    per_client = round_engine.unstack_pytree(stacked, n)
+                    new_list: List[Params] = [None] * n
+                    loss_dev = [None] * n
+                    for i, p_i in enumerate(per_client):
+                        p, l = local_train_fn(p_i, i,
+                                              jax.random.fold_in(rk, i))
+                        new_list[i] = p
+                        loss_dev[i] = l
+                    stacked_new = round_engine.stack_pytrees(new_list)
+                out = engine.step(stacked, stacked_new,
+                                  self.global_params, self.dropout, weights,
+                                  rk, full_round=(t % cfg.h == 0))
+                self.global_params = out.global_params
+                stacked = out.client_params
+                # the ONE device->host transfer of the round
+                dens, loss_host = jax.device_get((out.densities, loss_dev))
+                losses = np.asarray(loss_host, float)
+                uploaded_bytes = float(
+                    np.dot(np.asarray(dens, float), self.tel.model_bytes))
+                alloc = self.allocate(np.maximum(losses, 1e-6))
+                self.dropout = alloc.dropout_rates
+                active = np.ones(n, bool)
+                sim_time, metrics = self._finish_round(active, sim_time,
+                                                       eval_fn)
+                history.append(self._record(t, t0, sim_time, losses,
+                                            uploaded_bytes, full_bytes,
+                                            active, eps_val, metrics))
+                continue
+
+            # ---- per-client loop path -----------------------------------
             part = self._participants(losses)
 
             # --- Step 1: local training (participants only for baselines;
@@ -170,7 +265,6 @@ class FedDDServer:
 
             # --- Steps 2-3: mask building + (simulated) upload
             uploaded_bytes = 0.0
-            full_bytes = float(np.sum(self.tel.model_bytes))
             client_masks: List[Params] = [None] * n
             if cfg.scheme == "feddd":
                 for i, cs in enumerate(self.clients):
@@ -198,12 +292,11 @@ class FedDDServer:
             agg_params = [self._pad_to_global(new_params[i], i) for i in idxs]
             agg_masks = [self._pad_mask_to_global(client_masks[i],
                                                   new_params[i]) for i in idxs]
-            weights = [self.clients[i].num_samples for i in idxs]
-            eps_val = None
+            agg_weights = [self.clients[i].num_samples for i in idxs]
             if cfg.track_epsilon:
                 eps_val = float(estimate_epsilon(agg_params, agg_masks))
             self.global_params = aggregation.aggregate_sparse(
-                agg_params, agg_masks, weights,
+                agg_params, agg_masks, agg_weights,
                 prev_global=self.global_params)
 
             # --- Step 5: dropout-rate allocation for round t+1
@@ -228,22 +321,40 @@ class FedDDServer:
                         g_local, new_params[i], client_masks[i])
 
             # --- simulated wall clock (paper Eq. (12))
-            d_for_time = (self.dropout if cfg.scheme == "feddd"
-                          else np.zeros(n))
-            t_all = baselines.round_times(self.tel, d_for_time)
             active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
-            sim_time += float(np.max(t_all[active]))
+            sim_time, metrics = self._finish_round(active, sim_time, eval_fn)
+            history.append(self._record(t, t0, sim_time, losses,
+                                        uploaded_bytes, full_bytes, active,
+                                        eps_val, metrics))
 
-            metrics = eval_fn(self.global_params) if eval_fn else None
-            history.append(RoundRecord(
-                round=t, sim_time=sim_time,
-                wall_time=time.perf_counter() - t0,
-                mean_loss=float(np.mean(losses)),
-                dropout_rates=self.dropout.copy(),
-                uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
-                participants=int(np.sum(active)),
-                epsilon=eps_val, metrics=metrics))
+        if use_engine:   # sync stacked client state back
+            for cs, p in zip(self.clients,
+                             round_engine.unstack_pytree(stacked, n)):
+                cs.params = p
         return RunResult(history, self.global_params)
+
+    def _record(self, t: int, t0: float, sim_time: float, losses: np.ndarray,
+                uploaded_bytes: float, full_bytes: float, active: np.ndarray,
+                eps_val: Optional[float], metrics: Optional[Dict]
+                ) -> RoundRecord:
+        return RoundRecord(
+            round=t, sim_time=sim_time,
+            wall_time=time.perf_counter() - t0,
+            mean_loss=float(np.mean(losses)),
+            dropout_rates=self.dropout.copy(),
+            uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
+            participants=int(np.sum(active)),
+            epsilon=eps_val, metrics=metrics)
+
+    def _finish_round(self, active: np.ndarray, sim_time: float, eval_fn
+                      ) -> "tuple[float, Optional[Dict]]":
+        """Simulated wall clock (paper Eq. (12)) + optional eval."""
+        d_for_time = (self.dropout if self.cfg.scheme == "feddd"
+                      else np.zeros(self.tel.num_clients))
+        t_all = baselines.round_times(self.tel, d_for_time)
+        sim_time += float(np.max(t_all[active]))
+        metrics = eval_fn(self.global_params) if eval_fn else None
+        return sim_time, metrics
 
     # -- heterogeneous-model plumbing  (HeteroFL-style width slicing) --------
 

@@ -1,0 +1,132 @@
+"""Batched FedDD round engine — the homogeneous hot path, fully on device.
+
+``FedDDServer.run`` executes Algorithm 1 as a Python loop over clients:
+per-client ``build_masks`` dispatches, per-leaf ``float(...)`` host syncs in
+``mask_density``, list-based padding and aggregation.  At simulation scale
+(hundreds of clients) dispatch overhead — not compute — dominates.
+
+This module stacks client parameter pytrees along a leading client axis and
+rewrites the round's server side as ONE ``jax.jit``-compiled step:
+
+    importance scoring   — client axis folded into the channel axis, one
+                           pass per leaf (Pallas kernel when use_kernel)
+    mask building        — full-width ``lax.top_k`` ranks + a dynamic
+                           ``rank < keep`` compare, vmapped over clients
+    masked aggregation   — Eq. (4) over the already-stacked leaves
+                           (Pallas sparse_agg kernel when use_kernel)
+    sparse client update — Eq. (5)/(6) broadcast over the client axis
+
+Per-round device->host traffic collapses to one transfer of a small
+telemetry struct (per-client upload densities, plus losses when local
+training is batched too) instead of O(clients x leaves) ``float()`` calls.
+
+Results are bit-identical to the per-client loop for a fixed seed
+(tests/test_round_engine.py asserts this), so ``protocol.py`` routes every
+homogeneous FedDD run through this engine and keeps the loop only for
+heterogeneous (ragged-width) client models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, selection
+
+
+class RoundOutputs(NamedTuple):
+    """Device-side results of one batched round step."""
+
+    client_params: object      # pytree, leaves (N, *leaf): W_n^{t+1}
+    global_params: object      # pytree: W^t
+    densities: jax.Array       # (N,) fraction of elements uploaded
+
+
+def stack_pytrees(trees: Sequence) -> object:
+    """[pytree] x N (identical structure/shapes) -> pytree of (N, *leaf)."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def unstack_pytree(stacked, n: int) -> List:
+    """Inverse of :func:`stack_pytrees` (lazy device slices, no host sync)."""
+    return [jax.tree_util.tree_map(lambda l: l[i], stacked)
+            for i in range(n)]
+
+
+# The whole server side of Algorithm 1 (steps 2-4 + 6-7) in one trace.
+# Module-level jit keyed on the (hashable, frozen) SelectionConfig so the
+# compile cache is shared across engine instances and server runs.
+@functools.partial(jax.jit, static_argnames=("sel_cfg", "full_round"))
+def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
+                weights, rng, *, sel_cfg: selection.SelectionConfig,
+                full_round: bool) -> RoundOutputs:
+    masks, density = selection.build_masks_batched(
+        stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
+    new_global = aggregation.aggregate_sparse_stacked(
+        stacked_new, masks, weights, prev_global=global_params,
+        use_kernel=sel_cfg.use_kernel)
+    if full_round:
+        # Eq. (6): every client adopts the fresh global model.
+        new_clients = jax.tree_util.tree_map(
+            lambda g, l: jnp.broadcast_to(g, l.shape).astype(l.dtype),
+            new_global, stacked_new)
+    else:
+        # Eq. (5): the un-stacked global broadcasts against the (N, ...)
+        # stacked leaves, so the per-client rule applies verbatim.
+        new_clients = aggregation.client_update_sparse(
+            new_global, stacked_new, masks)
+    return RoundOutputs(new_clients, new_global, density)
+
+
+@dataclasses.dataclass
+class BatchedRoundEngine:
+    """One-jit-call FedDD round over client-stacked parameters.
+
+    Args:
+      selection_cfg: mask-building config; ``selection_cfg.use_kernel``
+        routes BOTH the importance scoring and the Eq. (4) aggregation
+        through the Pallas kernels.
+    """
+
+    selection_cfg: selection.SelectionConfig = dataclasses.field(
+        default_factory=selection.SelectionConfig)
+
+    def step(self, stacked_old, stacked_new, global_params,
+             dropout_rates, weights, rng, *, full_round: bool
+             ) -> RoundOutputs:
+        """Run one round's server side.
+
+        Args:
+          stacked_old / stacked_new: client params before/after local
+            training, leaves (N, *leaf).
+          global_params: current global pytree (un-stacked).
+          dropout_rates: (N,) float32 D_n^t.
+          weights: (N,) aggregation weights m_n (sample counts).
+          rng: the ROUND key (same key the per-client loop splits from).
+          full_round: t mod h == 0 — dense broadcast round (static: the two
+            variants compile once each).
+        """
+        return _round_step(
+            stacked_old, stacked_new, global_params,
+            jnp.asarray(dropout_rates, jnp.float32),
+            jnp.asarray(weights, jnp.float32), rng,
+            sel_cfg=self.selection_cfg, full_round=bool(full_round))
+
+
+def make_batched_train_fn(per_client_step, stacked_data):
+    """vmap a per-client ``step(params, *client_data) -> (params, loss)``
+    into ``(stacked_params, rng) -> (stacked_params, (N,) losses)``.
+
+    Convenience for fully-fused rounds when every client's data shard has
+    the same shape (the benchmark's homogeneous setting).  ``stacked_data``
+    is a tuple of arrays with a leading client axis.
+    """
+    def batched(stacked_params, rng):
+        del rng
+        return jax.vmap(per_client_step)(stacked_params, *stacked_data)
+
+    return batched

@@ -28,6 +28,7 @@ from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import importance as imp_mod
 
@@ -48,11 +49,22 @@ class SelectionConfig:
 def mask_from_scores(scores: jax.Array, keep: jax.Array | int,
                      num_channels: int) -> jax.Array:
     """Binary (float32) mask of shape (num_channels,) keeping the top
-    ``keep`` scores.  ``keep`` may be a traced scalar; we use a threshold
-    compare against the keep-th largest value so the whole thing is jit-safe
-    with dynamic ``keep``.
+    ``keep`` scores.  ``keep`` may be a traced scalar: ranks come from a
+    full-width ``lax.top_k`` (descending order, ties broken toward the lower
+    index — the same tie order as a stable descending argsort) and the mask
+    is a jit-safe ``rank < keep`` compare.  keep==0 -> all-zero mask.
     """
-    # kth largest via sort (descending). keep==0 -> all-zero mask.
+    _, order = jax.lax.top_k(scores, num_channels)
+    ranks = jnp.zeros(num_channels, jnp.int32).at[order].set(
+        jnp.arange(num_channels, dtype=jnp.int32))
+    return (ranks < keep).astype(jnp.float32)
+
+
+def mask_from_scores_argsort(scores: jax.Array, keep: jax.Array | int,
+                             num_channels: int) -> jax.Array:
+    """Reference implementation of :func:`mask_from_scores` via a stable
+    descending argsort.  Kept as the tie-handling oracle for tests; the
+    production path uses ``lax.top_k``."""
     order = jnp.argsort(-scores)
     ranks = jnp.zeros(num_channels, jnp.int32).at[order].set(
         jnp.arange(num_channels, dtype=jnp.int32))
@@ -141,6 +153,104 @@ def build_masks(
         shape[ax] = nch
         masks.append(m1d.reshape(shape).astype(w_new.dtype))
     return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def _tensor_scores_batched(cfg: SelectionConfig, w_old, w_new,
+                           leaf_rngs: Optional[jax.Array]):
+    """Scores for a client-stacked leaf: (N, *leaf) x2 -> (N, C).
+
+    ``leaf_rngs`` is a (N, key) stack of per-client keys already folded with
+    this leaf's index (matching the per-client ``build_masks`` fold order).
+    """
+    ax = cfg.channel_axis
+    if cfg.scheme == "feddd":
+        if cfg.use_kernel:
+            from repro.kernels.importance import ops as kops
+            return kops.channel_importance_batched(w_old, w_new,
+                                                   channel_axis=ax)
+        return imp_mod.channel_importance_batched(w_old, w_new,
+                                                  channel_axis=ax)
+    if cfg.scheme == "max":
+        return imp_mod.channel_score_max_batched(w_old, w_new,
+                                                 channel_axis=ax)
+    if cfg.scheme == "delta":
+        return imp_mod.channel_score_delta_batched(w_old, w_new,
+                                                   channel_axis=ax)
+    nch = w_new.shape[ax % (w_new.ndim - 1) + 1]
+    if cfg.scheme == "random":
+        return jax.vmap(
+            lambda k: imp_mod.channel_score_random(k, nch))(leaf_rngs)
+    if cfg.scheme == "ordered":
+        return jnp.broadcast_to(imp_mod.channel_score_ordered(nch),
+                                (w_new.shape[0], nch))
+    raise AssertionError(cfg.scheme)
+
+
+def build_masks_batched(
+    stacked_old,
+    stacked_new,
+    dropout_rates: jax.Array,
+    *,
+    config: SelectionConfig = SelectionConfig(),
+    rng: Optional[jax.Array] = None,
+):
+    """Client-stacked ``build_masks``: all clients' masks in one traced pass.
+
+    Args:
+      stacked_old / stacked_new: pytrees whose leaves carry a leading client
+        axis — leaf shape (N, *leaf_shape).
+      dropout_rates: (N,) per-client dropout rates (can be traced).
+      rng: the ROUND key; per-client keys are derived as
+        ``fold_in(fold_in(rng, 10_000 + i), leaf_index)`` — the exact fold
+        order of the per-client loop, so scheme='random' masks are
+        bit-identical to looping :func:`build_masks` with
+        ``rng=fold_in(round_key, 10_000 + i)``.
+
+    Returns ``(masks, density)``: a mask pytree with leaves shaped
+    (N, 1, ..., C, ..., 1) and the (N,) fraction of parameter elements kept
+    (the per-client upload density, computed on device so the caller makes a
+    single small host transfer instead of O(clients x leaves) ``float()``
+    round-trips).
+    """
+    if config.scheme == "random" and rng is None:
+        raise ValueError("scheme='random' requires rng")
+
+    flat_old = jax.tree_util.tree_leaves(stacked_old)
+    flat_new, treedef = jax.tree_util.tree_flatten(stacked_new)
+    if len(flat_old) != len(flat_new):
+        raise ValueError("stacked_old/stacked_new structure mismatch")
+    n = flat_new[0].shape[0]
+
+    client_keys = None
+    if rng is not None:
+        client_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng, i))(10_000 + jnp.arange(n))
+
+    masks = []
+    kept = jnp.zeros((n,), jnp.float32)
+    total = 0.0
+    for i, (w_old, w_new) in enumerate(zip(flat_old, flat_new)):
+        leaf_ndim = w_new.ndim - 1
+        leaf_size = float(np.prod(w_new.shape[1:], dtype=np.float64))
+        if leaf_ndim == 0:
+            masks.append(jnp.ones((n,), w_new.dtype))
+            kept = kept + leaf_size
+            total += leaf_size
+            continue
+        ax = config.channel_axis % leaf_ndim + 1
+        nch = w_new.shape[ax]
+        leaf_rngs = (jax.vmap(lambda k: jax.random.fold_in(k, i))(client_keys)
+                     if client_keys is not None else None)
+        scores = _tensor_scores_batched(config, w_old, w_new, leaf_rngs)
+        k = keep_count(nch, dropout_rates)                     # (N,)
+        m1d = jax.vmap(mask_from_scores, (0, 0, None))(scores, k, nch)
+        shape = [n] + [1] * leaf_ndim
+        shape[ax] = nch
+        masks.append(m1d.reshape(shape).astype(w_new.dtype))
+        kept = kept + jnp.sum(m1d, axis=1) * (leaf_size / nch)
+        total += leaf_size
+    density = kept / total
+    return jax.tree_util.tree_unflatten(treedef, masks), density
 
 
 def apply_mask(params, masks):

@@ -27,8 +27,7 @@ clients = data-parallel groups).
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,15 +119,20 @@ def dense_allreduce_mean(local: jax.Array, axis_name: str,
 
 
 def make_federated_allreduce(k_fraction: float, axis_name: str):
-    """Returns f(local, scores, weight) using the sparse path when
-    k_fraction < 1 else the dense path.  ``k_fraction = 1 - D``."""
+    """Returns f(local, scores, weight, k_local) using the sparse path when
+    k_fraction < 1 else the dense path.  ``k_fraction = 1 - D``.
+
+    ``k_local`` (optional, traced, <= the static buffer size) is forwarded
+    to :func:`sparse_allgather_mean` — this is how differential per-client
+    dropout rates ride on the SPMD-static buffer."""
     if not 0.0 < k_fraction <= 1.0:
         raise ValueError(f"k_fraction must be in (0,1], got {k_fraction}")
 
-    def _f(local, scores, weight=1.0):
+    def _f(local, scores, weight=1.0, k_local=None):
         if k_fraction >= 1.0:
             return dense_allreduce_mean(local, axis_name, weight)
         k = max(1, int(local.shape[0] * k_fraction))
-        return sparse_allgather_mean(local, scores, k, axis_name, weight)
+        return sparse_allgather_mean(local, scores, k, axis_name, weight,
+                                     k_local=k_local)
 
     return _f

@@ -18,6 +18,7 @@ deviation (comparative trends, not absolute accuracies, are the target).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Tuple
 
 import numpy as np
@@ -56,7 +57,9 @@ def make_dataset(name: str, *, num_train: int = 20_000,
         raise ValueError(f"unknown dataset {name!r}; options {list(_SHAPES)}")
     h, w, c = _SHAPES[name]
     d_out = h * w * c
-    rng = np.random.default_rng(seed + hash(name) % (2 ** 16))
+    # crc32, not hash(): str hash is salted per process (PYTHONHASHSEED), so
+    # the "same seed" would otherwise generate a different dataset each run.
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2 ** 16))
     proj = rng.normal(0, 1.0 / np.sqrt(latent_dim), (latent_dim, d_out))
     centers = rng.normal(0, class_sep,
                          (num_classes, modes_per_class, latent_dim))

@@ -34,3 +34,28 @@ def channel_importance(w_old: jax.Array, w_new: jax.Array, *,
     if coverage is not None:
         score = score / jnp.maximum(coverage, 1e-8)
     return score
+
+
+def channel_importance_batched(w_old: jax.Array, w_new: jax.Array, *,
+                               channel_axis: int = -1,
+                               coverage: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Client-stacked importance: (N, *leaf) x2 -> (N, C) fp32.
+
+    The client axis folds into the kernel's channel axis — every (client,
+    channel) row is an independent fan-in reduction, so a single (N*C, F)
+    pallas_call scores all clients in one HBM pass with the same per-row
+    accumulation order as N separate (C, F) calls (bit-identical results).
+    """
+    ax = channel_axis % (w_old.ndim - 1) + 1
+    n = w_old.shape[0]
+    wo = jnp.moveaxis(w_old, ax, 1)
+    wn = jnp.moveaxis(w_new, ax, 1)
+    c = wo.shape[1]
+    wo = wo.reshape(n * c, -1)
+    wn = wn.reshape(n * c, -1)
+    ss = channel_importance_sumsq(wo, wn, interpret=not _on_tpu())
+    score = jnp.sqrt(ss).reshape(n, c)
+    if coverage is not None:
+        score = score / jnp.maximum(coverage, 1e-8)
+    return score

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim: ``from hypothesis_compat import given, ...``.
+
+requirements.txt pins hypothesis and CI installs it, but the tier-1 suite
+must still COLLECT (and the non-property tests must still RUN) in an
+environment without it.  When hypothesis is importable this module re-exports
+the real API; otherwise ``@given`` replaces the test with a skip stub and
+``st``/``settings`` become inert placeholders.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg stub: the real test's parameters are hypothesis
+            # strategies, which pytest must not mistake for fixtures.
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass  # pragma: no cover
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _InertStrategies:
+        def __getattr__(self, _name):
+            def _strategy(*_args, **_kwargs):
+                return None
+            return _strategy
+
+    st = _InertStrategies()

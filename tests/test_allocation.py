@@ -5,7 +5,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.allocation import (ClientTelemetry, regularizer,
                                    solve_dropout_rates,

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data import (label_coverage_score, label_distribution,
                         make_dataset, partition_class_imbalanced,
