@@ -2,9 +2,20 @@
 
 Each benchmark module reproduces one paper table/figure on the synthetic
 datasets (DESIGN.md §8).  ``run_experiment`` wires dataset + partition +
-scheme and returns the round history; ``csv_row`` prints the harness's
+scheme and returns the round history; ``run_sim_experiment`` routes the
+same setup through the event-driven simulator (repro/sim) with a chosen
+aggregation policy and network model; ``csv_row`` prints the harness's
 ``name,us_per_call,derived`` convention (derived = the figure's headline
 quantity).
+
+Two time axes appear in results — never mix them:
+
+* ``RoundRecord.sim_time`` / ``sim_round_time`` — SIMULATED seconds on the
+  paper's Eq. (12) clock (what the modelled clients would take).  All
+  time-to-accuracy figures are on this axis.
+* ``RoundRecord.host_wall_time`` (and the ``us_per_call`` column emitted
+  by :func:`csv_row` via :func:`timed`) — REAL host seconds this
+  implementation spent computing; a throughput measure only.
 """
 
 from __future__ import annotations
@@ -43,24 +54,23 @@ DATASET_MODEL = {
 }
 
 
-def run_experiment(
+def setup_experiment(
     dataset: str = "mnist",
     partition: str = "noniid_b",
-    scheme: str = "feddd",
     *,
     num_clients: int = 10,
-    rounds: int = 10,
     num_train: int = 4000,
     num_test: int = 1000,
-    a_server: float = 0.6,
-    d_max: float = 0.8,
-    delta: float = 1.0,
-    h: int = 5,
-    selection_scheme: str = "feddd",
     hetero_specs: Optional[List] = None,
     per_class_eval: bool = False,
     seed: int = 0,
 ):
+    """Dataset + partition + model + telemetry plumbing shared by the
+    protocol-driver and sim-driver entry points.
+
+    Returns ``(global_params, telemetry, local_train_fn, eval_fn,
+    client_params)`` (client_params is None for homogeneous runs).
+    """
     train, test = make_dataset(dataset, num_train=num_train,
                                num_test=num_test, seed=seed)
     parts = PARTITIONS[partition](train, num_clients, seed=seed)
@@ -70,7 +80,7 @@ def run_experiment(
         clients = [init_cnn_spec(jax.random.PRNGKey(100 + i), s)
                    for i, s in enumerate(specs)]
         global_params = init_cnn_spec(jax.random.PRNGKey(0), hetero_specs[0])
-        flatten, lr = False, 0.05
+        lr = 0.05
         fns = [make_local_train_fn(specs[i], train, parts, lr=lr)
                for i in range(num_clients)]
 
@@ -90,6 +100,31 @@ def run_experiment(
     tel = sample_system_telemetry(
         num_clients, mbytes, [len(p) for p in parts],
         [label_coverage_score(train, p) for p in parts], seed=seed)
+    return global_params, tel, ltf, ef, clients
+
+
+def run_experiment(
+    dataset: str = "mnist",
+    partition: str = "noniid_b",
+    scheme: str = "feddd",
+    *,
+    num_clients: int = 10,
+    rounds: int = 10,
+    num_train: int = 4000,
+    num_test: int = 1000,
+    a_server: float = 0.6,
+    d_max: float = 0.8,
+    delta: float = 1.0,
+    h: int = 5,
+    selection_scheme: str = "feddd",
+    hetero_specs: Optional[List] = None,
+    per_class_eval: bool = False,
+    seed: int = 0,
+):
+    global_params, tel, ltf, ef, clients = setup_experiment(
+        dataset, partition, num_clients=num_clients, num_train=num_train,
+        num_test=num_test, hetero_specs=hetero_specs,
+        per_class_eval=per_class_eval, seed=seed)
     return run_scheme(scheme, global_params, tel, ltf, ef,
                       client_params=clients, rounds=rounds,
                       a_server=a_server, d_max=d_max, delta=delta, h=h,
@@ -97,7 +132,46 @@ def run_experiment(
                       seed=seed)
 
 
+def run_sim_experiment(
+    dataset: str = "mnist",
+    partition: str = "noniid_b",
+    scheme: str = "feddd",
+    *,
+    policy: str = "sync",
+    network: str = "static",
+    num_clients: int = 10,
+    rounds: int = 10,
+    num_train: int = 4000,
+    num_test: int = 1000,
+    a_server: float = 0.6,
+    d_max: float = 0.8,
+    delta: float = 1.0,
+    h: int = 5,
+    seed: int = 0,
+    network_kw: Optional[Dict] = None,
+    policy_kw: Optional[Dict] = None,
+    eval_every: int = 1,
+):
+    """The same experiment, time axis owned by the event-driven simulator
+    (repro/sim): ``policy`` in {sync, deadline, async}, ``network`` in
+    {static, markov} (see repro.sim.network for trace-driven models)."""
+    from repro.sim import SimConfig, make_network, run_sim
+
+    global_params, tel, ltf, ef, clients = setup_experiment(
+        dataset, partition, num_clients=num_clients, num_train=num_train,
+        num_test=num_test, seed=seed)
+    assert clients is None, "sim runner is homogeneous-only"
+    net = make_network(network, tel, seed=seed, **(network_kw or {}))
+    sim = SimConfig(policy=policy, policy_kw=policy_kw or {},
+                    eval_every=eval_every)
+    return run_sim(scheme, global_params, tel, ltf, ef, sim=sim,
+                   network=net, rounds=rounds, a_server=a_server,
+                   d_max=d_max, delta=delta, h=h, seed=seed)
+
+
 def csv_row(name: str, wall_s: float, derived: str) -> str:
+    """``us_per_call`` is HOST time (from :func:`timed`) — simulated-clock
+    quantities belong in the ``derived`` column."""
     return f"{name},{wall_s * 1e6:.0f},{derived}"
 
 

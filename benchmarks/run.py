@@ -15,7 +15,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (accuracy_homogeneous, class_imbalance,  # noqa: E402
                         convergence_bound, heterogeneous, kernels_bench,
-                        roofline, selection_variants, sensitivity, t2a)
+                        roofline, selection_variants, sensitivity,
+                        straggler_policies, t2a)
 
 MODULES = [
     ("fig4-6 accuracy (model-homogeneous)", accuracy_homogeneous),
@@ -25,6 +26,7 @@ MODULES = [
     ("fig16-20 sensitivity", sensitivity),
     ("fig21 class imbalance", class_imbalance),
     ("thm2 convergence bound", convergence_bound),
+    ("straggler policies (event-driven sim)", straggler_policies),
     ("pallas kernels", kernels_bench),
     ("dry-run roofline", roofline),
 ]

@@ -1,0 +1,105 @@
+"""Time-to-accuracy under dynamic networks: scheme x policy x network grid.
+
+The paper's Fig. 7 compares schemes on a STATIC network with a synchronous
+server.  This grid runs the event-driven simulator (repro/sim) instead and
+asks the question FedDD's premise raises: when links fade mid-run and the
+server may stop waiting for stragglers, which serving discipline reaches
+the target accuracy first, and does differential dropout still pay?
+
+Grid (reduced mode):
+  scheme   feddd + a fedavg reference
+  policy   sync (wait-for-all), deadline (drops late uploads),
+           async (staleness-weighted buffered merges)
+  network  static (Table 4) and markov (two-state fading stragglers)
+
+Headline column: simulated seconds to 0.80 test accuracy (``sim_time``
+axis — see benchmarks/common.py for the sim vs host time distinction).
+Async gets proportionally more (smaller) merge rounds so every policy
+performs the same number of client updates.
+
+Writes ``straggler_policies.csv`` to the results dir; CI uploads it as a
+build artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import csv_row, run_sim_experiment, timed  # noqa: E402
+from repro.sim import AsyncPolicy  # noqa: E402
+
+TARGET_ACC = 0.80
+POLICIES = ("sync", "deadline", "async")
+NETWORKS = ("static", "markov")
+MARKOV_KW = dict(p_fade=0.25, p_recover=0.5, fade_factor=0.1)
+
+
+def _fmt(x) -> str:
+    return "fail" if x is None else f"{x:.1f}"
+
+
+def run(full: bool = False, out_dir: Path | None = None):
+    rounds = 20 if full else 8
+    clients = 20 if full else 8
+    schemes = ("feddd", "fedavg", "fedcs", "oort") if full \
+        else ("feddd", "fedavg")
+    rows = []
+    table = ["scheme,policy,network,t2a_sim_s,final_acc,final_sim_s,"
+             "mean_participants,mean_uploaded_frac"]
+    for scheme in schemes:
+        for policy in POLICIES:
+            for network in NETWORKS:
+                if scheme != "feddd" and policy != "sync":
+                    continue     # baselines: sync reference only
+                kw = dict(network_kw=MARKOV_KW) if network == "markov" \
+                    else {}
+                # async merges cover buffer_size clients each; scale the
+                # merge count so total client updates match the waves.
+                buf = AsyncPolicy().resolved_buffer(clients)
+                n_rounds = rounds * (clients // buf) \
+                    if policy == "async" else rounds
+                res, wall = timed(lambda: run_sim_experiment(
+                    "mnist", "noniid_b", scheme, policy=policy,
+                    network=network, num_clients=clients,
+                    rounds=n_rounds, num_train=2000, num_test=500,
+                    seed=0, **kw))
+                t2a = res.time_to_accuracy(TARGET_ACC)
+                final = res.history[-1]
+                acc = (final.metrics or {}).get("accuracy", float("nan"))
+                parts = float(np.mean([r.participants
+                                       for r in res.history]))
+                upfrac = float(np.mean([r.uploaded_fraction
+                                        for r in res.history]))
+                name = f"straggler_{scheme}_{policy}_{network}"
+                rows.append(csv_row(
+                    name, wall,
+                    f"t2a{int(TARGET_ACC * 100)}={_fmt(t2a)};"
+                    f"final_acc={acc:.3f};sim_s={final.sim_time:.1f}"))
+                table.append(
+                    f"{scheme},{policy},{network},{_fmt(t2a)},{acc:.4f},"
+                    f"{final.sim_time:.1f},{parts:.2f},{upfrac:.3f}")
+    if out_dir:
+        out_dir.mkdir(exist_ok=True)
+        (out_dir / "straggler_policies.csv").write_text(
+            "\n".join(table) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(__file__).resolve().parents[1] / "results"
+    for r in run(full=args.full, out_dir=out_dir):
+        print(r)
+    print((out_dir / "straggler_policies.csv").read_text())
+
+
+if __name__ == "__main__":
+    main()

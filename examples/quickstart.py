@@ -55,7 +55,7 @@ def main():
     for r in feddd.history:
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
               f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}  "
-              f"wall={r.wall_time:.2f}s")
+              f"host={r.host_wall_time:.2f}s")
 
     print("== FedAvg (full uploads) ==")
     fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds)

@@ -11,6 +11,10 @@ Modules
   round_engine      batched jit-compiled round step (homogeneous hot path)
   sparse_collective compacted cross-pod collectives (TPU adaptation)
   convergence       Theorem-2 bound evaluation + epsilon estimator
+
+The event-driven system simulator (dynamic networks, stragglers, deadline
+and async serving) lives in the sibling package ``repro.sim``; see the
+routing table in the protocol module docstring.
 """
 
 from repro.core.allocation import (AllocationResult, ClientTelemetry,

@@ -10,26 +10,40 @@ transformer federation (examples/federated_pods.py uses the shard_map
 collectives in core/sparse_collective.py instead, for on-device execution;
 this driver is the faithful parameter-server formulation).
 
-Two execution paths share the same maths (bit-identical, see
-tests/test_round_engine.py):
+Three execution paths share the same maths (see tests/test_round_engine.py
+and tests/test_sim.py).  Routing table — which path handles which scenario:
 
-* **batched** (default for homogeneous FedDD): client params are stacked
-  along a leading client axis and the whole server side of the round —
-  importance scoring, lax.top_k mask building, Eq. (4) aggregation,
-  Eq. (5)/(6) client updates — runs as ONE jit-compiled step
-  (core/round_engine.py).  Per-round device->host traffic is a single
-  small telemetry transfer (losses + upload densities).  Pass
-  ``batched_train_fn`` to :meth:`FedDDServer.run` to fuse local training
-  into the device step as well.  Benchmark:
-  ``PYTHONPATH=src python benchmarks/perf_federated.py`` (loop-vs-batched
-  A/B, rounds/sec).
-* **per-client loop** (heterogeneous ragged-width models, track_epsilon,
-  the non-FedDD baselines, or ``ProtocolConfig(batched=False)``): the
-  original Python loop over clients.
+==========================  =================================================
+scenario                    path
+==========================  =================================================
+homogeneous feddd           **batched engine** (core/round_engine.py): one
+                            jit-compiled device step per round; pass
+                            ``batched_train_fn`` to fuse local training too
+homogeneous fedavg /        **batched engine**, ``dense_masks`` mode:
+fedcs / oort                all-ones masks, non-participants carried as
+                            0-weights in the stacked Eq. (4) aggregation
+heterogeneous (ragged       **per-client loop**: HeteroFL-style width
+widths), track_epsilon,     slicing, per-client mask pytrees
+``batched=False``
+dynamic networks /          **sim runner** (repro/sim/runner.py): pass
+stragglers / deadline or    ``sim=``/``network=`` to :func:`run_scheme`;
+async serving               event-driven clock, observed-telemetry LP
+                            re-solve, sync / deadline / async policies
+                            (homogeneous models only)
+==========================  =================================================
+
+* The batched engine is bit-identical to the loop for FedDD and matches it
+  to float tolerance for the baselines (summation order differs).
+  Benchmark: ``PYTHONPATH=src python benchmarks/perf_federated.py``.
+* The sim runner with the synchronous policy over a static network
+  reproduces this driver's Eq. (12) round times exactly.
 
 Simulated wall-clock follows the paper's system model exactly
 (t = t_cmp + U(1-D)/r_u + U(1-D)/r_d; the round takes max over participating
-clients) — this is how the paper's own simulation computes time-to-accuracy.
+clients, using the dropout rates the round's uploads actually used) — this
+is how the paper's own simulation computes time-to-accuracy.  The closed
+form is exact only for the synchronous policy; anything event-ordered
+(deadlines, stragglers, async merges) lives in ``repro.sim``.
 """
 
 from __future__ import annotations
@@ -83,15 +97,32 @@ class ClientState:
 
 @dataclasses.dataclass
 class RoundRecord:
+    """One round of history.  Two distinct time axes — do not conflate:
+
+    * ``sim_time`` / ``sim_round_time`` are SIMULATED seconds, the paper's
+      Eq. (12) clock: what the federated round *would* take on the modelled
+      client links/CPUs.  Time-to-accuracy (Fig. 7) is measured on this
+      axis.
+    * ``host_wall_time`` is REAL seconds the host process spent computing
+      the round (training + engine step) — a throughput measure of this
+      implementation, never comparable to ``sim_time``.
+    """
+
     round: int
-    sim_time: float                  # cumulative simulated seconds
-    wall_time: float                 # real seconds spent in this round
+    sim_time: float                  # cumulative simulated secs (Eq. 12)
+    host_wall_time: float            # real host secs spent in this round
     mean_loss: float
-    dropout_rates: np.ndarray
+    dropout_rates: np.ndarray        # rates allocated for the NEXT round
     uploaded_fraction: float         # actual bytes uploaded / full bytes
     participants: int
+    sim_round_time: float = 0.0      # this round's simulated duration
     epsilon: Optional[float] = None
     metrics: Optional[Dict] = None
+
+    @property
+    def wall_time(self) -> float:
+        """Deprecated alias of ``host_wall_time`` (pre-sim naming)."""
+        return self.host_wall_time
 
 
 @dataclasses.dataclass
@@ -163,11 +194,13 @@ class FedDDServer:
     # -- the full loop --------------------------------------------------------
 
     def _use_engine(self, batched_train_fn) -> bool:
-        """Batched engine is valid only for homogeneous FedDD rounds;
+        """Batched engine serves every homogeneous scheme (baselines run
+        in dense_masks mode with non-participation as 0-weights);
         track_epsilon needs the per-client mask pytrees of the loop path."""
-        ok = (self.cfg.scheme == "feddd" and self.cfg.batched
-              and not self.heterogeneous and not self.cfg.track_epsilon)
-        if batched_train_fn is not None and not ok:
+        ok = (self.cfg.batched and not self.heterogeneous
+              and not self.cfg.track_epsilon)
+        if batched_train_fn is not None and not (
+                ok and self.cfg.scheme == "feddd"):
             raise ValueError(
                 "batched_train_fn requires a homogeneous feddd run with "
                 "batched=True and track_epsilon=False")
@@ -218,40 +251,52 @@ class FedDDServer:
 
             if use_engine:
                 # ---- batched path: one fused device step per round ------
+                dense = cfg.scheme != "feddd"
+                part = (np.ones(n, bool) if not dense
+                        else self._participants(losses))
+                d_used = self.dropout.copy()      # D_t: what uploads use
                 if batched_train_fn is not None:
                     stacked_new, loss_dev = batched_train_fn(stacked, rk)
                 else:
                     per_client = round_engine.unstack_pytree(stacked, n)
                     new_list: List[Params] = [None] * n
-                    loss_dev = [None] * n
+                    loss_dev: List = [None] * n
                     for i, p_i in enumerate(per_client):
-                        p, l = local_train_fn(p_i, i,
-                                              jax.random.fold_in(rk, i))
+                        if part[i]:
+                            p, l = local_train_fn(p_i, i,
+                                                  jax.random.fold_in(rk, i))
+                        else:       # baseline non-participant: stale state
+                            p, l = p_i, losses[i]
                         new_list[i] = p
                         loss_dev[i] = l
                     stacked_new = round_engine.stack_pytrees(new_list)
                 out = engine.step(stacked, stacked_new,
-                                  self.global_params, self.dropout, weights,
-                                  rk, full_round=(t % cfg.h == 0))
+                                  self.global_params, d_used,
+                                  weights * part, rk,
+                                  full_round=(t % cfg.h == 0) or dense,
+                                  dense_masks=dense)
                 self.global_params = out.global_params
                 stacked = out.client_params
                 # the ONE device->host transfer of the round
                 dens, loss_host = jax.device_get((out.densities, loss_dev))
                 losses = np.asarray(loss_host, float)
                 uploaded_bytes = float(
-                    np.dot(np.asarray(dens, float), self.tel.model_bytes))
-                alloc = self.allocate(np.maximum(losses, 1e-6))
-                self.dropout = alloc.dropout_rates
-                active = np.ones(n, bool)
-                sim_time, metrics = self._finish_round(active, sim_time,
-                                                       eval_fn)
-                history.append(self._record(t, t0, sim_time, losses,
-                                            uploaded_bytes, full_bytes,
-                                            active, eps_val, metrics))
+                    np.dot(np.asarray(dens, float) * part,
+                           self.tel.model_bytes))
+                if not dense:
+                    alloc = self.allocate(np.maximum(losses, 1e-6))
+                    self.dropout = alloc.dropout_rates
+                sim_time, round_t, metrics = self._finish_round(
+                    part, sim_time, eval_fn, d_used)
+                history.append(self._record(t, t0, sim_time, round_t,
+                                            losses, uploaded_bytes,
+                                            full_bytes, part, eps_val,
+                                            metrics))
                 continue
 
             # ---- per-client loop path -----------------------------------
             part = self._participants(losses)
+            d_used = self.dropout.copy()          # D_t: what uploads use
 
             # --- Step 1: local training (participants only for baselines;
             # in FedDD everyone trains — that is the paper's key point).
@@ -322,8 +367,9 @@ class FedDDServer:
 
             # --- simulated wall clock (paper Eq. (12))
             active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
-            sim_time, metrics = self._finish_round(active, sim_time, eval_fn)
-            history.append(self._record(t, t0, sim_time, losses,
+            sim_time, round_t, metrics = self._finish_round(
+                active, sim_time, eval_fn, d_used)
+            history.append(self._record(t, t0, sim_time, round_t, losses,
                                         uploaded_bytes, full_bytes, active,
                                         eps_val, metrics))
 
@@ -333,28 +379,36 @@ class FedDDServer:
                 cs.params = p
         return RunResult(history, self.global_params)
 
-    def _record(self, t: int, t0: float, sim_time: float, losses: np.ndarray,
+    def _record(self, t: int, t0: float, sim_time: float,
+                sim_round_time: float, losses: np.ndarray,
                 uploaded_bytes: float, full_bytes: float, active: np.ndarray,
                 eps_val: Optional[float], metrics: Optional[Dict]
                 ) -> RoundRecord:
         return RoundRecord(
-            round=t, sim_time=sim_time,
-            wall_time=time.perf_counter() - t0,
+            round=t, sim_time=sim_time, sim_round_time=sim_round_time,
+            host_wall_time=time.perf_counter() - t0,
             mean_loss=float(np.mean(losses)),
             dropout_rates=self.dropout.copy(),
             uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
             participants=int(np.sum(active)),
             epsilon=eps_val, metrics=metrics)
 
-    def _finish_round(self, active: np.ndarray, sim_time: float, eval_fn
-                      ) -> "tuple[float, Optional[Dict]]":
-        """Simulated wall clock (paper Eq. (12)) + optional eval."""
-        d_for_time = (self.dropout if self.cfg.scheme == "feddd"
+    def _finish_round(self, active: np.ndarray, sim_time: float, eval_fn,
+                      dropout_used: np.ndarray
+                      ) -> "tuple[float, float, Optional[Dict]]":
+        """Simulated wall clock (paper Eq. (12)) + optional eval.
+
+        ``dropout_used`` is D_t — the rates this round's uploads actually
+        used (NOT the freshly allocated D_{t+1}; the allocation for the
+        next round happens before the clock update).
+        """
+        d_for_time = (dropout_used if self.cfg.scheme == "feddd"
                       else np.zeros(self.tel.num_clients))
         t_all = baselines.round_times(self.tel, d_for_time)
-        sim_time += float(np.max(t_all[active]))
+        round_t = float(np.max(t_all[active]))
+        sim_time += round_t
         metrics = eval_fn(self.global_params) if eval_fn else None
-        return sim_time, metrics
+        return sim_time, round_t, metrics
 
     # -- heterogeneous-model plumbing  (HeteroFL-style width slicing) --------
 
@@ -393,8 +447,29 @@ class FedDDServer:
 
 
 def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
-               eval_fn=None, client_params=None, **cfg_kw) -> RunResult:
-    """One-call convenience wrapper used by benchmarks and examples."""
+               eval_fn=None, client_params=None, *, sim=None, network=None,
+               **cfg_kw) -> RunResult:
+    """One-call convenience wrapper used by benchmarks and examples.
+
+    Passing ``sim`` (a :class:`repro.sim.runner.SimConfig`, or ``True``
+    for defaults) and/or ``network`` (a :class:`repro.sim.network
+    .NetworkModel`) routes the run through the event-driven simulator
+    instead of the closed-form Eq. (12) clock: dynamic per-round network
+    conditions, observed-telemetry LP re-solves, and sync / deadline /
+    async aggregation policies.  Homogeneous models only (see the routing
+    table in the module docstring).
+    """
+    if sim is not None or network is not None:
+        from repro.sim import runner as sim_runner   # local: sim -> core
+        if client_params is not None:
+            raise ValueError("the sim runner supports homogeneous models "
+                             "only; use the per-client loop for "
+                             "heterogeneous client_params")
+        if sim is None or sim is True:
+            sim = sim_runner.SimConfig()
+        return sim_runner.run_sim(scheme, global_params, telemetry,
+                                  local_train_fn, eval_fn, sim=sim,
+                                  network=network, **cfg_kw)
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     server = FedDDServer(global_params, cfg, telemetry, client_params)
     return server.run(local_train_fn, eval_fn)

@@ -24,6 +24,12 @@ Results are bit-identical to the per-client loop for a fixed seed
 (tests/test_round_engine.py asserts this), so ``protocol.py`` routes every
 homogeneous FedDD run through this engine and keeps the loop only for
 heterogeneous (ragged-width) client models.
+
+The engine also serves the fedavg/fedcs/oort baselines (``dense_masks``:
+all-ones masks, no scoring) and the event-driven simulator
+(``repro.sim.runner``): non-participation, deadline-dropped stragglers, and
+staleness-decayed async merges are all expressed as per-client aggregation
+weights — weight 0 excludes a client from the stacked Eq. (4) reduction.
 """
 
 from __future__ import annotations
@@ -60,12 +66,25 @@ def unstack_pytree(stacked, n: int) -> List:
 # The whole server side of Algorithm 1 (steps 2-4 + 6-7) in one trace.
 # Module-level jit keyed on the (hashable, frozen) SelectionConfig so the
 # compile cache is shared across engine instances and server runs.
-@functools.partial(jax.jit, static_argnames=("sel_cfg", "full_round"))
+@functools.partial(jax.jit,
+                   static_argnames=("sel_cfg", "full_round", "dense_masks"))
 def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
                 weights, rng, *, sel_cfg: selection.SelectionConfig,
-                full_round: bool) -> RoundOutputs:
-    masks, density = selection.build_masks_batched(
-        stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
+                full_round: bool, dense_masks: bool = False) -> RoundOutputs:
+    if dense_masks:
+        # Baseline rounds (fedavg/fedcs/oort): participants upload FULL
+        # models, so masks are all-ones and no importance scoring runs.
+        # Non-participation is a 0 in ``weights`` — a zero-weight client
+        # contributes nothing to either Eq. (4) sum, exactly like being
+        # left out of the aggregation list.
+        n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
+        masks = jax.tree_util.tree_map(
+            lambda l: jnp.ones((n,) + (1,) * (l.ndim - 1), l.dtype),
+            stacked_new)
+        density = jnp.ones((n,), jnp.float32)
+    else:
+        masks, density = selection.build_masks_batched(
+            stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
     new_global = aggregation.aggregate_sparse_stacked(
         stacked_new, masks, weights, prev_global=global_params,
         use_kernel=sel_cfg.use_kernel)
@@ -96,8 +115,8 @@ class BatchedRoundEngine:
         default_factory=selection.SelectionConfig)
 
     def step(self, stacked_old, stacked_new, global_params,
-             dropout_rates, weights, rng, *, full_round: bool
-             ) -> RoundOutputs:
+             dropout_rates, weights, rng, *, full_round: bool,
+             dense_masks: bool = False) -> RoundOutputs:
         """Run one round's server side.
 
         Args:
@@ -105,16 +124,23 @@ class BatchedRoundEngine:
             training, leaves (N, *leaf).
           global_params: current global pytree (un-stacked).
           dropout_rates: (N,) float32 D_n^t.
-          weights: (N,) aggregation weights m_n (sample counts).
+          weights: (N,) aggregation weights m_n (sample counts).  A zero
+            weight excludes that client from the Eq. (4) aggregate — this
+            is how baseline non-participants, deadline-dropped stragglers
+            (sim/policies.py), and staleness-decayed async merges ride the
+            same fused step.
           rng: the ROUND key (same key the per-client loop splits from).
           full_round: t mod h == 0 — dense broadcast round (static: the two
             variants compile once each).
+          dense_masks: all-ones masks / full uploads (the fedavg / fedcs /
+            oort baselines); skips importance scoring entirely (static).
         """
         return _round_step(
             stacked_old, stacked_new, global_params,
             jnp.asarray(dropout_rates, jnp.float32),
             jnp.asarray(weights, jnp.float32), rng,
-            sel_cfg=self.selection_cfg, full_round=bool(full_round))
+            sel_cfg=self.selection_cfg, full_round=bool(full_round),
+            dense_masks=bool(dense_masks))
 
 
 def make_batched_train_fn(per_client_step, stacked_data):

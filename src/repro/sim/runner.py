@@ -1,0 +1,447 @@
+"""Event-driven FL runner — composes the clock engine, network models,
+and aggregation policies with the batched FedDD round engine.
+
+This is the simulator's driver, the counterpart of
+:class:`repro.core.protocol.FedDDServer` for *dynamic* system conditions.
+Differences from the closed-form protocol driver:
+
+* **Time is an event queue** (sim/engine.py), not one ``max`` per round:
+  every client download / compute / upload is a timestamped event, so
+  deadlines can cut stragglers mid-flight and async merges can interleave.
+* **Conditions change** (sim/network.py): each communication epoch draws
+  true uplink/downlink/compute values from the network model (static,
+  Markov fading, or trace-driven).
+* **The server is not an oracle**: it re-solves the dropout-rate LP
+  (core/allocation.py) every round from telemetry it *observed* on the
+  event timeline — per-phase measurements carried on the download /
+  compute / upload events, EWMA-smoothed — so FedDD's differential
+  dropout adapts as links fade.  Ground-truth conditions never reach the
+  allocation.
+* **Aggregation discipline is pluggable** (sim/policies.py): synchronous
+  wait-for-all, deadline semi-sync that abandons late uploads, or
+  buffered fully-async with staleness-decayed weights.
+
+The device math is the existing :class:`repro.core.round_engine
+.BatchedRoundEngine` step: exclusion (deadline drops, baseline
+non-participation) and staleness decay enter as per-client weights on the
+stacked Eq. (4) aggregation, so one jit-compiled step serves every policy.
+
+Determinism contract (tests/test_sim.py): a run is a pure function of
+(seed, config, network model) — same seed gives the identical event
+trace, sim times, and final parameters in any process.
+
+With the synchronous policy over a static network this runner reproduces
+``protocol.py``'s Eq. (12) round times and global parameters exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+
+from repro.core import baselines, round_engine
+from repro.core.allocation import ClientTelemetry, solve_dropout_rates
+from repro.core.protocol import (ProtocolConfig, RoundRecord, RunResult,
+                                 _tree_bytes)
+from repro.sim import engine as ev_mod
+from repro.sim.engine import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_DONE,
+                              Simulator)
+from repro.sim.network import (NetworkModel, StaticNetwork,
+                               telemetry_with_conditions)
+from repro.sim.policies import AsyncPolicy, make_policy
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Simulator-only knobs (protocol knobs stay on ProtocolConfig)."""
+
+    policy: Union[str, object] = "sync"   # sync | deadline | async, or an
+                                          # instance from sim/policies.py
+    policy_kw: Dict = dataclasses.field(default_factory=dict)
+    observation_ewma: float = 0.5         # weight on the newest measurement
+    eval_every: int = 1                   # eval_fn cadence (rounds/merges)
+
+    def resolve_policy(self):
+        if isinstance(self.policy, str):
+            return make_policy(self.policy, **self.policy_kw)
+        return self.policy
+
+
+@dataclasses.dataclass
+class SimResult(RunResult):
+    """RunResult + the determinism witnesses of the event timeline."""
+
+    event_trace: List[Tuple[float, str, int]] = dataclasses.field(
+        default_factory=list)
+    observed_telemetry: Optional[ClientTelemetry] = None
+
+
+class ObservedTelemetry:
+    """The server's running estimate of client link/compute conditions.
+
+    Initialised from the prior the operator supplied (the Table-4 sample
+    the closed-form driver treats as an oracle) and EWMA-updated from
+    measurements carried on processed events.  A measurement equal to the
+    current estimate leaves it bit-identical (no ``a*x + (1-a)*x``
+    round-off drift) — that is what makes the static-network sync run
+    reproduce protocol.py exactly.
+    """
+
+    def __init__(self, prior: ClientTelemetry, ewma: float):
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"observation_ewma must be in (0,1], {ewma}")
+        self.base = prior
+        self.ewma = ewma
+        self.uplink = np.asarray(prior.uplink_rate, float).copy()
+        self.downlink = np.asarray(prior.downlink_rate, float).copy()
+        self.compute = np.asarray(prior.compute_latency, float).copy()
+
+    def _update(self, arr: np.ndarray, i: int, measured: float) -> None:
+        if measured != arr[i]:
+            arr[i] = self.ewma * measured + (1.0 - self.ewma) * arr[i]
+
+    def observe(self, event: ev_mod.Event) -> None:
+        """Fold one event's measurement payload into the estimates."""
+        if event.payload is None or event.client < 0:
+            return
+        kind, value = event.payload
+        if kind == "uplink":
+            self._update(self.uplink, event.client, value)
+        elif kind == "downlink":
+            self._update(self.downlink, event.client, value)
+        elif kind == "compute":
+            self._update(self.compute, event.client, value)
+
+    def telemetry(self, train_loss: np.ndarray) -> ClientTelemetry:
+        """Estimates as a ClientTelemetry for the allocation LP /
+        selection baselines."""
+        return dataclasses.replace(
+            self.base, uplink_rate=self.uplink.copy(),
+            downlink_rate=self.downlink.copy(),
+            compute_latency=self.compute.copy(),
+            train_loss=np.asarray(train_loss, float))
+
+
+class SimRunner:
+    """Event-driven federated run over homogeneous client models."""
+
+    def __init__(self, global_params, cfg: ProtocolConfig,
+                 telemetry: ClientTelemetry, simcfg: SimConfig,
+                 network: Optional[NetworkModel] = None):
+        if cfg.track_epsilon:
+            raise ValueError("track_epsilon is a per-client-loop feature; "
+                             "the sim runner does not support it")
+        self.cfg = cfg
+        self.simcfg = simcfg
+        self.policy = simcfg.resolve_policy()
+        self.tel = telemetry
+        self.network = network or StaticNetwork(telemetry)
+        if self.network.num_clients != telemetry.num_clients:
+            raise ValueError("network model / telemetry client count "
+                             "mismatch")
+        n = telemetry.num_clients
+        self.global_params = global_params
+        self.client_params = [global_params] * n
+        self.engine = round_engine.BatchedRoundEngine(cfg.selection)
+        self.observed = ObservedTelemetry(telemetry, simcfg.observation_ewma)
+        self.dropout = np.zeros(n)            # D_n^1 = 0 (Algorithm 1)
+        self.weights = np.asarray(telemetry.num_samples, float)
+        self.full_bytes = float(np.sum(telemetry.model_bytes))
+        self.rng = jax.random.PRNGKey(cfg.seed)
+        self.sim = Simulator()
+
+    # -- shared server-side helpers -----------------------------------------
+
+    @property
+    def _dense(self) -> bool:
+        return self.cfg.scheme != "feddd"
+
+    def _allocate(self, losses: np.ndarray) -> None:
+        """Re-solve the dropout LP from OBSERVED telemetry (never the
+        network model's ground truth)."""
+        tel = self.observed.telemetry(np.maximum(losses, 1e-6))
+        alloc = solve_dropout_rates(
+            tel, a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+            delta=self.cfg.delta,
+            global_model_bytes=_tree_bytes(self.global_params))
+        self.dropout = alloc.dropout_rates
+
+    def _participants(self, losses: np.ndarray) -> np.ndarray:
+        """Baseline client selection, fed the server's observed view."""
+        scheme = self.cfg.scheme
+        n = self.tel.num_clients
+        if scheme in ("feddd", "fedavg"):
+            return np.ones(n, bool)
+        tel = self.observed.telemetry(losses)
+        if scheme == "fedcs":
+            return baselines.select_fedcs(tel, a_server=self.cfg.a_server)
+        return baselines.select_oort(tel, a_server=self.cfg.a_server)
+
+    def _schedule_round_trip(self, i: int, t0: float, d_i: float,
+                             cond, total: Optional[float] = None) -> None:
+        """Queue client i's download -> compute -> upload event chain.
+
+        ``total``, when given, pins the upload arrival to ``t0 + total``
+        (the vectorised Eq. (12) row) so the sync policy's round end is
+        bit-identical to protocol.py's closed form.
+        """
+        u_eff = float(self.tel.model_bytes[i]) * (1.0 - d_i)
+        r_d = float(cond.downlink_rate[i])
+        r_u = float(cond.uplink_rate[i])
+        t_cmp = float(cond.compute_latency[i])
+        dl = t0 + u_eff / r_d
+        cp = dl + t_cmp
+        up = t0 + total if total is not None else cp + u_eff / r_u
+        self.sim.schedule_at(dl, DOWNLOAD_DONE, i, ("downlink", r_d))
+        self.sim.schedule_at(cp, COMPUTE_DONE, i, ("compute", t_cmp))
+        self.sim.schedule_at(up, UPLOAD_DONE, i, ("uplink", r_u))
+
+    def _result(self, history: List[RoundRecord]) -> SimResult:
+        return SimResult(history=history, global_params=self.global_params,
+                         event_trace=list(self.sim.trace),
+                         observed_telemetry=self.observed.telemetry(
+                             np.ones(self.tel.num_clients)))
+
+    # -- wave policies: sync / deadline --------------------------------------
+
+    def run_waves(self, local_train_fn: Callable, eval_fn=None,
+                  rounds: Optional[int] = None) -> SimResult:
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        n = self.tel.num_clients
+        losses = np.ones(n)
+        history: List[RoundRecord] = []
+        sim = self.sim
+        stacked = round_engine.stack_pytrees(self.client_params)
+
+        for t in range(1, rounds + 1):
+            host0 = time.perf_counter()
+            self.rng, rk = jax.random.split(self.rng)
+            part = self._participants(losses)
+            d_used = self.dropout.copy()
+            d_time = d_used if cfg.scheme == "feddd" else np.zeros(n)
+
+            # --- device math: local training (participants)
+            per_client = round_engine.unstack_pytree(stacked, n)
+            new_list, loss_dev = [None] * n, [None] * n
+            for i, p_i in enumerate(per_client):
+                if part[i]:
+                    p, l = local_train_fn(p_i, i, jax.random.fold_in(rk, i))
+                else:
+                    p, l = p_i, losses[i]
+                new_list[i], loss_dev[i] = p, l
+            stacked_new = round_engine.stack_pytrees(new_list)
+
+            # --- event timeline with TRUE conditions of this epoch
+            cond = self.network.conditions(t - 1)
+            true_tel = telemetry_with_conditions(self.tel, cond)
+            ti = baselines.round_times(true_tel, d_time)   # Eq. (12) rows
+            dispatch = sim.now
+            for i in np.flatnonzero(part):
+                self._schedule_round_trip(int(i), dispatch, float(d_time[i]),
+                                          cond, total=float(ti[i]))
+
+            # --- the server listens until the policy's horizon
+            expected = baselines.round_times(
+                self.observed.telemetry(losses), d_time)[part]
+            deadline = dispatch + self.policy.horizon(expected)
+            arrived = np.zeros(n, bool)
+            arr_time = np.full(n, np.inf)
+            while sim.queue and sim.queue.peek().time <= deadline:
+                ev = sim.step()
+                self.observed.observe(ev)
+                if ev.kind == UPLOAD_DONE:
+                    arrived[ev.client] = True
+                    arr_time[ev.client] = ev.time
+            if not arrived.any():     # never aggregate an empty round
+                while sim.queue:
+                    ev = sim.step()
+                    self.observed.observe(ev)
+                    if ev.kind == UPLOAD_DONE:
+                        arrived[ev.client] = True
+                        arr_time[ev.client] = ev.time
+                        break
+            # late stragglers: in-flight transfers are abandoned (their
+            # uplink estimate stays stale — the server never saw it land)
+            sim.queue.clear()
+            late = part & ~arrived
+            round_end = (float(np.max(arr_time[arrived])) if not late.any()
+                         else max(float(deadline),
+                                  float(np.max(arr_time[arrived]))))
+            sim.advance_to(round_end)
+
+            # --- fused engine step: exclusion == 0 aggregation weight
+            out = self.engine.step(
+                stacked, stacked_new, self.global_params, d_used,
+                self.weights * arrived, rk,
+                full_round=(t % cfg.h == 0) or self._dense,
+                dense_masks=self._dense)
+            self.global_params = out.global_params
+            stacked = out.client_params
+            dens, loss_host = jax.device_get((out.densities, loss_dev))
+            # the loss report ships WITH the upload: a straggler whose
+            # transfer was abandoned keeps its stale loss server-side
+            losses = np.where(arrived, np.asarray(loss_host, float), losses)
+            uploaded = float(np.dot(np.asarray(dens, float) * arrived,
+                                    self.tel.model_bytes))
+
+            # --- allocation for round t+1, from what the server observed
+            if cfg.scheme == "feddd":
+                self._allocate(losses)
+
+            metrics = (eval_fn(self.global_params)
+                       if eval_fn and t % self.simcfg.eval_every == 0
+                       else None)
+            history.append(RoundRecord(
+                round=t, sim_time=round_end,
+                sim_round_time=round_end - dispatch,
+                host_wall_time=time.perf_counter() - host0,
+                mean_loss=float(np.mean(losses)),
+                dropout_rates=self.dropout.copy(),
+                uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
+                participants=int(np.sum(arrived)),
+                metrics=metrics))
+
+        self.client_params = round_engine.unstack_pytree(stacked, n)
+        return self._result(history)
+
+    # -- buffered fully-async policy ------------------------------------------
+
+    def run_async(self, local_train_fn: Callable, eval_fn=None,
+                  rounds: Optional[int] = None) -> SimResult:
+        """FedBuff-style serving: merge every ``buffer_size`` arrivals with
+        staleness-decayed weights; merged clients re-dispatch immediately.
+
+        One history record per merge ("virtual round"); ``sim_time`` is
+        the merge's arrival-complete time, so fast clients lap stragglers
+        instead of the fleet idling at Eq. (12)'s max.
+        """
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        n = self.tel.num_clients
+        k_buf = self.policy.resolved_buffer(n)
+        sim = self.sim
+        losses = np.ones(n)
+        history: List[RoundRecord] = []
+        version = 0
+        merges = 0
+        epochs = np.zeros(n, int)             # per-client dispatch count
+        dispatch_version = np.zeros(n, int)
+        pending: Dict[int, tuple] = {}        # i -> (old, new, loss, d_i)
+        train_key = jax.random.fold_in(self.rng, 0)
+        agg_key = jax.random.fold_in(self.rng, 1)
+        seq = 0
+
+        def dispatch(i: int) -> None:
+            nonlocal seq
+            cond = self.network.conditions(int(epochs[i]))
+            epochs[i] += 1
+            d_i = float(self.dropout[i]) if cfg.scheme == "feddd" else 0.0
+            p_new, loss = local_train_fn(
+                self.client_params[i], i, jax.random.fold_in(train_key, seq))
+            seq += 1
+            pending[i] = (self.client_params[i], p_new, loss, d_i)
+            dispatch_version[i] = version
+            self._schedule_round_trip(i, sim.now, d_i, cond)
+
+        for i in range(n):
+            dispatch(i)
+        buffer: List[int] = []
+        prev_time = 0.0
+        host_prev = time.perf_counter()
+
+        while merges < rounds and sim.queue:
+            ev = sim.step()
+            self.observed.observe(ev)
+            if ev.kind != UPLOAD_DONE:
+                continue
+            buffer.append(ev.client)
+            losses[ev.client] = float(pending[ev.client][2])
+            if len(buffer) < k_buf:
+                continue
+
+            # --- merge the buffer: one fused engine step over K clients
+            merges += 1
+            staleness = version - dispatch_version[buffer]
+            scale = self.policy.staleness_scale(staleness)
+            olds = round_engine.stack_pytrees(
+                [pending[i][0] for i in buffer])
+            news = round_engine.stack_pytrees(
+                [pending[i][1] for i in buffer])
+            d_vec = np.asarray([pending[i][3] for i in buffer])
+            w = self.weights[buffer] * scale
+            out = self.engine.step(
+                olds, news, self.global_params, d_vec, w,
+                jax.random.fold_in(agg_key, merges),
+                full_round=(merges % cfg.h == 0) or self._dense,
+                dense_masks=self._dense)
+            self.global_params = out.global_params
+            dens = np.asarray(jax.device_get(out.densities), float)
+            for j, i in enumerate(buffer):
+                self.client_params[i] = jax.tree_util.tree_map(
+                    lambda l, j=j: l[j], out.client_params)
+            version += 1
+            uploaded = float(np.dot(dens, self.tel.model_bytes[buffer]))
+
+            if cfg.scheme == "feddd":
+                self._allocate(losses)
+            metrics = (eval_fn(self.global_params)
+                       if eval_fn and merges % self.simcfg.eval_every == 0
+                       else None)
+            history.append(RoundRecord(
+                round=merges, sim_time=ev.time,
+                sim_round_time=ev.time - prev_time,
+                host_wall_time=time.perf_counter() - host_prev,
+                mean_loss=float(np.mean(losses)),
+                dropout_rates=self.dropout.copy(),
+                uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
+                participants=len(buffer),
+                metrics=metrics))
+            prev_time = ev.time
+            host_prev = time.perf_counter()
+
+            for i in buffer:
+                dispatch(i)     # re-enter immediately: no fleet barrier
+            buffer = []
+
+        return self._result(history)
+
+
+def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
+            local_train_fn: Callable, eval_fn=None, *,
+            sim: Optional[SimConfig] = None,
+            network: Optional[NetworkModel] = None,
+            rounds: Optional[int] = None, **cfg_kw) -> SimResult:
+    """One-call driver, mirroring :func:`repro.core.protocol.run_scheme`.
+
+    Args:
+      scheme: feddd | fedavg | fedcs | oort.  Selection baselines
+        (fedcs/oort) are evaluated on the server's observed telemetry and
+        are wave-only — per-round client selection has no meaning when
+        every client free-runs, so combining them with the async policy
+        raises instead of silently degenerating to fedavg.
+      sim: :class:`SimConfig` — policy + observation knobs.
+      network: a :class:`repro.sim.network.NetworkModel`; defaults to
+        :class:`StaticNetwork` over ``telemetry`` (the paper's setting).
+      **cfg_kw: ProtocolConfig fields (rounds, a_server, d_max, delta, h,
+        seed, selection).
+    """
+    simcfg = sim or SimConfig()
+    if rounds is not None:
+        cfg_kw["rounds"] = rounds
+    cfg_kw.pop("batched", None)       # the sim runner is always batched
+    cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
+    runner = SimRunner(global_params, cfg, telemetry, simcfg, network)
+    if isinstance(runner.policy, AsyncPolicy):
+        if scheme in ("fedcs", "oort"):
+            raise ValueError(
+                f"scheme {scheme!r} is a per-round client-selection "
+                "baseline; it has no async analogue (use sync/deadline, "
+                "or feddd/fedavg with async)")
+        return runner.run_async(local_train_fn, eval_fn, cfg.rounds)
+    return runner.run_waves(local_train_fn, eval_fn, cfg.rounds)

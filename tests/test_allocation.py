@@ -118,6 +118,68 @@ def test_property_feasibility_and_optimality_vs_uniform(n, seed, a_server,
         assert res.objective <= obj_uni + 1e-4 * max(1.0, abs(obj_uni))
 
 
+def _assert_numpy_jax_agree(tel, *, a_server, d_max, delta, atol=5e-3):
+    """Both solvers feasible, agreeing, within bounds, on-budget."""
+    res = solve_dropout_rates(tel, a_server=a_server, d_max=d_max,
+                              delta=delta)
+    assert res.feasible
+    assert np.all(res.dropout_rates >= -1e-9)
+    assert np.all(res.dropout_rates <= d_max + 1e-9)
+    uploaded = np.sum(tel.model_bytes * (1 - res.dropout_rates))
+    np.testing.assert_allclose(uploaded, a_server * np.sum(tel.model_bytes),
+                               rtol=1e-5)
+    dj, tj = solve_dropout_rates_jax(
+        jnp.asarray(tel.model_bytes), jnp.asarray(tel.uplink_rate),
+        jnp.asarray(tel.downlink_rate), jnp.asarray(tel.compute_latency),
+        jnp.asarray(tel.num_samples), jnp.asarray(tel.label_coverage),
+        jnp.asarray(tel.train_loss),
+        a_server=a_server, d_max=d_max, delta=delta)
+    dj = np.asarray(dj, np.float64)
+    np.testing.assert_allclose(dj, res.dropout_rates, atol=atol)
+    assert np.all(dj >= -1e-6) and np.all(dj <= d_max + 1e-6)
+    np.testing.assert_allclose(np.sum(tel.model_bytes * (1 - dj)),
+                               a_server * np.sum(tel.model_bytes), rtol=1e-4)
+    np.testing.assert_allclose(float(tj), res.t_server, rtol=1e-3)
+    return res
+
+
+def test_degenerate_near_zero_uplink_straggler():
+    """One client's uplink is ~zero (its k_n dominates every timescale):
+    solvers must stay feasible, agree, pin the straggler at D_max, and
+    hold the budget equality."""
+    n = 8
+    up = np.full(n, 2e3)
+    up[0] = 1e-3                      # effectively a dead link
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, 1e5), uplink_rate=up,
+        downlink_rate=np.full(n, 1e4),
+        compute_latency=np.full(n, 1.0),
+        num_samples=np.full(n, 100.0),
+        label_coverage=np.full(n, 5.0),
+        train_loss=np.full(n, 1.0))
+    res = _assert_numpy_jax_agree(tel, a_server=0.6, d_max=0.8, delta=1.0)
+    # the dead-link straggler sets the makespan => it drops the maximum
+    assert res.dropout_rates[0] == pytest.approx(0.8, abs=1e-6)
+
+
+def test_degenerate_all_identical_fleet():
+    """A perfectly homogeneous fleet: the unique optimum is the uniform
+    rate D_n = 1 - A_server on every client, in both solvers."""
+    n = 12
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, 4e5), uplink_rate=np.full(n, 3e3),
+        downlink_rate=np.full(n, 1.2e4),
+        compute_latency=np.full(n, 2.0),
+        num_samples=np.full(n, 50.0),
+        label_coverage=np.full(n, 4.0),
+        train_loss=np.full(n, 0.7))
+    res = _assert_numpy_jax_agree(tel, a_server=0.55, d_max=0.8, delta=2.0)
+    np.testing.assert_allclose(res.dropout_rates, 0.45, atol=1e-6)
+    # makespan at the uniform point: every client finishes together
+    k = 4e5 * (1 / 3e3 + 1 / 1.2e4)
+    np.testing.assert_allclose(res.t_server, 2.0 + k * 0.55, rtol=1e-6)
+
+
 def test_regularizer_formula():
     rng = np.random.default_rng(1)
     tel = _tel(rng, 4)

@@ -160,6 +160,47 @@ def test_run_scheme_batched_bit_identical_to_loop():
         assert rl.participants == rb.participants
 
 
+@pytest.mark.parametrize("scheme", ["fedavg", "fedcs", "oort"])
+def test_baselines_batched_engine_matches_loop(scheme):
+    """Baselines ride the fused engine step too (dense all-ones masks,
+    non-participation as a 0 aggregation weight): history identical to the
+    per-client loop, params equal to float tolerance (summation order)."""
+    from repro.core.allocation import ClientTelemetry
+
+    n = 6
+    rng = np.random.default_rng(0)
+    params = _client_params(jax.random.PRNGKey(0), 1)[0]
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(params)))
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+    def ltf(p, idx, key):
+        return (jax.tree_util.tree_map(
+            lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+            1.0 / (idx + 1.0))
+
+    kw = dict(rounds=4, a_server=0.6, h=3, seed=0)
+    loop = run_scheme(scheme, params, tel, ltf, None, batched=False, **kw)
+    bat = run_scheme(scheme, params, tel, ltf, None, batched=True, **kw)
+    for x, y in zip(jax.tree_util.tree_leaves(loop.global_params),
+                    jax.tree_util.tree_leaves(bat.global_params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-7)
+    for rl, rb in zip(loop.history, bat.history):
+        assert rl.participants == rb.participants
+        assert rl.sim_time == rb.sim_time
+        assert rl.uploaded_fraction == pytest.approx(rb.uploaded_fraction,
+                                                     abs=1e-9)
+        assert rl.mean_loss == pytest.approx(rb.mean_loss, abs=1e-9)
+
+
 def test_batched_train_fn_fuses_training():
     """batched_train_fn path == per-client python training (same maths)."""
     from repro.core import FedDDServer, ProtocolConfig

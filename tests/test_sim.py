@@ -1,0 +1,354 @@
+"""Event-driven simulator (repro/sim): determinism, protocol equivalence,
+and policy behaviour.
+
+Pins the subsystem's three contracts:
+
+* determinism — same seed gives the identical event order, sim times, and
+  final parameters in any process (asserted via subprocess digests);
+* fidelity — the synchronous policy over a static network reproduces
+  core/protocol.py's Eq. (12) round times and global params EXACTLY;
+* policy semantics — deadline drops stragglers and finishes earlier,
+  async merges fixed-size buffers with staleness-decayed weights, and the
+  observed-telemetry LP re-solve adapts dropout when links fade.
+"""
+
+import hashlib
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import run_scheme
+from repro.core.allocation import ClientTelemetry
+from repro.sim import (AsyncPolicy, DeadlinePolicy, MarkovFadingNetwork,
+                       SimConfig, Simulator, StaticNetwork, SyncPolicy,
+                       TraceNetwork, run_sim)
+from repro.sim.engine import UPLOAD_DONE, EventQueue
+
+
+# --- shared fixtures ---------------------------------------------------------
+
+def _params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc0": {"w": jax.random.normal(k1, (20, 12)), "b": jnp.zeros(12)},
+        "fc1": {"w": jax.random.normal(k2, (12, 5)), "b": jnp.zeros(5)},
+    }
+
+
+def _tel(n, seed=0):
+    rng = np.random.default_rng(seed)
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(
+                           _params(jax.random.PRNGKey(0)))))
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+
+def _ltf(p, idx, key):
+    """Deterministic pseudo-training (no dataset needed)."""
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# --- engine ------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_schedule_seq():
+    q = EventQueue()
+    q.push(2.0, "b", 1)
+    q.push(1.0, "a", 2)
+    q.push(1.0, "a2", 3)      # same time: scheduling order breaks the tie
+    q.push(0.5, "z", 4)
+    got = [(q.pop().kind) for _ in range(4)]
+    assert got == ["z", "a", "a2", "b"]
+
+
+def test_simulator_clock_monotone_and_traced():
+    sim = Simulator()
+    sim.schedule(3.0, "x", 1)
+    sim.schedule(1.0, "y", 2)
+    ev = sim.step()
+    assert (ev.kind, sim.now) == ("y", 1.0)
+    with pytest.raises(ValueError):
+        sim.schedule_at(0.5, "past", 3)
+    sim.step()
+    assert sim.trace == [(1.0, "y", 2), (3.0, "x", 1)]
+    with pytest.raises(ValueError):
+        sim.advance_to(1.0)
+    sim.advance_to(10.0)
+    assert sim.now == 10.0
+
+
+def test_queue_clear_cancels_pending():
+    sim = Simulator()
+    sim.schedule(1.0, "a")
+    sim.schedule(2.0, "b")
+    cancelled = sim.queue.clear()
+    assert [e.kind for e in cancelled] == ["a", "b"]
+    assert not sim.queue
+
+
+# --- fidelity: sync + static == protocol.py ----------------------------------
+
+def test_sync_static_reproduces_protocol_eq12_exactly():
+    """The acceptance contract: event-driven sync over a static network is
+    bit-identical to the closed-form driver — Eq. (12) round times AND the
+    trained global parameters."""
+    n = 6
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(rounds=5, a_server=0.6, h=3, seed=0)
+    ref = run_scheme("feddd", params, tel, _ltf, None, **kw)
+    got = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"), **kw)
+    for rr, rg in zip(ref.history, got.history):
+        assert rr.sim_time == rg.sim_time          # exact, not approx
+        # per-round duration re-derived from absolute event times: one-ulp
+        # float-association slack, the cumulative clock stays exact
+        assert rr.sim_round_time == pytest.approx(rg.sim_round_time,
+                                                  rel=1e-12)
+        assert rr.uploaded_fraction == pytest.approx(rg.uploaded_fraction,
+                                                     abs=1e-12)
+        np.testing.assert_array_equal(rr.dropout_rates, rg.dropout_rates)
+    assert _trees_equal(ref.global_params, got.global_params)
+
+
+def test_run_scheme_sim_kwarg_routes_to_simulator():
+    n = 4
+    params = _params(jax.random.PRNGKey(1))
+    tel = _tel(n, seed=1)
+    res = run_scheme("feddd", params, tel, _ltf, None, sim=True,
+                     rounds=2, a_server=0.6, h=5, seed=0)
+    from repro.sim.runner import SimResult
+    assert isinstance(res, SimResult)
+    assert len(res.event_trace) == 3 * n * 2       # 3 events/client/round
+    with pytest.raises(ValueError, match="homogeneous"):
+        run_scheme("feddd", params, tel, _ltf, None, sim=True,
+                   client_params=[params] * n, rounds=1)
+
+
+# --- determinism across processes ---------------------------------------------
+
+_DIGEST_SNIPPET = r"""
+import hashlib, sys
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.allocation import ClientTelemetry
+from repro.sim import MarkovFadingNetwork, SimConfig, run_sim
+
+def params():
+    return {"fc0": {"w": jax.random.normal(jax.random.PRNGKey(0), (20, 12)),
+                    "b": jnp.zeros(12)},
+            "fc1": {"w": jax.random.normal(jax.random.PRNGKey(9), (12, 5)),
+                    "b": jnp.zeros(5)}}
+
+def tel(n):
+    rng = np.random.default_rng(0)
+    p = params()
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(p)))
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+def ltf(p, idx, key):
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+h = hashlib.sha256()
+for policy in ("sync", "deadline", "async"):
+    t = tel(5)
+    net = MarkovFadingNetwork(t, p_fade=0.3, p_recover=0.4,
+                              fade_factor=0.05, seed=7)
+    res = run_sim("feddd", params(), t, ltf, None,
+                  sim=SimConfig(policy=policy), network=net,
+                  rounds=3, a_server=0.6, h=2, seed=0)
+    times = np.asarray([e[0] for e in res.event_trace])
+    h.update(times.tobytes())
+    h.update(",".join(f"{e[1]}:{e[2]}" for e in res.event_trace).encode())
+    h.update(np.asarray([r.sim_time for r in res.history]).tobytes())
+    for leaf in jax.tree_util.tree_leaves(res.global_params):
+        h.update(np.asarray(leaf).tobytes())
+print(h.hexdigest())
+"""
+
+
+def test_deterministic_event_order_across_processes():
+    """Same seed => identical event order, sim_time, and final params in
+    independent processes (all three policies, fading network)."""
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    digests = []
+    for _ in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c", _DIGEST_SNIPPET],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu", "HOME": "/tmp"},
+            check=False)
+        assert out.returncode == 0, out.stderr[-2000:]
+        digests.append(out.stdout.strip())
+    assert digests[0] == digests[1]
+    assert len(digests[0]) == 64
+
+
+# --- policy semantics ---------------------------------------------------------
+
+def _straggler_trace_net(tel, n, fade_from=1, factor=50.0):
+    """Client 0's uplink collapses by ``factor`` from epoch ``fade_from``."""
+    epochs = 12
+    up = np.tile(tel.uplink_rate, (epochs, 1))
+    up[fade_from:, 0] /= factor
+    down = np.tile(tel.downlink_rate, (epochs, 1))
+    cmp_ = np.tile(tel.compute_latency, (epochs, 1))
+    return TraceNetwork(up, down, cmp_)
+
+
+def test_deadline_drops_straggler_and_finishes_earlier():
+    n = 6
+    params = _params(jax.random.PRNGKey(2))
+    tel = _tel(n, seed=3)
+    kw = dict(rounds=5, a_server=0.6, h=3, seed=0)
+    sync = run_sim("feddd", params, tel, _ltf, None,
+                   sim=SimConfig(policy="sync"),
+                   network=_straggler_trace_net(tel, n), **kw)
+    dl = run_sim("feddd", params, tel, _ltf, None,
+                 sim=SimConfig(policy="deadline"),
+                 network=_straggler_trace_net(tel, n), **kw)
+    assert all(r.participants == n for r in sync.history)
+    assert any(r.participants < n for r in dl.history)
+    assert all(r.participants >= 1 for r in dl.history)
+    assert dl.history[-1].sim_time < sync.history[-1].sim_time
+
+
+def test_async_buffer_and_staleness_scale():
+    n = 8
+    params = _params(jax.random.PRNGKey(3))
+    tel = _tel(n, seed=4)
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="async"),
+                  rounds=6, a_server=0.6, h=3, seed=0)
+    k = AsyncPolicy().resolved_buffer(n)
+    assert k == 2
+    assert all(r.participants == k for r in res.history)
+    times = [r.sim_time for r in res.history]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    # staleness decay: (1+s)^-alpha
+    pol = AsyncPolicy(alpha=0.5)
+    np.testing.assert_allclose(pol.staleness_scale(np.array([0, 1, 3])),
+                               [1.0, 2 ** -0.5, 0.5])
+
+
+def test_observed_telemetry_adapts_dropout_to_fading_link():
+    """The LP runs on OBSERVED rates: when client 0's uplink collapses, the
+    server's estimate tracks it down and pushes D_0 toward D_max."""
+    n = 6
+    params = _params(jax.random.PRNGKey(4))
+    tel = _tel(n, seed=5)
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  network=_straggler_trace_net(tel, n, fade_from=2),
+                  rounds=8, a_server=0.6, d_max=0.9, h=20, seed=0)
+    obs = res.observed_telemetry
+    assert obs.uplink_rate[0] < 0.2 * tel.uplink_rate[0]
+    d0 = np.asarray([r.dropout_rates[0] for r in res.history])
+    assert d0[0] < 0.1                 # pre-fade: cheap link, keep it all
+    assert d0[-1] > 0.6                # post-fade: shed most of the upload
+    assert np.all(np.diff(d0) >= -1e-9)  # monotone as the EWMA converges
+
+
+def test_static_exactness_of_markov_epoch0_and_memoisation():
+    tel = _tel(5, seed=6)
+    a = MarkovFadingNetwork(tel, seed=3)
+    b = MarkovFadingNetwork(tel, seed=3)
+    c0 = a.conditions(0)
+    np.testing.assert_array_equal(c0.uplink_rate, tel.uplink_rate)
+    # same seed => same chain, regardless of query order
+    ca, cb = a.conditions(4), b.conditions(4)
+    np.testing.assert_array_equal(ca.uplink_rate, cb.uplink_rate)
+    np.testing.assert_array_equal(a.conditions(2).uplink_rate,
+                                  b.conditions(2).uplink_rate)
+
+
+def test_sim_baselines_select_on_observed_telemetry():
+    n = 6
+    params = _params(jax.random.PRNGKey(5))
+    tel = _tel(n, seed=7)
+    res = run_sim("fedcs", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  rounds=2, a_server=0.5, h=5, seed=0)
+    assert all(0 < r.participants < n for r in res.history)
+    assert all(r.uploaded_fraction <= 0.5 + 1e-9 for r in res.history)
+
+
+def test_policy_horizons():
+    exp = np.array([1.0, 2.0, 3.0, 4.0])
+    assert SyncPolicy().horizon(exp) == float("inf")
+    d = DeadlinePolicy(quantile=0.5, slack=2.0)
+    assert d.horizon(exp) == pytest.approx(5.0)
+
+
+def test_async_rejects_selection_baselines():
+    """fedcs/oort are per-round selection baselines — no async analogue;
+    combining them must raise, not silently degenerate to fedavg."""
+    n = 4
+    params = _params(jax.random.PRNGKey(6))
+    tel = _tel(n, seed=8)
+    for scheme in ("fedcs", "oort"):
+        with pytest.raises(ValueError, match="async"):
+            run_sim(scheme, params, tel, _ltf, None,
+                    sim=SimConfig(policy="async"), rounds=1)
+
+
+def test_deadline_dropped_straggler_loss_stays_stale():
+    """The loss report ships WITH the upload: a client whose transfer was
+    abandoned must not update the server's loss view (no oracle leak into
+    the allocation LP / oort utilities)."""
+    n = 6
+    params = _params(jax.random.PRNGKey(7))
+    tel = _tel(n, seed=3)
+
+    counters = {i: 1.0 for i in range(n)}
+
+    def halving_ltf(p, idx, key):
+        """Loss halves every time a client trains: at round r every
+        freshly-reported loss is exactly 2^-r."""
+        counters[idx] *= 0.5
+        return p, counters[idx]
+
+    res = run_sim("feddd", params, tel, halving_ltf, None,
+                  sim=SimConfig(policy="deadline"),
+                  network=_straggler_trace_net(tel, n, factor=500.0),
+                  rounds=4, a_server=0.6, h=5, seed=0)
+    dropped = [r for r in res.history if r.participants < n]
+    assert dropped, "straggler never dropped — scenario broken"
+    for rec in res.history:
+        fresh = 2.0 ** -rec.round
+        if rec.participants == n:
+            assert rec.mean_loss == pytest.approx(fresh)
+        else:
+            # a leak would make mean_loss exactly the all-fresh value;
+            # stale entries (earlier, larger losses) keep it above it
+            assert rec.mean_loss > fresh * (1 + 1e-9)
