@@ -120,6 +120,7 @@ def run_experiment(
     hetero_specs: Optional[List] = None,
     per_class_eval: bool = False,
     seed: int = 0,
+    batched: bool = True,
 ):
     global_params, tel, ltf, ef, clients = setup_experiment(
         dataset, partition, num_clients=num_clients, num_train=num_train,
@@ -129,7 +130,7 @@ def run_experiment(
                       client_params=clients, rounds=rounds,
                       a_server=a_server, d_max=d_max, delta=delta, h=h,
                       selection=SelectionConfig(scheme=selection_scheme),
-                      seed=seed)
+                      seed=seed, batched=batched)
 
 
 def run_sim_experiment(
@@ -151,22 +152,25 @@ def run_sim_experiment(
     network_kw: Optional[Dict] = None,
     policy_kw: Optional[Dict] = None,
     eval_every: int = 1,
+    hetero_specs: Optional[List] = None,
 ):
     """The same experiment, time axis owned by the event-driven simulator
     (repro/sim): ``policy`` in {sync, deadline, async}, ``network`` in
-    {static, markov} (see repro.sim.network for trace-driven models)."""
+    {static, markov} (see repro.sim.network for trace-driven models).
+    ``hetero_specs`` builds a ragged-width fleet — the sim drives the
+    shape-grouped engine, so stragglers x ragged models compose."""
     from repro.sim import SimConfig, make_network, run_sim
 
     global_params, tel, ltf, ef, clients = setup_experiment(
         dataset, partition, num_clients=num_clients, num_train=num_train,
-        num_test=num_test, seed=seed)
-    assert clients is None, "sim runner is homogeneous-only"
+        num_test=num_test, hetero_specs=hetero_specs, seed=seed)
     net = make_network(network, tel, seed=seed, **(network_kw or {}))
     sim = SimConfig(policy=policy, policy_kw=policy_kw or {},
                     eval_every=eval_every)
     return run_sim(scheme, global_params, tel, ltf, ef, sim=sim,
-                   network=net, rounds=rounds, a_server=a_server,
-                   d_max=d_max, delta=delta, h=h, seed=seed)
+                   network=net, client_params=clients, rounds=rounds,
+                   a_server=a_server, d_max=d_max, delta=delta, h=h,
+                   seed=seed)
 
 
 def csv_row(name: str, wall_s: float, derived: str) -> str:

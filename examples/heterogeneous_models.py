@@ -2,7 +2,13 @@
 (Table 3) federate into one full-width global model; the Eq. (21) coverage
 rectification keeps rarely-covered channels uploaded.
 
-    PYTHONPATH=src python examples/heterogeneous_models.py
+Ragged fleets run the shape-grouped engine by default — clients partitioned
+by sub-model shape, one jit-compiled device step per round
+(core/round_engine.py GroupedRoundEngine).  ``--loop`` forces the
+per-client reference loop (bit-identical results, just slower);
+``benchmarks/heterogeneous.py --perf`` measures the gap.
+
+    PYTHONPATH=src python examples/heterogeneous_models.py [--loop]
 """
 
 import argparse
@@ -25,6 +31,9 @@ from repro.fl import (HETERO_A_SPECS, init_cnn_spec,  # noqa: E402
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--loop", action="store_true",
+                    help="force the per-client reference loop instead of "
+                         "the shape-grouped engine")
     args = ap.parse_args()
 
     train, test = make_dataset("cifar10", num_train=3000, num_test=800)
@@ -48,9 +57,12 @@ def main():
 
     ef = make_eval_fn(specs[0], test)
     cfg = ProtocolConfig(scheme="feddd", rounds=args.rounds,
-                         a_server=0.6, h=5)
+                         a_server=0.6, h=5, batched=not args.loop)
     server = FedDDServer(global_params, cfg, tel, client_params=clients)
-    print("heterogeneous:", server.heterogeneous)
+    executor = server.executor_kind
+    print(f"heterogeneous: {server.heterogeneous}  "
+          f"(executor: {executor} — "
+          f"{'per-client reference loop' if executor == 'loop' else 'one fused step per round over shape groups'})")
     # show coverage rates of the widest conv layer
     name = next(k for k in server.cr if "conv4" in k or "conv3" in k)
     print(f"coverage of {name}: "
@@ -59,7 +71,8 @@ def main():
     for r in res.history:
         print(f"round {r.round}: acc={r.metrics['accuracy']:.3f} "
               f"D=[{r.dropout_rates.min():.2f},{r.dropout_rates.max():.2f}] "
-              f"uploaded={r.uploaded_fraction:.0%}")
+              f"uploaded={r.uploaded_fraction:.0%} "
+              f"host={r.host_wall_time:.2f}s")
 
 
 if __name__ == "__main__":

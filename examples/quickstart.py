@@ -10,6 +10,11 @@ Homogeneous FedDD runs go through the batched round engine
 (core/round_engine.py) by default — one jit-compiled device step per round.
 ``--loop`` forces the per-client Python loop (bit-identical results, just
 slower); ``benchmarks/perf_federated.py`` measures the gap.
+
+Heterogeneous fleets (ragged width-sliced sub-models, paper §6.4) run the
+same way since the shape-grouped engine: one fused step per shape group —
+see ``examples/heterogeneous_models.py`` and
+``benchmarks/heterogeneous.py --perf`` for that A/B.
 """
 
 import argparse

@@ -19,8 +19,10 @@ routing table in the protocol module docstring.
 
 from repro.core.allocation import (AllocationResult, ClientTelemetry,
                                    regularizer, solve_dropout_rates,
-                                   solve_dropout_rates_jax)
+                                   solve_dropout_rates_jax,
+                                   solve_dropout_rates_with)
 from repro.core.aggregation import (aggregate_sparse,
+                                    aggregate_sparse_grouped,
                                     aggregate_sparse_stacked,
                                     client_update_full,
                                     client_update_sparse, fedavg_aggregate)
@@ -29,8 +31,11 @@ from repro.core.convergence import (BoundInputs, estimate_epsilon, eta_max,
 from repro.core.importance import channel_importance, elementwise_importance
 from repro.core.protocol import (FedDDServer, ProtocolConfig, RoundRecord,
                                  RunResult, run_scheme)
-from repro.core.round_engine import (BatchedRoundEngine, RoundOutputs,
-                                     make_batched_train_fn, stack_pytrees,
+from repro.core.round_engine import (BatchedRoundEngine, GroupBatch,
+                                     GroupedFleetState, GroupedRoundEngine,
+                                     GroupedRoundOutputs, RoundOutputs,
+                                     make_batched_train_fn, slice_pytree,
+                                     stack_pytrees, unstack_groups,
                                      unstack_pytree)
 from repro.core.selection import (SelectionConfig, apply_mask, build_masks,
                                   build_masks_batched, mask_density)

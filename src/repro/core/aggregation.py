@@ -75,6 +75,66 @@ def aggregate_sparse_stacked(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def aggregate_sparse_grouped(
+    group_params: Sequence,
+    group_masks: Sequence,
+    group_indices: Sequence[jax.Array],
+    client_weights: Sequence[float] | jax.Array,
+    global_template,
+    *,
+    prev_global: Optional[object] = None,
+    use_kernel: bool = False,
+):
+    """Eq. (4) over a shape-GROUPED ragged fleet: scatter every group's
+    stacked sub-model leaves into a full-width client canvas, then run the
+    shared leaf reduction.
+
+    The heterogeneous reference loop zero-pads each client to global widths
+    and stacks all N padded clients before reducing
+    (:meth:`repro.core.protocol.FedDDServer._pad_to_global` +
+    :func:`aggregate_sparse`).  This function builds the IDENTICAL
+    (N, *global_leaf) stacks — group rows land at their fleet positions, the
+    un-owned tail channels stay zero (a zero mask contributes to neither
+    Eq. (4) sum) — and feeds them to the same :func:`_leaf_masked_mean`, so
+    grouped aggregation is bit-identical to the padded per-client loop.
+
+    Args:
+      group_params: per group, a stacked pytree with leaves (n_g, *local).
+      group_masks: per group, channel-shaped stacked masks
+        (n_g, 1, ..., C_local, ..., 1).
+      group_indices: per group, the members' canvas rows as an (n_g,) int
+        array (fleet positions; may be traced).
+      client_weights: (N,) aggregation weights m_n indexed by canvas row —
+        zero drops that client from both sums.
+      global_template: pytree whose leaves carry the full-model shapes.
+      prev_global: pytree used to fill positions no client uploaded.
+
+    Returns the aggregated full-width global pytree.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(global_template)
+    gprev = (jax.tree_util.tree_leaves(prev_global)
+             if prev_global is not None else [None] * len(g_leaves))
+    leaves = [jax.tree_util.tree_leaves(p) for p in group_params]
+    mleaves = [jax.tree_util.tree_leaves(m) for m in group_masks]
+    w = jnp.asarray(client_weights, jnp.float32)
+    n = w.shape[0]
+
+    out = []
+    for li, gl in enumerate(g_leaves):
+        stack_w = jnp.zeros((n,) + gl.shape, gl.dtype)
+        stack_m = jnp.zeros((n,) + gl.shape, gl.dtype)
+        for gi, idx in enumerate(group_indices):
+            lw = leaves[gi][li]                            # (n_g, *local)
+            lm = jnp.broadcast_to(mleaves[gi][li], lw.shape)
+            rows = (jnp.asarray(idx),) + tuple(slice(0, s)
+                                               for s in lw.shape[1:])
+            stack_w = stack_w.at[rows].set(lw.astype(gl.dtype))
+            stack_m = stack_m.at[rows].set(lm.astype(gl.dtype))
+        out.append(_leaf_masked_mean(stack_w, stack_m, w, gprev[li],
+                                     use_kernel))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def aggregate_sparse(
     client_params: Sequence,
     client_masks: Sequence,

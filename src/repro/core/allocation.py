@@ -318,3 +318,55 @@ def solve_dropout_rates_jax(
     _, d_star = inner_obj(t_star)
     makespan = jnp.max(tc + k * (1.0 - d_star))
     return d_star, makespan
+
+
+ALLOCATORS = ("numpy", "jax")
+
+
+def solve_dropout_rates_with(
+    allocator: str,
+    tel: ClientTelemetry,
+    *,
+    a_server: float,
+    d_max: float,
+    delta: float,
+    global_model_bytes: Optional[float] = None,
+    num_iters: int = 96,
+) -> AllocationResult:
+    """Allocator dispatch: the numpy reference or the vectorised JAX solver.
+
+    Both minimise the same Eq. (16)/(17) LP; ``"jax"`` runs the
+    golden-section search as a ``lax.fori_loop`` (jit-compiled, fixed
+    iteration count) and is the stepping stone toward folding the
+    allocation into a multi-round ``lax.scan``.  Returns the same
+    :class:`AllocationResult` host struct either way; the budget equality
+    ``sum U_n (1-D_n) = A_server sum U_n`` holds for both (the parity test
+    in tests/test_allocation.py pins it).
+    """
+    if allocator == "numpy":
+        return solve_dropout_rates(
+            tel, a_server=a_server, d_max=d_max, delta=delta,
+            global_model_bytes=global_model_bytes)
+    if allocator != "jax":
+        raise ValueError(f"unknown allocator {allocator!r}; "
+                         f"expected one of {ALLOCATORS}")
+    d_dev, t_dev = solve_dropout_rates_jax(
+        jnp.asarray(tel.model_bytes, jnp.float32),
+        jnp.asarray(tel.uplink_rate, jnp.float32),
+        jnp.asarray(tel.downlink_rate, jnp.float32),
+        jnp.asarray(tel.compute_latency, jnp.float32),
+        jnp.asarray(tel.num_samples, jnp.float32),
+        jnp.asarray(tel.label_coverage, jnp.float32),
+        jnp.asarray(tel.train_loss, jnp.float32),
+        a_server=a_server, d_max=d_max, delta=delta,
+        global_model_bytes=global_model_bytes, num_iters=num_iters)
+    d = np.clip(np.asarray(d_dev, np.float64), 0.0, d_max)
+    u = tel.model_bytes.astype(np.float64)
+    gmb = float(global_model_bytes if global_model_bytes is not None
+                else np.max(u))
+    makespan = float(t_dev)
+    obj = makespan + delta * float(np.dot(regularizer(tel, gmb), d))
+    budget = (1.0 - a_server) * float(np.sum(u))
+    feasible = bool(abs(float(np.dot(u, d)) - budget)
+                    <= 1e-4 * max(float(np.sum(u)), 1.0))
+    return AllocationResult(d, makespan, obj, feasible)

@@ -10,33 +10,49 @@ transformer federation (examples/federated_pods.py uses the shard_map
 collectives in core/sparse_collective.py instead, for on-device execution;
 this driver is the faithful parameter-server formulation).
 
-Three execution paths share the same maths (see tests/test_round_engine.py
-and tests/test_sim.py).  Routing table — which path handles which scenario:
+Round execution is a strategy behind one executor interface
+(:class:`_RoundExecutor`): every strategy runs the identical Algorithm-1
+maths, they differ only in how the device work is dispatched (see
+tests/test_round_engine.py, tests/test_grouped_engine.py, tests/test_sim.py
+for the equivalence contracts).  Routing table — which executor handles
+which scenario:
 
 ==========================  =================================================
-scenario                    path
+scenario                    executor
 ==========================  =================================================
-homogeneous feddd           **batched engine** (core/round_engine.py): one
-                            jit-compiled device step per round; pass
-                            ``batched_train_fn`` to fuse local training too
-homogeneous fedavg /        **batched engine**, ``dense_masks`` mode:
-fedcs / oort                all-ones masks, non-participants carried as
-                            0-weights in the stacked Eq. (4) aggregation
-heterogeneous (ragged       **per-client loop**: HeteroFL-style width
-widths), track_epsilon,     slicing, per-client mask pytrees
-``batched=False``
+homogeneous (any scheme)    **batched engine** (core/round_engine.py): one
+                            jit-compiled device step per round; feddd may
+                            pass ``batched_train_fn`` to fuse local training
+                            too; fedavg / fedcs / oort run ``dense_masks``
+                            mode with non-participants as 0-weights in the
+                            stacked Eq. (4) aggregation
+heterogeneous (ragged       **grouped engine** (core/round_engine.py
+widths, any scheme)         GroupedRoundEngine): clients partitioned by
+                            sub-model shape (repro.fl.heterogeneity), one
+                            fused step per shape census — coverage-aware
+                            batched masks at native widths, scatter into the
+                            full-width Eq. (4) canvas, local-width client
+                            updates
+track_epsilon, or           **reference loop**: the per-client Python loop,
+``batched=False``           kept as the bit-exactness oracle (grouped and
+                            batched engines are pinned against it) and for
+                            the Assumption-3 epsilon estimator's per-client
+                            mask pytrees
 dynamic networks /          **sim runner** (repro/sim/runner.py): pass
 stragglers / deadline or    ``sim=``/``network=`` to :func:`run_scheme`;
 async serving               event-driven clock, observed-telemetry LP
-                            re-solve, sync / deadline / async policies
-                            (homogeneous models only)
+                            re-solve, sync / deadline / async policies;
+                            ragged fleets ride the grouped engine there too
 ==========================  =================================================
 
-* The batched engine is bit-identical to the loop for FedDD and matches it
-  to float tolerance for the baselines (summation order differs).
-  Benchmark: ``PYTHONPATH=src python benchmarks/perf_federated.py``.
+* The batched and grouped engines are bit-identical to the reference loop
+  for FedDD and match it to float tolerance for the baselines (summation
+  order differs).  Benchmarks: ``PYTHONPATH=src python
+  benchmarks/perf_federated.py`` (homogeneous), ``PYTHONPATH=src python
+  benchmarks/heterogeneous.py --perf`` (ragged).
 * The sim runner with the synchronous policy over a static network
-  reproduces this driver's Eq. (12) round times exactly.
+  reproduces this driver's Eq. (12) round times exactly — for homogeneous
+  AND ragged fleets.
 
 Simulated wall-clock follows the paper's system model exactly
 (t = t_cmp + U(1-D)/r_u + U(1-D)/r_d; the round takes max over participating
@@ -50,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -59,8 +75,8 @@ import jax.numpy as jnp
 
 from repro.core import (aggregation, baselines, coverage as cov_mod,
                         round_engine, selection)
-from repro.core.allocation import (AllocationResult, ClientTelemetry,
-                                   solve_dropout_rates)
+from repro.core.allocation import (ALLOCATORS, AllocationResult,
+                                   ClientTelemetry, solve_dropout_rates_with)
 from repro.core.convergence import estimate_epsilon
 
 Params = object  # pytree
@@ -78,13 +94,21 @@ class ProtocolConfig:
     rounds: int = 50
     seed: int = 0
     track_epsilon: bool = False      # Assumption-3 estimator (costly)
-    batched: bool = True             # batched round engine for homogeneous
-                                     # feddd runs (falls back to the loop
-                                     # for hetero / track_epsilon / baselines)
+    batched: bool = True             # engine-backed execution (homogeneous
+                                     # batched engine / ragged grouped
+                                     # engine); False forces the reference
+                                     # per-client loop
+    allocator: str = "numpy"         # Eq. (16)/(17) LP solver: "numpy"
+                                     # (exact reference) or "jax" (jit-able
+                                     # fori_loop golden section; precursor
+                                     # to the multi-round lax.scan)
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
             raise ValueError(f"unknown scheme {self.scheme!r}")
+        if self.allocator not in ALLOCATORS:
+            raise ValueError(f"unknown allocator {self.allocator!r}; "
+                             f"expected one of {ALLOCATORS}")
 
 
 @dataclasses.dataclass
@@ -143,6 +167,247 @@ def _tree_bytes(params) -> int:
                for l in jax.tree_util.tree_leaves(params))
 
 
+class _RoundData(NamedTuple):
+    """What one executed round reports back to the shared driver loop."""
+
+    losses: np.ndarray               # server-side loss view after the round
+    uploaded_bytes: float            # actual bytes uploaded this round
+    active: np.ndarray               # (N,) bool: clients on the Eq. (12) clock
+    epsilon: Optional[float]         # Assumption-3 estimate (loop only)
+
+
+class _RoundExecutor:
+    """One round-execution strategy.
+
+    The server's :meth:`FedDDServer.run` owns everything scheme-agnostic —
+    the RNG schedule, the allocation LP, the Eq. (12) clock, and history —
+    and delegates the round's device math (training dispatch, masks,
+    aggregation, client updates) to one of these.  All strategies implement
+    the identical Algorithm-1 maths; the engine-backed ones are pinned
+    bit-identical (feddd) / float-close (baselines) to the reference loop.
+    """
+
+    def __init__(self, server: "FedDDServer", local_train_fn,
+                 batched_train_fn):
+        self.srv = server
+        self.local_train_fn = local_train_fn
+        self.batched_train_fn = batched_train_fn
+
+    def run_round(self, t: int, rk: jax.Array, losses: np.ndarray,
+                  d_used: np.ndarray) -> _RoundData:
+        raise NotImplementedError
+
+    def finalize(self) -> None:
+        """Sync any executor-held client state back into server.clients."""
+
+
+class _EngineExecutor(_RoundExecutor):
+    """Homogeneous fleets: one BatchedRoundEngine jit step per round.
+
+    Client state stays STACKED across rounds (lazy device slices feed the
+    per-client python trainer; nothing re-stacks the old params) and syncs
+    back into ``server.clients`` on :meth:`finalize`.  Baselines run in
+    ``dense_masks`` mode with non-participation as a 0 aggregation weight.
+    With ``batched_train_fn`` local training fuses into the device side too;
+    for baselines the vmapped trainer runs every row, so non-participants'
+    results are masked back to their stale params/losses — reported losses
+    and the aggregate reflect actual participation.
+    """
+
+    def __init__(self, server, local_train_fn, batched_train_fn):
+        super().__init__(server, local_train_fn, batched_train_fn)
+        self.engine = round_engine.BatchedRoundEngine(server.cfg.selection)
+        self.weights = np.asarray(
+            [cs.num_samples for cs in server.clients], float)
+        self.stacked = round_engine.stack_pytrees(
+            [cs.params for cs in server.clients])
+
+    def run_round(self, t, rk, losses, d_used) -> _RoundData:
+        srv, cfg = self.srv, self.srv.cfg
+        n = srv.tel.num_clients
+        dense = cfg.scheme != "feddd"
+        part = (np.ones(n, bool) if not dense
+                else srv._participants(losses))
+        if self.batched_train_fn is not None:
+            stacked_new, loss_dev = self.batched_train_fn(self.stacked, rk)
+            if dense:
+                # Non-participants must not train this round: keep their
+                # stale params out of the aggregate and their stale losses
+                # in the server's view (the vmapped trainer computed every
+                # row; participation masks the results).
+                pvec = jnp.asarray(part)
+                stacked_new = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        pvec.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new, old),
+                    stacked_new, self.stacked)
+                loss_dev = jnp.where(pvec, jnp.asarray(loss_dev),
+                                     jnp.asarray(losses))
+        else:
+            per_client = round_engine.unstack_pytree(self.stacked, n)
+            new_list: List[Params] = [None] * n
+            loss_dev: List = [None] * n
+            for i, p_i in enumerate(per_client):
+                if part[i]:
+                    p, l = self.local_train_fn(p_i, i,
+                                               jax.random.fold_in(rk, i))
+                else:           # baseline non-participant: stale state
+                    p, l = p_i, losses[i]
+                new_list[i] = p
+                loss_dev[i] = l
+            stacked_new = round_engine.stack_pytrees(new_list)
+        out = self.engine.step(self.stacked, stacked_new,
+                               srv.global_params, d_used,
+                               self.weights * part, rk,
+                               full_round=(t % cfg.h == 0) or dense,
+                               dense_masks=dense)
+        srv.global_params = out.global_params
+        self.stacked = out.client_params
+        # the ONE device->host transfer of the round
+        dens, loss_host = jax.device_get((out.densities, loss_dev))
+        new_losses = np.asarray(loss_host, float)
+        uploaded = float(np.dot(np.asarray(dens, float) * part,
+                                srv.tel.model_bytes))
+        return _RoundData(new_losses, uploaded, part, None)
+
+    def finalize(self) -> None:
+        n = self.srv.tel.num_clients
+        for cs, p in zip(self.srv.clients,
+                         round_engine.unstack_pytree(self.stacked, n)):
+            cs.params = p
+
+
+class _GroupedEngineExecutor(_RoundExecutor):
+    """Ragged fleets: one GroupedRoundEngine jit step per round.
+
+    Clients are partitioned by sub-model shape (repro.fl.heterogeneity
+    .group_by_shape); each group's state stays stacked across rounds.
+    Coverage pytrees are computed once per group (members share widths, so
+    they share the CR slice) and the per-client mask keys fold the members'
+    FLEET positions — grouped rounds are bit-identical to the per-client
+    reference loop (tests/test_grouped_engine.py).
+    """
+
+    def __init__(self, server, local_train_fn, batched_train_fn):
+        super().__init__(server, local_train_fn, batched_train_fn)
+        from repro.fl.heterogeneity import group_by_shape  # fl -> core dep
+        cfg = server.cfg
+        self.weights = np.asarray(
+            [cs.num_samples for cs in server.clients], float)
+        client_params = [cs.params for cs in server.clients]
+        groups = group_by_shape(client_params)
+        coverage = [
+            cov_mod.coverage_pytree(client_params[g.indices[0]],
+                                    server.cr, cfg.selection.channel_axis)
+            for g in groups
+        ]
+        self.fleet = round_engine.GroupedFleetState(
+            groups, coverage, client_params, cfg.selection,
+            server.tel.num_clients)
+
+    def run_round(self, t, rk, losses, d_used) -> _RoundData:
+        srv, cfg = self.srv, self.srv.cfg
+        n = srv.tel.num_clients
+        dense = cfg.scheme != "feddd"
+        part = (np.ones(n, bool) if not dense
+                else srv._participants(losses))
+        loss_dev = self.fleet.train(self.local_train_fn, rk, part, losses,
+                                    d_used, dense=dense)
+        srv.global_params, densities = self.fleet.step(
+            srv.global_params, self.weights * part, rk,
+            full_round=(t % cfg.h == 0) or dense, dense=dense)
+        dens, loss_host = jax.device_get((densities, loss_dev))
+        new_losses = np.asarray(loss_host, float)
+        uploaded = float(np.dot(np.asarray(dens, float) * part,
+                                srv.tel.model_bytes))
+        return _RoundData(new_losses, uploaded, part, None)
+
+    def finalize(self) -> None:
+        for cs, p in zip(self.srv.clients, self.fleet.export()):
+            cs.params = p
+
+
+class _ReferenceLoopExecutor(_RoundExecutor):
+    """The per-client Python loop — Algorithm 1 verbatim.
+
+    Kept as the bit-exactness oracle for both engines, and as the only
+    path producing the per-client mask pytrees ``track_epsilon`` needs.
+    Slow by design: per-client build_masks dispatches, per-leaf ``float``
+    host syncs, list-based padding and aggregation.
+    """
+
+    def run_round(self, t, rk, losses, d_used) -> _RoundData:
+        srv, cfg = self.srv, self.srv.cfg
+        n = srv.tel.num_clients
+        losses = losses.copy()
+        part = srv._participants(losses)
+        eps_val = None
+
+        # --- Step 1: local training (participants only for baselines;
+        # in FedDD everyone trains — that is the paper's key point).
+        new_params: List[Params] = [None] * n
+        for i, cs in enumerate(srv.clients):
+            if cfg.scheme == "feddd" or part[i]:
+                p, l = self.local_train_fn(cs.params, i,
+                                           jax.random.fold_in(rk, i))
+                new_params[i] = p
+                losses[i] = float(l)
+
+        # --- Steps 2-3: mask building + (simulated) upload
+        uploaded_bytes = 0.0
+        client_masks: List[Params] = [None] * n
+        if cfg.scheme == "feddd":
+            for i, cs in enumerate(srv.clients):
+                cov = (cov_mod.coverage_pytree(cs.params, srv.cr,
+                                               cfg.selection.channel_axis)
+                       if srv.heterogeneous else None)
+                m = selection.build_masks(
+                    cs.params, new_params[i],
+                    jnp.asarray(d_used[i], jnp.float32),
+                    config=cfg.selection, coverage=cov,
+                    rng=jax.random.fold_in(rk, 10_000 + i))
+                client_masks[i] = m
+                dens = float(selection.mask_density(new_params[i], m))
+                uploaded_bytes += dens * float(srv.tel.model_bytes[i])
+        else:
+            for i in range(n):
+                if part[i]:
+                    client_masks[i] = jax.tree_util.tree_map(
+                        lambda w: jnp.ones((1,) * w.ndim, w.dtype),
+                        new_params[i])
+                    uploaded_bytes += float(srv.tel.model_bytes[i])
+
+        # --- Step 4: aggregation (over uploaded clients only)
+        idxs = [i for i in range(n) if client_masks[i] is not None]
+        agg_params = [srv._pad_to_global(new_params[i], i) for i in idxs]
+        agg_masks = [srv._pad_mask_to_global(client_masks[i],
+                                             new_params[i]) for i in idxs]
+        agg_weights = [srv.clients[i].num_samples for i in idxs]
+        if cfg.track_epsilon:
+            eps_val = float(estimate_epsilon(agg_params, agg_masks))
+        srv.global_params = aggregation.aggregate_sparse(
+            agg_params, agg_masks, agg_weights,
+            prev_global=srv.global_params)
+
+        # --- Steps 6-7: download + local model update
+        full_round = (t % cfg.h == 0) or cfg.scheme != "feddd"
+        for i, cs in enumerate(srv.clients):
+            if new_params[i] is None:      # non-participant (baselines)
+                if full_round:
+                    cs.params = srv._slice_to_local(cs.params)
+                continue
+            if full_round or client_masks[i] is None:
+                cs.params = srv._slice_to_local(new_params[i],
+                                                use_global=True)
+            else:
+                g_local = srv._slice_like(srv.global_params, new_params[i])
+                cs.params = aggregation.client_update_sparse(
+                    g_local, new_params[i], client_masks[i])
+
+        active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
+        return _RoundData(losses, uploaded_bytes, active, eps_val)
+
+
 class FedDDServer:
     """Parameter server for FedDD + the three baselines."""
 
@@ -175,8 +440,9 @@ class FedDDServer:
 
     def allocate(self, losses: np.ndarray) -> AllocationResult:
         tel = dataclasses.replace(self.tel, train_loss=losses)
-        return solve_dropout_rates(
-            tel, a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+        return solve_dropout_rates_with(
+            self.cfg.allocator, tel,
+            a_server=self.cfg.a_server, d_max=self.cfg.d_max,
             delta=self.cfg.delta,
             global_model_bytes=_tree_bytes(self.global_params))
 
@@ -191,20 +457,42 @@ class FedDDServer:
             return baselines.select_oort(tel, a_server=self.cfg.a_server)
         return np.ones(self.tel.num_clients, bool)   # feddd: everyone
 
-    # -- the full loop --------------------------------------------------------
+    # -- executor routing -----------------------------------------------------
 
-    def _use_engine(self, batched_train_fn) -> bool:
-        """Batched engine serves every homogeneous scheme (baselines run
-        in dense_masks mode with non-participation as 0-weights);
-        track_epsilon needs the per-client mask pytrees of the loop path."""
-        ok = (self.cfg.batched and not self.heterogeneous
-              and not self.cfg.track_epsilon)
-        if batched_train_fn is not None and not (
-                ok and self.cfg.scheme == "feddd"):
+    def _executor_kind(self, batched_train_fn) -> str:
+        """Route a run to its executor (see the module routing table).
+
+        ``track_epsilon`` needs the reference loop's per-client mask
+        pytrees; ``batched=False`` forces the loop as the oracle.  A
+        homogeneous engine run may fuse training via ``batched_train_fn``
+        (any scheme — baselines mask non-participants); the grouped and
+        loop paths cannot accept it (client data shards are ragged /
+        per-client by construction).
+        """
+        if self.cfg.track_epsilon or not self.cfg.batched:
+            kind = "loop"
+        elif self.heterogeneous:
+            kind = "grouped"
+        else:
+            kind = "engine"
+        if batched_train_fn is not None and kind != "engine":
             raise ValueError(
-                "batched_train_fn requires a homogeneous feddd run with "
+                "batched_train_fn requires a homogeneous run with "
                 "batched=True and track_epsilon=False")
-        return ok
+        return kind
+
+    _EXECUTORS = {"engine": _EngineExecutor,
+                  "grouped": _GroupedEngineExecutor,
+                  "loop": _ReferenceLoopExecutor}
+
+    @property
+    def executor_kind(self) -> str:
+        """The executor a plain ``run(local_train_fn)`` will route to —
+        "engine" (homogeneous batched), "grouped" (ragged fleet), or
+        "loop" (the per-client reference)."""
+        return self._executor_kind(None)
+
+    # -- the full run ---------------------------------------------------------
 
     def run(self,
             local_train_fn: Optional[Callable[[Params, int, jax.Array],
@@ -219,9 +507,9 @@ class FedDDServer:
             (params, loss)`` — required unless ``batched_train_fn`` given.
           batched_train_fn: optional ``(stacked_params, rng) ->
             (stacked_params, (N,) losses)`` operating on client-STACKED
-            pytrees; when provided (homogeneous feddd only) local training
-            fuses into the device-side round and client state stays stacked
-            across rounds.
+            pytrees; when provided (homogeneous engine runs only) local
+            training fuses into the device-side round and client state
+            stays stacked across rounds.
         """
         cfg = self.cfg
         rounds = rounds or cfg.rounds
@@ -233,150 +521,31 @@ class FedDDServer:
         history: List[RoundRecord] = []
         full_bytes = float(np.sum(self.tel.model_bytes))
 
-        use_engine = self._use_engine(batched_train_fn)
-        engine = (round_engine.BatchedRoundEngine(cfg.selection)
-                  if use_engine else None)
-        weights = np.asarray([cs.num_samples for cs in self.clients], float)
-        # Engine path: client state stays STACKED across rounds (lazy device
-        # slices feed the per-client python trainer; nothing re-stacks the
-        # old params) and syncs back into self.clients after the last round.
-        stacked = (round_engine.stack_pytrees(
-                       [cs.params for cs in self.clients])
-                   if use_engine else None)
+        kind = self._executor_kind(batched_train_fn)
+        executor = self._EXECUTORS[kind](self, local_train_fn,
+                                         batched_train_fn)
 
         for t in range(1, rounds + 1):
             t0 = time.perf_counter()
             self.rng, rk = jax.random.split(self.rng)
-            eps_val = None
+            d_used = self.dropout.copy()      # D_t: what uploads use
 
-            if use_engine:
-                # ---- batched path: one fused device step per round ------
-                dense = cfg.scheme != "feddd"
-                part = (np.ones(n, bool) if not dense
-                        else self._participants(losses))
-                d_used = self.dropout.copy()      # D_t: what uploads use
-                if batched_train_fn is not None:
-                    stacked_new, loss_dev = batched_train_fn(stacked, rk)
-                else:
-                    per_client = round_engine.unstack_pytree(stacked, n)
-                    new_list: List[Params] = [None] * n
-                    loss_dev: List = [None] * n
-                    for i, p_i in enumerate(per_client):
-                        if part[i]:
-                            p, l = local_train_fn(p_i, i,
-                                                  jax.random.fold_in(rk, i))
-                        else:       # baseline non-participant: stale state
-                            p, l = p_i, losses[i]
-                        new_list[i] = p
-                        loss_dev[i] = l
-                    stacked_new = round_engine.stack_pytrees(new_list)
-                out = engine.step(stacked, stacked_new,
-                                  self.global_params, d_used,
-                                  weights * part, rk,
-                                  full_round=(t % cfg.h == 0) or dense,
-                                  dense_masks=dense)
-                self.global_params = out.global_params
-                stacked = out.client_params
-                # the ONE device->host transfer of the round
-                dens, loss_host = jax.device_get((out.densities, loss_dev))
-                losses = np.asarray(loss_host, float)
-                uploaded_bytes = float(
-                    np.dot(np.asarray(dens, float) * part,
-                           self.tel.model_bytes))
-                if not dense:
-                    alloc = self.allocate(np.maximum(losses, 1e-6))
-                    self.dropout = alloc.dropout_rates
-                sim_time, round_t, metrics = self._finish_round(
-                    part, sim_time, eval_fn, d_used)
-                history.append(self._record(t, t0, sim_time, round_t,
-                                            losses, uploaded_bytes,
-                                            full_bytes, part, eps_val,
-                                            metrics))
-                continue
-
-            # ---- per-client loop path -----------------------------------
-            part = self._participants(losses)
-            d_used = self.dropout.copy()          # D_t: what uploads use
-
-            # --- Step 1: local training (participants only for baselines;
-            # in FedDD everyone trains — that is the paper's key point).
-            new_params: List[Params] = [None] * n
-            for i, cs in enumerate(self.clients):
-                if cfg.scheme == "feddd" or part[i]:
-                    p, l = local_train_fn(cs.params, i,
-                                          jax.random.fold_in(rk, i))
-                    new_params[i] = p
-                    losses[i] = float(l)
-
-            # --- Steps 2-3: mask building + (simulated) upload
-            uploaded_bytes = 0.0
-            client_masks: List[Params] = [None] * n
-            if cfg.scheme == "feddd":
-                for i, cs in enumerate(self.clients):
-                    cov = (cov_mod.coverage_pytree(cs.params, self.cr,
-                                                   cfg.selection.channel_axis)
-                           if self.heterogeneous else None)
-                    m = selection.build_masks(
-                        cs.params, new_params[i],
-                        jnp.asarray(self.dropout[i], jnp.float32),
-                        config=cfg.selection, coverage=cov,
-                        rng=jax.random.fold_in(rk, 10_000 + i))
-                    client_masks[i] = m
-                    dens = float(selection.mask_density(new_params[i], m))
-                    uploaded_bytes += dens * float(self.tel.model_bytes[i])
-            else:
-                for i in range(n):
-                    if part[i]:
-                        client_masks[i] = jax.tree_util.tree_map(
-                            lambda w: jnp.ones((1,) * w.ndim, w.dtype),
-                            new_params[i])
-                        uploaded_bytes += float(self.tel.model_bytes[i])
-
-            # --- Step 4: aggregation (over uploaded clients only)
-            idxs = [i for i in range(n) if client_masks[i] is not None]
-            agg_params = [self._pad_to_global(new_params[i], i) for i in idxs]
-            agg_masks = [self._pad_mask_to_global(client_masks[i],
-                                                  new_params[i]) for i in idxs]
-            agg_weights = [self.clients[i].num_samples for i in idxs]
-            if cfg.track_epsilon:
-                eps_val = float(estimate_epsilon(agg_params, agg_masks))
-            self.global_params = aggregation.aggregate_sparse(
-                agg_params, agg_masks, agg_weights,
-                prev_global=self.global_params)
+            rd = executor.run_round(t, rk, losses, d_used)
+            losses = rd.losses
 
             # --- Step 5: dropout-rate allocation for round t+1
             if cfg.scheme == "feddd":
                 alloc = self.allocate(np.maximum(losses, 1e-6))
                 self.dropout = alloc.dropout_rates
 
-            # --- Steps 6-7: download + local model update
-            full_round = (t % cfg.h == 0) or cfg.scheme != "feddd"
-            for i, cs in enumerate(self.clients):
-                if new_params[i] is None:      # non-participant (baselines)
-                    if full_round:
-                        cs.params = self._slice_to_local(cs.params)
-                    continue
-                if full_round or client_masks[i] is None:
-                    cs.params = self._slice_to_local(new_params[i],
-                                                     use_global=True)
-                else:
-                    g_local = self._slice_like(self.global_params,
-                                               new_params[i])
-                    cs.params = aggregation.client_update_sparse(
-                        g_local, new_params[i], client_masks[i])
-
             # --- simulated wall clock (paper Eq. (12))
-            active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
             sim_time, round_t, metrics = self._finish_round(
-                active, sim_time, eval_fn, d_used)
+                rd.active, sim_time, eval_fn, d_used)
             history.append(self._record(t, t0, sim_time, round_t, losses,
-                                        uploaded_bytes, full_bytes, active,
-                                        eps_val, metrics))
+                                        rd.uploaded_bytes, full_bytes,
+                                        rd.active, rd.epsilon, metrics))
 
-        if use_engine:   # sync stacked client state back
-            for cs, p in zip(self.clients,
-                             round_engine.unstack_pytree(stacked, n)):
-                cs.params = p
+        executor.finalize()
         return RunResult(history, self.global_params)
 
     def _record(self, t: int, t0: float, sim_time: float,
@@ -434,12 +603,7 @@ class FedDDServer:
                                       self.global_params)
 
     def _slice_like(self, global_params, local_params):
-        def _sl(g, l):
-            if g.shape == l.shape:
-                return g
-            sl = tuple(slice(0, s) for s in l.shape)
-            return g[sl]
-        return jax.tree_util.tree_map(_sl, global_params, local_params)
+        return round_engine.slice_pytree(global_params, local_params)
 
     def _slice_to_local(self, local_params, use_global: bool = True):
         src = self.global_params if use_global else local_params
@@ -456,20 +620,18 @@ def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
     .NetworkModel`) routes the run through the event-driven simulator
     instead of the closed-form Eq. (12) clock: dynamic per-round network
     conditions, observed-telemetry LP re-solves, and sync / deadline /
-    async aggregation policies.  Homogeneous models only (see the routing
-    table in the module docstring).
+    async aggregation policies.  Ragged ``client_params`` fleets run the
+    grouped engine on either path (see the routing table in the module
+    docstring).
     """
     if sim is not None or network is not None:
         from repro.sim import runner as sim_runner   # local: sim -> core
-        if client_params is not None:
-            raise ValueError("the sim runner supports homogeneous models "
-                             "only; use the per-client loop for "
-                             "heterogeneous client_params")
         if sim is None or sim is True:
             sim = sim_runner.SimConfig()
         return sim_runner.run_sim(scheme, global_params, telemetry,
                                   local_train_fn, eval_fn, sim=sim,
-                                  network=network, **cfg_kw)
+                                  network=network,
+                                  client_params=client_params, **cfg_kw)
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     server = FedDDServer(global_params, cfg, telemetry, client_params)
     return server.run(local_train_fn, eval_fn)

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Sequence
+from typing import List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,29 @@ class RoundOutputs(NamedTuple):
     client_params: object      # pytree, leaves (N, *leaf): W_n^{t+1}
     global_params: object      # pytree: W^t
     densities: jax.Array       # (N,) fraction of elements uploaded
+
+
+class GroupBatch(NamedTuple):
+    """One shape group's device-side inputs to a grouped round step.
+
+    Everything here is traced (a pytree): group MEMBERSHIP changes (async
+    buffers, different fleets of the same shape census) re-use the compiled
+    step; only the shape census itself keys the jit cache.
+    """
+
+    indices: jax.Array         # (n_g,) int32: canvas rows / RNG-fold ids
+    stacked_old: object        # pytree, leaves (n_g, *local): W_n^t
+    stacked_new: object        # pytree, leaves (n_g, *local): What_n^t
+    coverage: object           # CR(k) pytree of (C_local,) leaves, or None
+    dropout: jax.Array         # (n_g,) float32 D_n^t
+
+
+class GroupedRoundOutputs(NamedTuple):
+    """Device-side results of one grouped round step."""
+
+    group_client_params: Tuple # per group: pytree, leaves (n_g, *local)
+    global_params: object      # full-width pytree: W^t
+    densities: jax.Array       # (N,) canvas of upload densities
 
 
 def stack_pytrees(trees: Sequence) -> object:
@@ -141,6 +164,208 @@ class BatchedRoundEngine:
             jnp.asarray(weights, jnp.float32), rng,
             sel_cfg=self.selection_cfg, full_round=bool(full_round),
             dense_masks=bool(dense_masks))
+
+
+# --------------------------------------------------- shape-grouped engine
+
+def _slice_leaf(g: jax.Array, local_shape) -> jax.Array:
+    """HeteroFL width slicing: the leading [0:s) block of every axis."""
+    if tuple(g.shape) == tuple(local_shape):
+        return g
+    return g[tuple(slice(0, s) for s in local_shape)]
+
+
+def slice_pytree(global_params, local_template):
+    """Slice a full-width pytree down to a sub-model's local widths."""
+    return jax.tree_util.tree_map(
+        lambda g, l: _slice_leaf(g, l.shape), global_params, local_template)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sel_cfg", "full_round", "dense_masks"))
+def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
+                        weights, rng, *,
+                        sel_cfg: selection.SelectionConfig,
+                        full_round: bool,
+                        dense_masks: bool = False) -> GroupedRoundOutputs:
+    n = weights.shape[0]
+    group_masks, group_new, group_idx = [], [], []
+    densities = jnp.zeros((n,), jnp.float32)
+    for g in groups:
+        if dense_masks:
+            ng = g.indices.shape[0]
+            masks = jax.tree_util.tree_map(
+                lambda l: jnp.ones((ng,) + (1,) * (l.ndim - 1), l.dtype),
+                g.stacked_new)
+            dens = jnp.ones((ng,), jnp.float32)
+        else:
+            masks, dens = selection.build_masks_batched(
+                g.stacked_old, g.stacked_new,
+                jnp.asarray(g.dropout, jnp.float32), config=sel_cfg,
+                rng=rng, coverage=g.coverage, client_indices=g.indices)
+        group_masks.append(masks)
+        group_new.append(g.stacked_new)
+        group_idx.append(g.indices)
+        densities = densities.at[g.indices].set(dens)
+    new_global = aggregation.aggregate_sparse_grouped(
+        group_new, group_masks, group_idx, weights, global_params,
+        prev_global=global_params, use_kernel=sel_cfg.use_kernel)
+    new_group_params = []
+    for g, masks in zip(groups, group_masks):
+        g_local = slice_pytree(new_global, unstack_pytree(g.stacked_new, 1)[0])
+        if full_round:
+            # Eq. (6): every member adopts its slice of the fresh global.
+            upd = jax.tree_util.tree_map(
+                lambda gl, l: jnp.broadcast_to(gl, l.shape).astype(l.dtype),
+                g_local, g.stacked_new)
+        else:
+            # Eq. (5): the local-width global broadcasts over the group axis.
+            upd = aggregation.client_update_sparse(g_local, g.stacked_new,
+                                                   masks)
+        new_group_params.append(upd)
+    return GroupedRoundOutputs(tuple(new_group_params), new_global,
+                               densities)
+
+
+@dataclasses.dataclass
+class GroupedRoundEngine:
+    """One-jit-call FedDD round over a shape-grouped ragged fleet.
+
+    The heterogeneous counterpart of :class:`BatchedRoundEngine`: clients
+    are partitioned by sub-model shape (``repro.fl.heterogeneity
+    .group_by_shape``), each group's parameters stack along a leading member
+    axis, and ONE jit-compiled step per shape census runs, for every group,
+
+        coverage-aware batched mask building (Eq. (20)/(21) scores at the
+        group's NATIVE widths — no padded waste),
+        the scatter of each group's masked update into the full-width
+        aggregation canvas (:func:`repro.core.aggregation
+        .aggregate_sparse_grouped`, bit-identical to the padded loop), and
+        the Eq. (5)/(6) client updates at local widths.
+
+    Group membership (``GroupBatch.indices``) is traced, so deadline drops,
+    async buffers, and re-grouped fleets with the same shape census reuse
+    the compiled step; a new census (different group shapes/sizes) compiles
+    once.  Exclusion and staleness enter exactly as in the homogeneous
+    engine: per-client weights on the stacked Eq. (4) aggregation, indexed
+    by canvas row.
+    """
+
+    selection_cfg: selection.SelectionConfig = dataclasses.field(
+        default_factory=selection.SelectionConfig)
+
+    def step(self, groups: Sequence[GroupBatch], global_params,
+             weights, rng, *, full_round: bool,
+             dense_masks: bool = False) -> GroupedRoundOutputs:
+        """Run one round's server side over the grouped fleet.
+
+        Args:
+          groups: one :class:`GroupBatch` per shape group; ``indices`` are
+            rows into ``weights`` / the densities canvas AND the ids the
+            per-client mask keys fold in (fleet positions for protocol/wave
+            runs; buffer positions for async merges).
+          global_params: current full-width global pytree.
+          weights: (N,) aggregation weights m_n indexed by canvas row; zero
+            excludes that row (non-participation, deadline drops,
+            staleness-decayed async merges).
+          rng: the ROUND key (the per-client loop's split).
+          full_round / dense_masks: as in :meth:`BatchedRoundEngine.step`.
+        """
+        return _grouped_round_step(
+            tuple(groups), global_params,
+            jnp.asarray(weights, jnp.float32), rng,
+            sel_cfg=self.selection_cfg, full_round=bool(full_round),
+            dense_masks=bool(dense_masks))
+
+
+def train_grouped(groups, group_stacked, group_coverage, local_train_fn,
+                  rk, part, losses, d_used, *, dense: bool,
+                  num_clients: int):
+    """Per-client local training over grouped stacked state + GroupBatch
+    assembly — the host-side half of a grouped round, shared by the
+    protocol executor and the sim runner so the two stay in lockstep.
+
+    Trains member ``i`` iff ``part[i]`` (callers pass all-ones for feddd,
+    where everyone trains); non-participants keep stale params and their
+    stale loss.  Returns ``(loss_dev, batches)``: per-client device losses
+    in fleet order and one complete :class:`GroupBatch` per group.
+    """
+    loss_dev: List = [None] * num_clients
+    batches: List[GroupBatch] = []
+    for grp, stacked, cov in zip(groups, group_stacked, group_coverage):
+        per_client = unstack_pytree(stacked, grp.size)
+        new_list = []
+        for pos, i in enumerate(grp.indices):
+            if part[i]:
+                p, l = local_train_fn(per_client[pos], i,
+                                      jax.random.fold_in(rk, i))
+            else:
+                p, l = per_client[pos], losses[i]
+            new_list.append(p)
+            loss_dev[i] = l
+        batches.append(GroupBatch(
+            indices=jnp.asarray(grp.indices, jnp.int32),
+            stacked_old=stacked,
+            stacked_new=stack_pytrees(new_list),
+            coverage=None if dense else cov,
+            dropout=jnp.asarray(d_used[list(grp.indices)], jnp.float32)))
+    return loss_dev, batches
+
+
+def unstack_groups(groups, group_stacked, num_clients: int) -> List:
+    """Grouped stacked state -> per-client pytree list in fleet order."""
+    params: List = [None] * num_clients
+    for grp, stacked in zip(groups, group_stacked):
+        for i, p in zip(grp.indices, unstack_pytree(stacked, grp.size)):
+            params[i] = p
+    return params
+
+
+class GroupedFleetState:
+    """Host-side state of a ragged fleet between grouped rounds.
+
+    Owns the per-group stacked params (persisting across rounds — nothing
+    re-stacks between them) and the train -> step -> export cycle, so the
+    protocol executor and the sim runner drive the grouped engine through
+    ONE implementation and cannot drift apart.
+    """
+
+    def __init__(self, groups, group_coverage, client_params,
+                 selection_cfg: selection.SelectionConfig,
+                 num_clients: int):
+        self.engine = GroupedRoundEngine(selection_cfg)
+        self.groups = groups
+        self.coverage = group_coverage
+        self.num_clients = num_clients
+        self.group_stacked = [
+            stack_pytrees([client_params[i] for i in g.indices])
+            for g in groups
+        ]
+        self._batches = None
+
+    def train(self, local_train_fn, rk, part, losses, d_used,
+              *, dense: bool) -> List:
+        """Run local training and stage this round's GroupBatches; returns
+        per-client device losses (fleet order)."""
+        loss_dev, self._batches = train_grouped(
+            self.groups, self.group_stacked, self.coverage, local_train_fn,
+            rk, part, losses, d_used, dense=dense,
+            num_clients=self.num_clients)
+        return loss_dev
+
+    def step(self, global_params, weights, rk, *, full_round: bool,
+             dense: bool):
+        """One grouped engine step over the staged batches; returns
+        ``(new_global, densities)`` and rebinds the stacked client state."""
+        out = self.engine.step(self._batches, global_params, weights, rk,
+                               full_round=full_round, dense_masks=dense)
+        self.group_stacked = list(out.group_client_params)
+        return out.global_params, out.densities
+
+    def export(self) -> List:
+        """Per-client pytree list in fleet order (host-side sync point)."""
+        return unstack_groups(self.groups, self.group_stacked,
+                              self.num_clients)
 
 
 def make_batched_train_fn(per_client_step, stacked_data):

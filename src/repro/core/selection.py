@@ -156,20 +156,27 @@ def build_masks(
 
 
 def _tensor_scores_batched(cfg: SelectionConfig, w_old, w_new,
-                           leaf_rngs: Optional[jax.Array]):
+                           leaf_rngs: Optional[jax.Array],
+                           coverage: Optional[jax.Array] = None):
     """Scores for a client-stacked leaf: (N, *leaf) x2 -> (N, C).
 
     ``leaf_rngs`` is a (N, key) stack of per-client keys already folded with
     this leaf's index (matching the per-client ``build_masks`` fold order).
+    ``coverage`` is an optional (C,) coverage-rate vector shared by every
+    client in the stack (shape groups: same sub-model widths => same CR
+    slice); it divides the feddd importance exactly as in the per-client
+    path (Eq. (21)).
     """
     ax = cfg.channel_axis
     if cfg.scheme == "feddd":
         if cfg.use_kernel:
             from repro.kernels.importance import ops as kops
             return kops.channel_importance_batched(w_old, w_new,
-                                                   channel_axis=ax)
+                                                   channel_axis=ax,
+                                                   coverage=coverage)
         return imp_mod.channel_importance_batched(w_old, w_new,
-                                                  channel_axis=ax)
+                                                  channel_axis=ax,
+                                                  coverage=coverage)
     if cfg.scheme == "max":
         return imp_mod.channel_score_max_batched(w_old, w_new,
                                                  channel_axis=ax)
@@ -193,6 +200,8 @@ def build_masks_batched(
     *,
     config: SelectionConfig = SelectionConfig(),
     rng: Optional[jax.Array] = None,
+    coverage: Optional[object] = None,
+    client_indices: Optional[jax.Array] = None,
 ):
     """Client-stacked ``build_masks``: all clients' masks in one traced pass.
 
@@ -205,6 +214,16 @@ def build_masks_batched(
         order of the per-client loop, so scheme='random' masks are
         bit-identical to looping :func:`build_masks` with
         ``rng=fold_in(round_key, 10_000 + i)``.
+      coverage: optional UN-stacked pytree of per-channel coverage rates
+        CR(k), each leaf (C,) — shared by every client in the stack.  This
+        is the shape-group case: members hold identically-shaped sub-models,
+        so they share one coverage slice and Eq. (21)'s division broadcasts
+        over the client axis.
+      client_indices: optional (N,) ids ``i`` the per-client RNG keys fold
+        in.  Defaults to ``arange(N)``; a shape group passes its members'
+        fleet positions so group masks are bit-identical to the per-client
+        loop over the whole fleet.  May be a traced array — group membership
+        changes do not retrigger compilation.
 
     Returns ``(masks, density)``: a mask pytree with leaves shaped
     (N, 1, ..., C, ..., 1) and the (N,) fraction of parameter elements kept
@@ -217,19 +236,24 @@ def build_masks_batched(
 
     flat_old = jax.tree_util.tree_leaves(stacked_old)
     flat_new, treedef = jax.tree_util.tree_flatten(stacked_new)
+    flat_cov = (jax.tree_util.tree_leaves(coverage)
+                if coverage is not None else [None] * len(flat_new))
     if len(flat_old) != len(flat_new):
         raise ValueError("stacked_old/stacked_new structure mismatch")
     n = flat_new[0].shape[0]
 
     client_keys = None
     if rng is not None:
+        ids = (jnp.asarray(client_indices)
+               if client_indices is not None else jnp.arange(n))
         client_keys = jax.vmap(
-            lambda i: jax.random.fold_in(rng, i))(10_000 + jnp.arange(n))
+            lambda i: jax.random.fold_in(rng, i))(10_000 + ids)
 
     masks = []
     kept = jnp.zeros((n,), jnp.float32)
     total = 0.0
-    for i, (w_old, w_new) in enumerate(zip(flat_old, flat_new)):
+    for i, (w_old, w_new, cov) in enumerate(
+            zip(flat_old, flat_new, flat_cov)):
         leaf_ndim = w_new.ndim - 1
         leaf_size = float(np.prod(w_new.shape[1:], dtype=np.float64))
         if leaf_ndim == 0:
@@ -241,7 +265,7 @@ def build_masks_batched(
         nch = w_new.shape[ax]
         leaf_rngs = (jax.vmap(lambda k: jax.random.fold_in(k, i))(client_keys)
                      if client_keys is not None else None)
-        scores = _tensor_scores_batched(config, w_old, w_new, leaf_rngs)
+        scores = _tensor_scores_batched(config, w_old, w_new, leaf_rngs, cov)
         k = keep_count(nch, dropout_rates)                     # (N,)
         m1d = jax.vmap(mask_from_scores, (0, 0, None))(scores, k, nch)
         shape = [n] + [1] * leaf_ndim

@@ -1,4 +1,5 @@
-from repro.fl.heterogeneity import sample_system_telemetry
+from repro.fl.heterogeneity import (ShapeGroup, group_by_shape,
+                                    sample_system_telemetry, shape_signature)
 from repro.fl.models import (init_cnn, init_mlp, make_eval_fn,
                              make_local_train_fn, model_bytes,
                              CNN1_SPEC, CNN2_SPEC, MLP_SPEC,

@@ -12,8 +12,10 @@ t_cmp = c_n * b_n / f_n  (Eq. (7)) with b_n = client batch size per epoch
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import dataclasses
+from typing import Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.core.allocation import ClientTelemetry
@@ -46,3 +48,50 @@ def sample_system_telemetry(
         label_coverage=np.asarray(label_coverage, float),
         train_loss=np.full(n, initial_loss),
     )
+
+
+# --------------------------------------------------------------- shape groups
+
+@dataclasses.dataclass(frozen=True)
+class ShapeGroup:
+    """One equivalence class of a ragged fleet: every member client holds a
+    sub-model with the identical pytree structure and leaf shapes, so their
+    parameters stack along a leading client axis and one jit-compiled engine
+    step serves the whole group (core/round_engine.py GroupedRoundEngine).
+
+    ``indices`` are the members' positions in the fleet (ascending) — they
+    are both the rows each member occupies in the full-fleet aggregation
+    canvas and the ids the per-client mask RNG keys fold in, so grouped
+    results stay bit-identical to the per-client reference loop.
+    """
+
+    signature: Tuple                 # hashable (treedef, ((shape, dtype)...))
+    indices: Tuple[int, ...]         # fleet positions of the members
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+
+def shape_signature(params) -> Tuple:
+    """Hashable identity of a pytree's (structure, leaf shapes, dtypes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return (treedef,
+            tuple((tuple(l.shape), str(np.asarray(l).dtype
+                                       if not hasattr(l, "dtype") else l.dtype))
+                  for l in leaves))
+
+
+def group_by_shape(client_params: Sequence) -> "list[ShapeGroup]":
+    """Partition a fleet by sub-model shape.
+
+    Returns the groups ordered by their smallest member index (a pure
+    function of the fleet, so the grouped engine's jit cache and canvas
+    layout are deterministic).  A homogeneous fleet yields one group.
+    """
+    members: dict = {}
+    for i, p in enumerate(client_params):
+        members.setdefault(shape_signature(p), []).append(i)
+    groups = [ShapeGroup(signature=sig, indices=tuple(idx))
+              for sig, idx in members.items()]
+    return sorted(groups, key=lambda g: g.indices[0])

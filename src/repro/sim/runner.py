@@ -21,17 +21,23 @@ Differences from the closed-form protocol driver:
   wait-for-all, deadline semi-sync that abandons late uploads, or
   buffered fully-async with staleness-decayed weights.
 
-The device math is the existing :class:`repro.core.round_engine
-.BatchedRoundEngine` step: exclusion (deadline drops, baseline
-non-participation) and staleness decay enter as per-client weights on the
-stacked Eq. (4) aggregation, so one jit-compiled step serves every policy.
+The device math is the round engines of ``core/round_engine.py``:
+homogeneous fleets run the :class:`BatchedRoundEngine` step, ragged-width
+fleets (HeteroFL-style sub-models) the shape-grouped
+:class:`GroupedRoundEngine` step — one fused device step per shape census.
+Exclusion (deadline drops, baseline non-participation) and staleness decay
+enter as per-client weights on the stacked Eq. (4) aggregation either way,
+indexed by each client's row in the aggregation canvas, so the same jit
+step serves every policy and every fleet shape.
 
-Determinism contract (tests/test_sim.py): a run is a pure function of
-(seed, config, network model) — same seed gives the identical event
-trace, sim times, and final parameters in any process.
+Determinism contract (tests/test_sim.py, tests/test_grouped_engine.py): a
+run is a pure function of (seed, config, network model, fleet) — same seed
+gives the identical event trace, sim times, and final parameters in any
+process.
 
 With the synchronous policy over a static network this runner reproduces
-``protocol.py``'s Eq. (12) round times and global parameters exactly.
+``protocol.py``'s Eq. (12) round times and global parameters exactly —
+for homogeneous and ragged fleets alike.
 """
 
 from __future__ import annotations
@@ -43,9 +49,11 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
-from repro.core import baselines, round_engine
-from repro.core.allocation import ClientTelemetry, solve_dropout_rates
+from repro.core import baselines, coverage as cov_mod, round_engine
+from repro.core.allocation import (ClientTelemetry,
+                                   solve_dropout_rates_with)
 from repro.core.protocol import (ProtocolConfig, RoundRecord, RunResult,
                                  _tree_bytes)
 from repro.sim import engine as ev_mod
@@ -127,12 +135,81 @@ class ObservedTelemetry:
             train_loss=np.asarray(train_loss, float))
 
 
+class _StackedWaveFleet:
+    """Homogeneous wave-policy device state: ONE client-stacked pytree that
+    persists across rounds and one BatchedRoundEngine step per round."""
+
+    def __init__(self, runner: "SimRunner"):
+        self.runner = runner
+        self.engine = round_engine.BatchedRoundEngine(runner.cfg.selection)
+        self.stacked = round_engine.stack_pytrees(runner.client_params)
+        self._new = None
+
+    def train(self, local_train_fn, rk, part, losses, d_used) -> List:
+        del d_used      # homogeneous stacks defer dropout to step()
+        n = self.runner.tel.num_clients
+        per_client = round_engine.unstack_pytree(self.stacked, n)
+        new_list, loss_dev = [None] * n, [None] * n
+        for i, p_i in enumerate(per_client):
+            if part[i]:
+                p, l = local_train_fn(p_i, i, jax.random.fold_in(rk, i))
+            else:
+                p, l = p_i, losses[i]
+            new_list[i], loss_dev[i] = p, l
+        self._new = round_engine.stack_pytrees(new_list)
+        return loss_dev
+
+    def step(self, d_used, weights, rk, *, full_round, dense):
+        r = self.runner
+        out = self.engine.step(self.stacked, self._new, r.global_params,
+                               d_used, weights, rk,
+                               full_round=full_round, dense_masks=dense)
+        r.global_params = out.global_params
+        self.stacked = out.client_params
+        return out.densities
+
+    def export(self) -> List:
+        n = self.runner.tel.num_clients
+        return round_engine.unstack_pytree(self.stacked, n)
+
+
+class _GroupedWaveFleet:
+    """Ragged wave-policy device state: a thin adapter over the shared
+    :class:`repro.core.round_engine.GroupedFleetState` (the SAME
+    implementation the protocol's grouped executor drives).  Exclusion
+    weights stay a full (N,) fleet vector — each group's rows index into it
+    via the members' fleet positions, exactly like the homogeneous stacked
+    path."""
+
+    def __init__(self, runner: "SimRunner"):
+        self.runner = runner
+        self.state = round_engine.GroupedFleetState(
+            runner.groups, runner.group_coverage, runner.client_params,
+            runner.cfg.selection, runner.tel.num_clients)
+
+    def train(self, local_train_fn, rk, part, losses, d_used) -> List:
+        return self.state.train(local_train_fn, rk, part, losses, d_used,
+                                dense=self.runner.cfg.scheme != "feddd")
+
+    def step(self, d_used, weights, rk, *, full_round, dense):
+        del d_used      # already baked into the batches by train()
+        r = self.runner
+        r.global_params, densities = self.state.step(
+            r.global_params, weights, rk, full_round=full_round,
+            dense=dense)
+        return densities
+
+    def export(self) -> List:
+        return self.state.export()
+
+
 class SimRunner:
-    """Event-driven federated run over homogeneous client models."""
+    """Event-driven federated run; homogeneous or ragged-width fleets."""
 
     def __init__(self, global_params, cfg: ProtocolConfig,
                  telemetry: ClientTelemetry, simcfg: SimConfig,
-                 network: Optional[NetworkModel] = None):
+                 network: Optional[NetworkModel] = None,
+                 client_params: Optional[List] = None):
         if cfg.track_epsilon:
             raise ValueError("track_epsilon is a per-client-loop feature; "
                              "the sim runner does not support it")
@@ -146,8 +223,35 @@ class SimRunner:
                              "mismatch")
         n = telemetry.num_clients
         self.global_params = global_params
-        self.client_params = [global_params] * n
+        if client_params is None:
+            client_params = [global_params] * n
+        elif len(client_params) != n:
+            raise ValueError("client_params / telemetry count mismatch")
+        self.client_params = [jax.tree_util.tree_map(jnp.asarray, p)
+                              for p in client_params]
+        # ragged fleet? partition by shape once; coverage per group
+        from repro.fl.heterogeneity import group_by_shape  # fl -> core dep
+        full_w = cov_mod.channel_widths(global_params,
+                                        cfg.selection.channel_axis)
+        cw = [cov_mod.channel_widths(p, cfg.selection.channel_axis)
+              for p in self.client_params]
+        self.heterogeneous = any(w != full_w for w in cw)
+        self.cr = cov_mod.coverage_rates(cw, full_w)
+        self.groups = group_by_shape(self.client_params)
+        self.group_coverage = [
+            cov_mod.coverage_pytree(self.client_params[g.indices[0]],
+                                    self.cr, cfg.selection.channel_axis)
+            for g in self.groups
+        ]
+        # fleet-position -> coverage pytree (async merges look coverage up
+        # by the arriving client's index — immune to any dtype/structure
+        # drift a trainer might introduce into the pending params)
+        self._client_coverage = [None] * n
+        for g, cov in zip(self.groups, self.group_coverage):
+            for i in g.indices:
+                self._client_coverage[i] = cov
         self.engine = round_engine.BatchedRoundEngine(cfg.selection)
+        self.grouped_engine = round_engine.GroupedRoundEngine(cfg.selection)
         self.observed = ObservedTelemetry(telemetry, simcfg.observation_ewma)
         self.dropout = np.zeros(n)            # D_n^1 = 0 (Algorithm 1)
         self.weights = np.asarray(telemetry.num_samples, float)
@@ -165,8 +269,9 @@ class SimRunner:
         """Re-solve the dropout LP from OBSERVED telemetry (never the
         network model's ground truth)."""
         tel = self.observed.telemetry(np.maximum(losses, 1e-6))
-        alloc = solve_dropout_rates(
-            tel, a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+        alloc = solve_dropout_rates_with(
+            self.cfg.allocator, tel,
+            a_server=self.cfg.a_server, d_max=self.cfg.d_max,
             delta=self.cfg.delta,
             global_model_bytes=_tree_bytes(self.global_params))
         self.dropout = alloc.dropout_rates
@@ -201,6 +306,42 @@ class SimRunner:
         self.sim.schedule_at(cp, COMPUTE_DONE, i, ("compute", t_cmp))
         self.sim.schedule_at(up, UPLOAD_DONE, i, ("uplink", r_u))
 
+    def _merge_grouped(self, buffer: List[int], pending: Dict, w: np.ndarray,
+                       merge_key, full_round: bool) -> np.ndarray:
+        """One grouped engine step over an async merge buffer.
+
+        The buffer's K arrivals are partitioned by sub-model shape; canvas
+        rows (and the mask-RNG fold ids) are the BUFFER positions, mirroring
+        the homogeneous async path, and staleness-decayed weights index by
+        the same rows.  Membership is traced, so merges re-use the compiled
+        step whenever the buffer's shape census repeats.
+        """
+        from repro.fl.heterogeneity import group_by_shape  # fl -> core dep
+        groups = group_by_shape([pending[i][1] for i in buffer])
+        batches = []
+        for grp in groups:
+            members = [buffer[pos] for pos in grp.indices]
+            batches.append(round_engine.GroupBatch(
+                indices=jnp.asarray(grp.indices, jnp.int32),
+                stacked_old=round_engine.stack_pytrees(
+                    [pending[i][0] for i in members]),
+                stacked_new=round_engine.stack_pytrees(
+                    [pending[i][1] for i in members]),
+                coverage=(None if self._dense
+                          else self._client_coverage[members[0]]),
+                dropout=jnp.asarray([pending[i][3] for i in members],
+                                    jnp.float32)))
+        out = self.grouped_engine.step(
+            batches, self.global_params, w, merge_key,
+            full_round=full_round, dense_masks=self._dense)
+        self.global_params = out.global_params
+        for grp, stacked in zip(groups, out.group_client_params):
+            for pos, p in zip(grp.indices,
+                              round_engine.unstack_pytree(stacked,
+                                                          grp.size)):
+                self.client_params[buffer[pos]] = p
+        return np.asarray(jax.device_get(out.densities), float)
+
     def _result(self, history: List[RoundRecord]) -> SimResult:
         return SimResult(history=history, global_params=self.global_params,
                          event_trace=list(self.sim.trace),
@@ -217,7 +358,8 @@ class SimRunner:
         losses = np.ones(n)
         history: List[RoundRecord] = []
         sim = self.sim
-        stacked = round_engine.stack_pytrees(self.client_params)
+        fleet = (_GroupedWaveFleet(self) if self.heterogeneous
+                 else _StackedWaveFleet(self))
 
         for t in range(1, rounds + 1):
             host0 = time.perf_counter()
@@ -227,15 +369,7 @@ class SimRunner:
             d_time = d_used if cfg.scheme == "feddd" else np.zeros(n)
 
             # --- device math: local training (participants)
-            per_client = round_engine.unstack_pytree(stacked, n)
-            new_list, loss_dev = [None] * n, [None] * n
-            for i, p_i in enumerate(per_client):
-                if part[i]:
-                    p, l = local_train_fn(p_i, i, jax.random.fold_in(rk, i))
-                else:
-                    p, l = p_i, losses[i]
-                new_list[i], loss_dev[i] = p, l
-            stacked_new = round_engine.stack_pytrees(new_list)
+            loss_dev = fleet.train(local_train_fn, rk, part, losses, d_used)
 
             # --- event timeline with TRUE conditions of this epoch
             cond = self.network.conditions(t - 1)
@@ -276,14 +410,11 @@ class SimRunner:
             sim.advance_to(round_end)
 
             # --- fused engine step: exclusion == 0 aggregation weight
-            out = self.engine.step(
-                stacked, stacked_new, self.global_params, d_used,
-                self.weights * arrived, rk,
+            densities = fleet.step(
+                d_used, self.weights * arrived, rk,
                 full_round=(t % cfg.h == 0) or self._dense,
-                dense_masks=self._dense)
-            self.global_params = out.global_params
-            stacked = out.client_params
-            dens, loss_host = jax.device_get((out.densities, loss_dev))
+                dense=self._dense)
+            dens, loss_host = jax.device_get((densities, loss_dev))
             # the loss report ships WITH the upload: a straggler whose
             # transfer was abandoned keeps its stale loss server-side
             losses = np.where(arrived, np.asarray(loss_host, float), losses)
@@ -307,7 +438,7 @@ class SimRunner:
                 participants=int(np.sum(arrived)),
                 metrics=metrics))
 
-        self.client_params = round_engine.unstack_pytree(stacked, n)
+        self.client_params = fleet.export()
         return self._result(history)
 
     # -- buffered fully-async policy ------------------------------------------
@@ -369,22 +500,26 @@ class SimRunner:
             merges += 1
             staleness = version - dispatch_version[buffer]
             scale = self.policy.staleness_scale(staleness)
-            olds = round_engine.stack_pytrees(
-                [pending[i][0] for i in buffer])
-            news = round_engine.stack_pytrees(
-                [pending[i][1] for i in buffer])
-            d_vec = np.asarray([pending[i][3] for i in buffer])
             w = self.weights[buffer] * scale
-            out = self.engine.step(
-                olds, news, self.global_params, d_vec, w,
-                jax.random.fold_in(agg_key, merges),
-                full_round=(merges % cfg.h == 0) or self._dense,
-                dense_masks=self._dense)
-            self.global_params = out.global_params
-            dens = np.asarray(jax.device_get(out.densities), float)
-            for j, i in enumerate(buffer):
-                self.client_params[i] = jax.tree_util.tree_map(
-                    lambda l, j=j: l[j], out.client_params)
+            merge_key = jax.random.fold_in(agg_key, merges)
+            full_round = (merges % cfg.h == 0) or self._dense
+            if self.heterogeneous:
+                dens = self._merge_grouped(buffer, pending, w, merge_key,
+                                           full_round)
+            else:
+                olds = round_engine.stack_pytrees(
+                    [pending[i][0] for i in buffer])
+                news = round_engine.stack_pytrees(
+                    [pending[i][1] for i in buffer])
+                d_vec = np.asarray([pending[i][3] for i in buffer])
+                out = self.engine.step(
+                    olds, news, self.global_params, d_vec, w, merge_key,
+                    full_round=full_round, dense_masks=self._dense)
+                self.global_params = out.global_params
+                dens = np.asarray(jax.device_get(out.densities), float)
+                for j, i in enumerate(buffer):
+                    self.client_params[i] = jax.tree_util.tree_map(
+                        lambda l, j=j: l[j], out.client_params)
             version += 1
             uploaded = float(np.dot(dens, self.tel.model_bytes[buffer]))
 
@@ -416,6 +551,7 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
             local_train_fn: Callable, eval_fn=None, *,
             sim: Optional[SimConfig] = None,
             network: Optional[NetworkModel] = None,
+            client_params: Optional[List] = None,
             rounds: Optional[int] = None, **cfg_kw) -> SimResult:
     """One-call driver, mirroring :func:`repro.core.protocol.run_scheme`.
 
@@ -428,15 +564,20 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
       sim: :class:`SimConfig` — policy + observation knobs.
       network: a :class:`repro.sim.network.NetworkModel`; defaults to
         :class:`StaticNetwork` over ``telemetry`` (the paper's setting).
+      client_params: optional per-client sub-model pytrees (ragged widths,
+        HeteroFL-style slices of ``global_params``); the runner partitions
+        them by shape and drives the grouped engine — stragglers x ragged
+        fleets compose freely with every policy.
       **cfg_kw: ProtocolConfig fields (rounds, a_server, d_max, delta, h,
-        seed, selection).
+        seed, selection, allocator).
     """
     simcfg = sim or SimConfig()
     if rounds is not None:
         cfg_kw["rounds"] = rounds
     cfg_kw.pop("batched", None)       # the sim runner is always batched
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
-    runner = SimRunner(global_params, cfg, telemetry, simcfg, network)
+    runner = SimRunner(global_params, cfg, telemetry, simcfg, network,
+                       client_params=client_params)
     if isinstance(runner.policy, AsyncPolicy):
         if scheme in ("fedcs", "oort"):
             raise ValueError(

@@ -10,6 +10,8 @@ from hypothesis_compat import given, settings, st
 from repro.core import aggregation, selection
 from repro.core.convergence import estimate_epsilon
 
+pytestmark = pytest.mark.flcore
+
 
 def _clients(key, n, shape=(6, 10)):
     ks = jax.random.split(key, n)

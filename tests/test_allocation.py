@@ -11,6 +11,8 @@ from repro.core.allocation import (ClientTelemetry, regularizer,
                                    solve_dropout_rates,
                                    solve_dropout_rates_jax)
 
+pytestmark = pytest.mark.flcore
+
 
 def _tel(rng, n):
     return ClientTelemetry(
@@ -188,3 +190,78 @@ def test_regularizer_formula():
     want = (tel.num_samples / m) * tel.label_coverage \
         * (tel.model_bytes / 1e6) * tel.train_loss
     np.testing.assert_allclose(re, want)
+
+
+# --- allocator dispatch (ProtocolConfig.allocator = "numpy" | "jax") --------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("a_server", [0.3, 0.6])
+def test_allocator_jax_parity_on_budget(seed, a_server):
+    """The jax allocator must land ON the communication budget (the LP's
+    equality constraint) and match the numpy reference's objective — the
+    contract FedDDServer.allocate relies on whichever backend is picked."""
+    from repro.core.allocation import solve_dropout_rates_with
+
+    rng = np.random.default_rng(seed)
+    tel = _tel(rng, 24)
+    kw = dict(a_server=a_server, d_max=0.9, delta=1.0)
+    ref = solve_dropout_rates_with("numpy", tel, **kw)
+    got = solve_dropout_rates_with("jax", tel, **kw)
+    assert ref.feasible and got.feasible
+    total = np.sum(tel.model_bytes)
+    for res in (ref, got):
+        uploaded = np.sum(tel.model_bytes * (1 - res.dropout_rates))
+        np.testing.assert_allclose(uploaded, a_server * total, rtol=1e-4)
+        assert np.all(res.dropout_rates >= -1e-9)
+        assert np.all(res.dropout_rates <= 0.9 + 1e-9)
+    # same LP, same optimum (float32 golden section => loose-ish tol)
+    np.testing.assert_allclose(got.objective, ref.objective, rtol=1e-3)
+
+
+def test_allocator_unknown_rejected():
+    from repro.core.allocation import solve_dropout_rates_with
+
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="allocator"):
+        solve_dropout_rates_with("scipy", _tel(rng, 4), a_server=0.5,
+                                 d_max=0.8, delta=1.0)
+
+
+def test_protocol_config_allocator_jax_end_to_end():
+    """A server run with allocator='jax' stays on budget every round and
+    produces rates close to the numpy run (identical training path)."""
+    import jax
+    from repro.core import run_scheme
+
+    n = 6
+    rng = np.random.default_rng(3)
+    params = {"fc0": {"w": jnp.ones((20, 12)), "b": jnp.zeros(12)},
+              "fc1": {"w": jnp.ones((12, 5)), "b": jnp.zeros(5)}}
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(params)))
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+    def ltf(p, idx, key):
+        return (jax.tree_util.tree_map(
+            lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+            1.0 / (idx + 1.0))
+
+    kw = dict(rounds=3, a_server=0.6, h=5, seed=0)
+    res = run_scheme("feddd", params, tel, ltf, None, allocator="jax", **kw)
+    total = np.sum(tel.model_bytes)
+    for rec in res.history:
+        uploaded = np.sum(tel.model_bytes * (1 - rec.dropout_rates))
+        np.testing.assert_allclose(uploaded, 0.6 * total, rtol=1e-4)
+
+    ref = run_scheme("feddd", params, tel, ltf, None, allocator="numpy",
+                     **kw)
+    for rr, rj in zip(ref.history, res.history):
+        np.testing.assert_allclose(rj.dropout_rates, rr.dropout_rates,
+                                   atol=5e-3)

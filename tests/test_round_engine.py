@@ -17,6 +17,8 @@ from repro.core.round_engine import (BatchedRoundEngine, stack_pytrees,
                                      unstack_pytree)
 from repro.core.selection import SelectionConfig
 
+pytestmark = pytest.mark.flcore
+
 
 def _client_params(key, n, scale=1.0):
     def one(k):
@@ -237,6 +239,55 @@ def test_batched_train_fn_fuses_training():
     assert _trees_equal(r1.global_params, r2.global_params)
     # stacked client state synced back into ClientState
     assert _trees_equal(s1.clients[0].params, s2.clients[0].params)
+
+
+@pytest.mark.parametrize("scheme", ["fedavg", "fedcs", "oort"])
+def test_batched_train_fn_baselines_respect_participation(scheme):
+    """Dense-baseline runs may fuse training too, but non-participants must
+    not train: their params stay stale (out of the aggregate) and their
+    losses stay stale in the server's view — identical to the per-client
+    engine trainer that simply skips them."""
+    from repro.core import FedDDServer, ProtocolConfig
+    from repro.core.allocation import ClientTelemetry
+
+    n = 6
+    params = _client_params(jax.random.PRNGKey(4), 1)[0]
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(params)))
+    rng = np.random.default_rng(2)
+    tel = ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+    def per_client(p, idx, key):
+        del key
+        return jax.tree_util.tree_map(lambda x: 0.9 * x, p), 0.25
+
+    def batched(stacked, key):
+        del key
+        return (jax.tree_util.tree_map(lambda x: 0.9 * x, stacked),
+                jnp.full((n,), 0.25))
+
+    kw = dict(scheme=scheme, rounds=3, a_server=0.5, h=2, seed=0)
+    s1 = FedDDServer(params, ProtocolConfig(**kw), tel)
+    r1 = s1.run(per_client)
+    s2 = FedDDServer(params, ProtocolConfig(**kw), tel)
+    r2 = s2.run(batched_train_fn=batched)
+    assert _trees_equal(r1.global_params, r2.global_params)
+    for a, b in zip(s1.clients, s2.clients):
+        assert _trees_equal(a.params, b.params)
+    for ra, rb in zip(r1.history, r2.history):
+        assert ra.participants == rb.participants
+        assert ra.mean_loss == pytest.approx(rb.mean_loss, abs=1e-9)
+        assert ra.uploaded_fraction == pytest.approx(rb.uploaded_fraction,
+                                                     abs=1e-9)
+    # sanity: the scenario exercises actual non-participation
+    assert any(r.participants < n for r in r1.history) or scheme == "fedavg"
 
 
 def test_batched_train_fn_rejected_off_engine_path():

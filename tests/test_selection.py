@@ -11,6 +11,8 @@ from repro.core import selection
 from repro.core.importance import (channel_importance,
                                    elementwise_importance)
 
+pytestmark = pytest.mark.flcore
+
 
 def _params(key, scale=1.0):
     k1, k2, k3 = jax.random.split(key, 3)

@@ -30,6 +30,8 @@ from repro.sim import (AsyncPolicy, DeadlinePolicy, MarkovFadingNetwork,
                        TraceNetwork, run_sim)
 from repro.sim.engine import UPLOAD_DONE, EventQueue
 
+pytestmark = pytest.mark.flcore
+
 
 # --- shared fixtures ---------------------------------------------------------
 
@@ -139,9 +141,15 @@ def test_run_scheme_sim_kwarg_routes_to_simulator():
     from repro.sim.runner import SimResult
     assert isinstance(res, SimResult)
     assert len(res.event_trace) == 3 * n * 2       # 3 events/client/round
-    with pytest.raises(ValueError, match="homogeneous"):
+    # an explicitly homogeneous client_params fleet routes identically
+    # (ragged fleets are exercised in tests/test_grouped_engine.py)
+    res2 = run_scheme("feddd", params, tel, _ltf, None, sim=True,
+                      client_params=[params] * n,
+                      rounds=2, a_server=0.6, h=5, seed=0)
+    assert _trees_equal(res.global_params, res2.global_params)
+    with pytest.raises(ValueError, match="client_params"):
         run_scheme("feddd", params, tel, _ltf, None, sim=True,
-                   client_params=[params] * n, rounds=1)
+                   client_params=[params] * (n + 1), rounds=1)
 
 
 # --- determinism across processes ---------------------------------------------
