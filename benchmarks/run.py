@@ -3,10 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV.  Default mode runs reduced-size
 versions of every experiment (bounded CPU time); run the individual modules
 with ``--full`` for the paper-scale grids.
+
+``--json`` runs ONLY the round-engine perf A/B (loop / batched / fused /
+scanned at 16 and 64 clients) and writes the machine-readable trajectory
+``results/BENCH_round_engine.json`` — the regression baseline CI uploads
+so future PRs can track engine rounds/sec.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -15,8 +21,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (accuracy_homogeneous, class_imbalance,  # noqa: E402
                         convergence_bound, heterogeneous, kernels_bench,
-                        roofline, selection_variants, sensitivity,
-                        straggler_policies, t2a)
+                        perf_federated, roofline, selection_variants,
+                        sensitivity, straggler_policies, t2a)
 
 MODULES = [
     ("fig4-6 accuracy (model-homogeneous)", accuracy_homogeneous),
@@ -27,14 +33,31 @@ MODULES = [
     ("fig21 class imbalance", class_imbalance),
     ("thm2 convergence bound", convergence_bound),
     ("straggler policies (event-driven sim)", straggler_policies),
+    ("round-engine perf (loop/batched/fused/scanned)", perf_federated),
     ("pallas kernels", kernels_bench),
     ("dry-run roofline", roofline),
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="only run the round-engine A/B and write "
+                         "results/BENCH_round_engine.json")
+    args = ap.parse_args()
     out_dir = Path(__file__).resolve().parents[1] / "results"
     out_dir.mkdir(exist_ok=True)
+    if args.json:
+        import json
+
+        out = perf_federated.bench_json(out_dir)
+        payload = json.loads(out.read_text())
+        print(json.dumps(payload, indent=1))
+        if not payload["acceptance"]["pass"]:
+            print("# FAIL: scanned engine below the acceptance target "
+                  f"({payload['acceptance']})", file=sys.stderr)
+            sys.exit(1)
+        return
     print("name,us_per_call,derived")
     for title, mod in MODULES:
         print(f"# --- {title} ---", flush=True)

@@ -15,6 +15,21 @@ Heterogeneous fleets (ragged width-sliced sub-models, paper §6.4) run the
 same way since the shape-grouped engine: one fused step per shape group —
 see ``examples/heterogeneous_models.py`` and
 ``benchmarks/heterogeneous.py --perf`` for that A/B.
+
+Going faster still — multi-round scanning: when local training is
+device-fused (``batched_train_fn``) and the allocator is the jit-able one
+(``allocator="jax"``), ``rounds_per_dispatch=K`` runs K whole rounds —
+training, masks, aggregation, dropout-rate re-allocation, round clock —
+as ONE ``lax.scan`` device dispatch.  When does it pay off?  The scan
+compiles once per chunk length but removes a Python dispatch + allocator
+call + device->host sync PER ROUND, so it wins whenever you run enough
+rounds to amortise the compile: long simulations, sweeps re-using the
+compile across configs, or small/medium models where the per-round host
+overhead rivals the compute (~4.7x rounds/sec over per-round engine
+dispatch at 64 clients on CPU — ``benchmarks/perf_federated.py``).  For
+a handful of rounds, or when you need per-round ``eval_fn`` callbacks
+(like this example) or per-client Python training, stay on per-round
+dispatch.
 """
 
 import argparse

@@ -34,6 +34,7 @@ from repro.core.protocol import (FedDDServer, ProtocolConfig, RoundRecord,
 from repro.core.round_engine import (BatchedRoundEngine, GroupBatch,
                                      GroupedFleetState, GroupedRoundEngine,
                                      GroupedRoundOutputs, RoundOutputs,
+                                     ScanState, ScanTelemetry, ScanTrace,
                                      make_batched_train_fn, slice_pytree,
                                      stack_pytrees, unstack_groups,
                                      unstack_pytree)

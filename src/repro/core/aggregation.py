@@ -84,6 +84,7 @@ def aggregate_sparse_grouped(
     *,
     prev_global: Optional[object] = None,
     use_kernel: bool = False,
+    single_canvas: bool = True,
 ):
     """Eq. (4) over a shape-GROUPED ragged fleet: scatter every group's
     stacked sub-model leaves into a full-width client canvas, then run the
@@ -98,6 +99,15 @@ def aggregate_sparse_grouped(
     Eq. (4) sum) — and feeds them to the same :func:`_leaf_masked_mean`, so
     grouped aggregation is bit-identical to the padded per-client loop.
 
+    Canvas rows must be distinct across groups (each client/buffer slot
+    belongs to exactly one shape group); the default ``single_canvas`` path
+    zero-pads every group's stack to global widths, concatenates the groups
+    along the member axis, and lands all N rows with ONE scatter per leaf —
+    the padding is exactly the zero tail the sequential per-group scatters
+    left untouched, so the two paths are bit-identical (pinned by
+    tests/test_grouped_engine.py) while the traced graph shrinks from
+    O(groups) chained scatters per leaf to one.
+
     Args:
       group_params: per group, a stacked pytree with leaves (n_g, *local).
       group_masks: per group, channel-shaped stacked masks
@@ -108,6 +118,9 @@ def aggregate_sparse_grouped(
         zero drops that client from both sums.
       global_template: pytree whose leaves carry the full-model shapes.
       prev_global: pytree used to fill positions no client uploaded.
+      single_canvas: fuse all groups into one full-width scatter per leaf
+        (default); ``False`` keeps the sequential per-group scatters as
+        the reference for the equivalence tests.
 
     Returns the aggregated full-width global pytree.
     """
@@ -118,18 +131,32 @@ def aggregate_sparse_grouped(
     mleaves = [jax.tree_util.tree_leaves(m) for m in group_masks]
     w = jnp.asarray(client_weights, jnp.float32)
     n = w.shape[0]
+    all_rows = (jnp.concatenate([jnp.asarray(i) for i in group_indices])
+                if single_canvas else None)
 
     out = []
     for li, gl in enumerate(g_leaves):
         stack_w = jnp.zeros((n,) + gl.shape, gl.dtype)
         stack_m = jnp.zeros((n,) + gl.shape, gl.dtype)
-        for gi, idx in enumerate(group_indices):
-            lw = leaves[gi][li]                            # (n_g, *local)
-            lm = jnp.broadcast_to(mleaves[gi][li], lw.shape)
-            rows = (jnp.asarray(idx),) + tuple(slice(0, s)
-                                               for s in lw.shape[1:])
-            stack_w = stack_w.at[rows].set(lw.astype(gl.dtype))
-            stack_m = stack_m.at[rows].set(lm.astype(gl.dtype))
+        if single_canvas:
+            pads_w, pads_m = [], []
+            for gi in range(len(group_indices)):
+                lw = leaves[gi][li]                        # (n_g, *local)
+                lm = jnp.broadcast_to(mleaves[gi][li], lw.shape)
+                pads = [(0, 0)] + [(0, gs - ls)
+                                   for gs, ls in zip(gl.shape, lw.shape[1:])]
+                pads_w.append(jnp.pad(lw.astype(gl.dtype), pads))
+                pads_m.append(jnp.pad(lm.astype(gl.dtype), pads))
+            stack_w = stack_w.at[all_rows].set(jnp.concatenate(pads_w))
+            stack_m = stack_m.at[all_rows].set(jnp.concatenate(pads_m))
+        else:
+            for gi, idx in enumerate(group_indices):
+                lw = leaves[gi][li]                        # (n_g, *local)
+                lm = jnp.broadcast_to(mleaves[gi][li], lw.shape)
+                rows = (jnp.asarray(idx),) + tuple(slice(0, s)
+                                                   for s in lw.shape[1:])
+                stack_w = stack_w.at[rows].set(lw.astype(gl.dtype))
+                stack_m = stack_m.at[rows].set(lm.astype(gl.dtype))
         out.append(_leaf_masked_mean(stack_w, stack_m, w, gprev[li],
                                      use_kernel))
     return jax.tree_util.tree_unflatten(treedef, out)

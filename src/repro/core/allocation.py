@@ -32,6 +32,7 @@ live inside a jitted server step.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
@@ -254,6 +255,9 @@ def _inner_knapsack_jax(lower, upper, weights, costs, budget):
     return d, cost, feasible
 
 
+@functools.partial(jax.jit, static_argnames=("a_server", "d_max", "delta",
+                                             "global_model_bytes",
+                                             "num_iters"))
 def solve_dropout_rates_jax(
     model_bytes: jax.Array,
     uplink_rate: jax.Array,
@@ -273,8 +277,27 @@ def solve_dropout_rates_jax(
 
     Mirrors :func:`solve_dropout_rates`; differentiable in the telemetry is
     NOT required (allocation is a control decision), but everything is
-    traceable so it can sit inside a jitted server step.
+    traceable so it can sit inside a jitted server step — the multi-round
+    scanned engine (``round_engine.BatchedRoundEngine.run``) inlines it
+    into the per-round ``lax.scan`` body.
+
+    Bitwise stability: the solver is fenced with
+    ``lax.optimization_barrier`` at entry, at exit, and around the
+    derived search coefficients, and the function itself is jitted
+    (protocol constants static — exactly the constants a ``lax.scan``
+    round body bakes in).  XLA only guarantees identical bits for
+    identical fusion contexts; the barriers pin the solver's subgraph so
+    the per-round host dispatch and the scan-inlined call return the SAME
+    dropout bits — the scanned-vs-sequential contract
+    (tests/test_round_engine.py) relies on this.  Without them, an fma
+    formed across the call boundary (e.g. fusing ``t_hi = max(tc + k)``
+    with the surrounding round body) perturbs the golden-section bracket
+    by one ulp, which the search then amplifies.
     """
+    (model_bytes, uplink_rate, downlink_rate, compute_latency,
+     num_samples, label_coverage, train_loss) = jax.lax.optimization_barrier(
+        (model_bytes, uplink_rate, downlink_rate, compute_latency,
+         num_samples, label_coverage, train_loss))
     u = model_bytes.astype(jnp.float32)
     gmb = jnp.max(u) if global_model_bytes is None else global_model_bytes
     m = jnp.sum(num_samples)
@@ -284,6 +307,17 @@ def solve_dropout_rates_jax(
     tc = compute_latency.astype(jnp.float32)
     total_u = jnp.sum(u)
     budget = (1.0 - a_server) * total_u
+    # Fence the derived coefficients before the golden-section search.
+    # The search amplifies last-bit differences (a flipped fc<fd probe
+    # moves the bracket), and without the barrier XLA may fold/fuse these
+    # chains differently depending on the SURROUNDING graph — e.g. an fma
+    # for tc + k inside a lax.scan round body vs separate mul/add when
+    # called standalone.  With opaque inputs the downstream search graph
+    # is structurally identical in every context, so the solver returns
+    # the same bits whether dispatched per round or inlined in the
+    # multi-round scan (the scanned-vs-sequential contract relies on it).
+    u, costs, k, tc, budget = jax.lax.optimization_barrier(
+        (u, costs, k, tc, budget))
     upper = jnp.full_like(u, d_max)
     big = jnp.asarray(1e30, jnp.float32)
 
@@ -317,7 +351,7 @@ def solve_dropout_rates_jax(
     t_star = 0.5 * (a + b)
     _, d_star = inner_obj(t_star)
     makespan = jnp.max(tc + k * (1.0 - d_star))
-    return d_star, makespan
+    return jax.lax.optimization_barrier((d_star, makespan))
 
 
 ALLOCATORS = ("numpy", "jax")

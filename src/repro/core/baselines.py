@@ -10,6 +10,14 @@
 All selectors return a boolean participation vector; selected clients upload
 FULL models (that is the point of the comparison — same total transmitted
 bytes as FedDD's sparse uploads at a given A_server).
+
+Two Oort entry points exist: :func:`select_oort` (the numpy reference the
+per-round drivers call) and :func:`select_oort_traced` (a jit-able JAX
+mirror the multi-round scanned engine calls in-trace — Oort is the one
+baseline whose selection depends on the round-varying losses, so it cannot
+be precomputed host-side like FedCS).  The loss-independent system-utility
+penalty IS static per telemetry; :func:`oort_system_penalty` precomputes it
+host-side in float64 so the traced selector only re-ranks by loss.
 """
 
 from __future__ import annotations
@@ -18,6 +26,9 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.allocation import ClientTelemetry
 
@@ -62,15 +73,64 @@ class OortState:
         # statistical utility: m_n * sqrt(mean loss^2)  (Oort Eq. 1 simplified
         # to per-client loss since we track client-level, not sample-level)
         stat = tel.num_samples * np.sqrt(np.maximum(tel.train_loss, 0.0))
-        t = round_times(tel)
-        if round_deadline is None:
-            round_deadline = float(np.percentile(t, 80))
-        sys_pen = np.where(
-            t > round_deadline,
-            (round_deadline / np.maximum(t, 1e-9)) ** self.straggler_penalty,
-            1.0,
-        )
-        return stat * sys_pen
+        return stat * oort_system_penalty(tel, state=self,
+                                          round_deadline=round_deadline)
+
+
+def oort_system_penalty(tel: ClientTelemetry, *,
+                        state: Optional[OortState] = None,
+                        round_deadline: Optional[float] = None) -> np.ndarray:
+    """The loss-independent factor of Oort's utility — static per telemetry.
+
+    ``utilities == num_samples * sqrt(max(loss, 0)) * oort_system_penalty``
+    (this IS the penalty :meth:`OortState.utilities` applies — single
+    source, so the numpy and traced Oort paths cannot drift): the
+    straggler penalty depends only on the (static) round times, so the
+    scanned engine precomputes it host-side in float64 and passes it into
+    the traced selector, which then only has to re-rank by the carried
+    losses each round.
+    """
+    state = state or OortState()
+    t = round_times(tel)
+    if round_deadline is None:
+        round_deadline = float(np.percentile(t, 80))
+    return np.where(
+        t > round_deadline,
+        (round_deadline / np.maximum(t, 1e-9)) ** state.straggler_penalty,
+        1.0)
+
+
+def select_oort_traced(train_loss: jax.Array, *, num_samples: jax.Array,
+                       system_penalty: jax.Array, model_bytes: jax.Array,
+                       budget: jax.Array) -> jax.Array:
+    """Jit-able :func:`select_oort` for the multi-round scanned engine.
+
+    Mirrors the numpy greedy exactly — rank by utility, admit clients whose
+    model fits the remaining ``a_server`` byte budget, always keep at least
+    the top-ranked client — but runs on traced (carry) losses so Oort
+    rounds can live inside ``lax.scan``.  Arithmetic is float32 on device
+    (the reference is float64), so selection can differ from the numpy path
+    only when two utilities or a budget boundary tie to within float32
+    resolution; ``jnp.argsort`` is additionally stable where ``np.argsort``
+    is not.  The scanned-vs-sequential parity test pins agreement on
+    generic (non-degenerate) telemetry.
+    """
+    util = (num_samples * jnp.sqrt(jnp.maximum(train_loss, 0.0))
+            * system_penalty)
+    order = jnp.argsort(-util)
+    n = util.shape[0]
+
+    def admit(carry, i):
+        used, sel = carry
+        u_i = model_bytes[i]
+        take = used + u_i <= budget + 1e-9
+        used = used + jnp.where(take, u_i, 0.0)
+        return (used, sel.at[i].set(take)), None
+
+    (_, sel), _ = jax.lax.scan(
+        admit, (jnp.zeros((), jnp.float32), jnp.zeros((n,), bool)), order)
+    fallback = jnp.zeros((n,), bool).at[order[0]].set(True)
+    return jnp.where(jnp.any(sel), sel, fallback)
 
 
 def select_oort(tel: ClientTelemetry, *, a_server: float,

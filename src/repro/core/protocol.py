@@ -26,13 +26,24 @@ homogeneous (any scheme)    **batched engine** (core/round_engine.py): one
                             too; fedavg / fedcs / oort run ``dense_masks``
                             mode with non-participants as 0-weights in the
                             stacked Eq. (4) aggregation
+homogeneous +               **scanned engine** (core/round_engine.py
+``rounds_per_dispatch>1``   BatchedRoundEngine.run): K rounds per device
+                            dispatch via ``lax.scan`` — training, masks,
+                            Eq. (4)/(5)/(6), the Eq. (9)-(11) re-allocation
+                            AND the Eq. (12) clock all live in the scan
+                            carry; ONE host transfer (the stacked
+                            ScanTrace) per chunk.  Requires
+                            ``allocator="jax"``, ``batched_train_fn``, and
+                            no per-round ``eval_fn``; learning state is
+                            bit-identical to K sequential engine rounds
+                            (allocator pinned to f32-ulp scale)
 heterogeneous (ragged       **grouped engine** (core/round_engine.py
 widths, any scheme)         GroupedRoundEngine): clients partitioned by
                             sub-model shape (repro.fl.heterogeneity), one
                             fused step per shape census — coverage-aware
-                            batched masks at native widths, scatter into the
-                            full-width Eq. (4) canvas, local-width client
-                            updates
+                            batched masks at native widths, one shared
+                            scatter into the full-width Eq. (4) canvas,
+                            local-width client updates
 track_epsilon, or           **reference loop**: the per-client Python loop,
 ``batched=False``           kept as the bit-exactness oracle (grouped and
                             batched engines are pinned against it) and for
@@ -100,8 +111,12 @@ class ProtocolConfig:
                                      # per-client loop
     allocator: str = "numpy"         # Eq. (16)/(17) LP solver: "numpy"
                                      # (exact reference) or "jax" (jit-able
-                                     # fori_loop golden section; precursor
-                                     # to the multi-round lax.scan)
+                                     # fori_loop golden section; required
+                                     # by the multi-round lax.scan)
+    rounds_per_dispatch: int = 1     # K>1: run K rounds as ONE lax.scan
+                                     # device dispatch (homogeneous engine
+                                     # + batched_train_fn + allocator="jax"
+                                     # only); 1 = per-round dispatch
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -109,6 +124,14 @@ class ProtocolConfig:
         if self.allocator not in ALLOCATORS:
             raise ValueError(f"unknown allocator {self.allocator!r}; "
                              f"expected one of {ALLOCATORS}")
+        if self.rounds_per_dispatch < 1:
+            raise ValueError("rounds_per_dispatch must be >= 1, got "
+                             f"{self.rounds_per_dispatch}")
+        if self.rounds_per_dispatch > 1 and self.allocator != "jax":
+            raise ValueError(
+                "rounds_per_dispatch > 1 scans the dropout-rate allocation "
+                "inside the device step and therefore requires "
+                "allocator='jax' (the numpy LP cannot be traced)")
 
 
 @dataclasses.dataclass
@@ -275,6 +298,53 @@ class _EngineExecutor(_RoundExecutor):
         for cs, p in zip(self.srv.clients,
                          round_engine.unstack_pytree(self.stacked, n)):
             cs.params = p
+
+    # -- multi-round scanned dispatch (rounds_per_dispatch > 1) -------------
+
+    def run_chunk(self, t_start: int, count: int,
+                  losses: np.ndarray) -> round_engine.ScanTrace:
+        """Run rounds ``t_start .. t_start+count-1`` as ONE lax.scan
+        dispatch (:meth:`BatchedRoundEngine.run`), rebinding the stacked
+        client state / global params / PRNG key from the final carry and
+        returning the host-fetched :class:`ScanTrace` — the chunk's single
+        device->host transfer.  The scanned carry donates its buffers
+        (in-place params update where the backend supports donation).
+        """
+        srv, cfg = self.srv, self.srv.cfg
+        if not hasattr(self, "_scan_static"):
+            # static per run: the staged telemetry, the loss-independent
+            # fedcs selection, and oort's system penalty / byte budget
+            static_part, pen, budget = None, None, 0.0
+            if cfg.scheme == "fedcs":
+                static_part = baselines.select_fedcs(srv.tel,
+                                                     a_server=cfg.a_server)
+            elif cfg.scheme == "oort":
+                pen = baselines.oort_system_penalty(srv.tel)
+                budget = cfg.a_server * float(np.sum(srv.tel.model_bytes))
+            self._scan_static = (
+                round_engine.ScanTelemetry.from_host(srv.tel),
+                static_part, pen, budget)
+        scan_tel, static_part, pen, budget = self._scan_static
+        state = round_engine.ScanState(
+            client_params=self.stacked,
+            global_params=srv.global_params,
+            losses=jnp.asarray(losses, jnp.float32),
+            dropout=jnp.asarray(srv.dropout, jnp.float32),
+            rng=srv.rng,
+            sim_time=jnp.zeros((), jnp.float32))
+        out, trace = self.engine.run(
+            state, scan_tel, num_rounds=count,
+            batched_train_fn=self.batched_train_fn, weights=self.weights,
+            h=cfg.h, a_server=cfg.a_server, d_max=cfg.d_max,
+            delta=cfg.delta,
+            global_model_bytes=_tree_bytes(srv.global_params),
+            t_start=t_start, scheme=cfg.scheme,
+            static_participants=static_part, oort_penalty=pen,
+            oort_budget=budget)
+        self.stacked = out.client_params
+        srv.global_params = out.global_params
+        srv.rng = out.rng
+        return jax.device_get(trace)
 
 
 class _GroupedEngineExecutor(_RoundExecutor):
@@ -525,6 +595,27 @@ class FedDDServer:
         executor = self._EXECUTORS[kind](self, local_train_fn,
                                          batched_train_fn)
 
+        if cfg.rounds_per_dispatch > 1:
+            if kind != "engine":
+                raise ValueError(
+                    "rounds_per_dispatch > 1 requires the homogeneous "
+                    "batched engine (batched=True, track_epsilon=False, "
+                    f"homogeneous fleet); this run routes to {kind!r}")
+            if batched_train_fn is None:
+                raise ValueError(
+                    "rounds_per_dispatch > 1 requires batched_train_fn: "
+                    "local training must be device-fused for the round "
+                    "loop to scan")
+            if eval_fn is not None:
+                raise ValueError(
+                    "eval_fn evaluates every round on the host, but with "
+                    "rounds_per_dispatch > 1 params only reach the host "
+                    "at dispatch boundaries; use rounds_per_dispatch=1 "
+                    "for per-round eval")
+            self._run_scanned(executor, rounds, history, full_bytes)
+            executor.finalize()
+            return RunResult(history, self.global_params)
+
         for t in range(1, rounds + 1):
             t0 = time.perf_counter()
             self.rng, rk = jax.random.split(self.rng)
@@ -547,6 +638,57 @@ class FedDDServer:
 
         executor.finalize()
         return RunResult(history, self.global_params)
+
+    def _run_scanned(self, executor: "_EngineExecutor", rounds: int,
+                     history: List[RoundRecord], full_bytes: float) -> None:
+        """Chunked multi-round execution: ``rounds_per_dispatch`` rounds
+        per ``lax.scan`` device dispatch, spliced back into the per-round
+        :class:`RoundRecord` stream.
+
+        The scan carries the f32 device rendering of the round clock; the
+        RECORDS recompute allocation clipping and the Eq. (12) clock
+        host-side in float64 from the traced rates/participants — exactly
+        the sequential driver's arithmetic — so a scanned history matches
+        per-round dispatch bit for bit wherever the in-scan allocator
+        does (always for the learning state; rates to f32-ulp scale —
+        tests/test_round_engine.py).  ``host_wall_time`` is the chunk
+        wall time amortised over its rounds (individual rounds are not
+        host-observable by design).
+        """
+        cfg = self.cfg
+        losses = np.ones(self.tel.num_clients)
+        sim_time = 0.0
+        t = 1
+        while t <= rounds:
+            k = min(cfg.rounds_per_dispatch, rounds - t + 1)
+            t0 = time.perf_counter()
+            trace = executor.run_chunk(t, k, losses)
+            wall = (time.perf_counter() - t0) / k
+            tr_losses = np.asarray(trace.losses, float)
+            tr_dens = np.asarray(trace.densities, float)
+            tr_dnext = np.asarray(trace.next_dropout, np.float64)
+            tr_part = np.asarray(trace.participants, bool)
+            for j in range(k):
+                d_used = self.dropout.copy()
+                part = tr_part[j]
+                losses = tr_losses[j]
+                if cfg.scheme == "feddd":
+                    # the sequential driver clips the device rates in
+                    # float64 (solve_dropout_rates_with); replay that on
+                    # the traced rates so records match bit for bit
+                    self.dropout = np.clip(tr_dnext[j], 0.0, cfg.d_max)
+                uploaded = float(np.dot(tr_dens[j] * part,
+                                        self.tel.model_bytes))
+                sim_time, round_t, _ = self._finish_round(
+                    part, sim_time, None, d_used)
+                history.append(RoundRecord(
+                    round=t + j, sim_time=sim_time,
+                    sim_round_time=round_t, host_wall_time=wall,
+                    mean_loss=float(np.mean(losses)),
+                    dropout_rates=self.dropout.copy(),
+                    uploaded_fraction=uploaded / max(full_bytes, 1e-9),
+                    participants=int(np.sum(part))))
+            t += k
 
     def _record(self, t: int, t0: float, sim_time: float,
                 sim_round_time: float, losses: np.ndarray,

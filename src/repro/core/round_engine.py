@@ -30,6 +30,26 @@ all-ones masks, no scoring) and the event-driven simulator
 (``repro.sim.runner``): non-participation, deadline-dropped stragglers, and
 staleness-decayed async merges are all expressed as per-client aggregation
 weights — weight 0 excludes a client from the stacked Eq. (4) reduction.
+
+Multi-round fusion (``BatchedRoundEngine.run``): once per-round compute is
+one fused step, the round LOOP itself is the remaining overhead — every
+round pays a Python dispatch, an allocator call, and a (losses, densities)
+device->host transfer before the next step can launch.  With the jit-able
+allocator (``allocation.solve_dropout_rates_jax``) the whole train loop —
+allocate -> select -> aggregate -> update -> re-allocate — lifts into a
+``lax.scan`` over rounds: K rounds run as ONE device dispatch carrying
+(params, losses, dropout rates, PRNG key, Eq. (12) clock) and the only
+host traffic is one transfer of the stacked :class:`ScanTrace` telemetry
+at the end.  ``protocol.py`` routes this via
+``ProtocolConfig.rounds_per_dispatch`` and splices the trace back into the
+per-round ``RoundRecord`` stream.  Equivalence contract
+(tests/test_round_engine.py): the learning state — params, masks, losses,
+participation — is bit-identical to K sequential engine steps, and the
+Eq. (9)-(11) dropout rates match to the last float32 bit the
+``optimization_barrier``-fenced allocator can pin (identical for the test
+fixtures; within a few ulps in the worst case, because XLA compiles the
+golden-section search per program and its final bit is context
+sensitive — see ``allocation.solve_dropout_rates_jax``).
 """
 
 from __future__ import annotations
@@ -41,7 +61,7 @@ from typing import List, NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, selection
+from repro.core import aggregation, allocation, baselines, selection
 
 
 class RoundOutputs(NamedTuple):
@@ -75,6 +95,59 @@ class GroupedRoundOutputs(NamedTuple):
     densities: jax.Array       # (N,) canvas of upload densities
 
 
+class ScanTelemetry(NamedTuple):
+    """Static per-run client telemetry staged on device for the scanned
+    multi-round path: the Eq. (9)-(11) allocator inputs plus the Eq. (12)
+    clock coefficients.  ``train_loss`` is deliberately absent — it is
+    round-dynamic and lives in the :class:`ScanState` carry.
+    """
+
+    model_bytes: jax.Array     # (N,) f32 U_n
+    uplink_rate: jax.Array     # (N,) f32 r_n^u
+    downlink_rate: jax.Array   # (N,) f32 r_n^d
+    compute_latency: jax.Array # (N,) f32 t_n^cmp
+    num_samples: jax.Array     # (N,) f32 m_n
+    label_coverage: jax.Array  # (N,) f32 Eq. (13) coverage term
+
+    @classmethod
+    def from_host(cls, tel) -> "ScanTelemetry":
+        """Stage a :class:`repro.core.allocation.ClientTelemetry` (minus
+        the dynamic ``train_loss``) as float32 device arrays."""
+        return cls(*(jnp.asarray(getattr(tel, f), jnp.float32)
+                     for f in cls._fields))
+
+
+class ScanState(NamedTuple):
+    """The ``lax.scan`` carry of the multi-round fused path — everything
+    round t hands round t+1, entirely on device."""
+
+    client_params: object      # stacked pytree, leaves (N, *leaf): W_n^t
+    global_params: object      # pytree: W^{t-1}
+    losses: jax.Array          # (N,) f32 server-side loss view
+    dropout: jax.Array         # (N,) f32 D_t (rates the NEXT uploads use)
+    rng: jax.Array             # protocol PRNG key (split once per round)
+    sim_time: jax.Array        # () f32 cumulative Eq. (12) clock (device
+                               # axis; chunk-relative — see ScanTrace)
+
+
+class ScanTrace(NamedTuple):
+    """Per-round telemetry stacked over the scanned chunk — the chunk's ONE
+    device->host transfer.  ``round_time`` / ``sim_time`` are the float32
+    DEVICE rendering of the Eq. (12) clock (``sim_time`` cumulative from
+    the chunk start); the protocol driver recomputes the authoritative
+    float64 clock host-side from ``next_dropout`` + ``participants`` so
+    spliced ``RoundRecord`` streams stay bit-identical to sequential
+    rounds.
+    """
+
+    losses: jax.Array          # (K, N) f32 post-round losses
+    densities: jax.Array       # (K, N) f32 upload densities
+    next_dropout: jax.Array    # (K, N) f32 D_{t+1} (the Eq. (9)-(11) solve)
+    participants: jax.Array    # (K, N) bool round participation
+    round_time: jax.Array      # (K,) f32 Eq. (12) round duration (device)
+    sim_time: jax.Array        # (K,) f32 cumulative device clock
+
+
 def stack_pytrees(trees: Sequence) -> object:
     """[pytree] x N (identical structure/shapes) -> pytree of (N, *leaf)."""
     return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
@@ -84,6 +157,21 @@ def unstack_pytree(stacked, n: int) -> List:
     """Inverse of :func:`stack_pytrees` (lazy device slices, no host sync)."""
     return [jax.tree_util.tree_map(lambda l: l[i], stacked)
             for i in range(n)]
+
+
+def _adopt_global(new_global, stacked):
+    """Eq. (6): every client adopts the fresh global model (the un-stacked
+    global broadcasts against the (N, ...) stacked leaves)."""
+    return jax.tree_util.tree_map(
+        lambda g, l: jnp.broadcast_to(g, l.shape).astype(l.dtype),
+        new_global, stacked)
+
+
+def _dense_masks(stacked, n: int):
+    """All-ones channel masks + unit densities (full-model uploads)."""
+    masks = jax.tree_util.tree_map(
+        lambda l: jnp.ones((n,) + (1,) * (l.ndim - 1), l.dtype), stacked)
+    return masks, jnp.ones((n,), jnp.float32)
 
 
 # The whole server side of Algorithm 1 (steps 2-4 + 6-7) in one trace.
@@ -101,10 +189,7 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
         # contributes nothing to either Eq. (4) sum, exactly like being
         # left out of the aggregation list.
         n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
-        masks = jax.tree_util.tree_map(
-            lambda l: jnp.ones((n,) + (1,) * (l.ndim - 1), l.dtype),
-            stacked_new)
-        density = jnp.ones((n,), jnp.float32)
+        masks, density = _dense_masks(stacked_new, n)
     else:
         masks, density = selection.build_masks_batched(
             stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
@@ -112,10 +197,7 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
         stacked_new, masks, weights, prev_global=global_params,
         use_kernel=sel_cfg.use_kernel)
     if full_round:
-        # Eq. (6): every client adopts the fresh global model.
-        new_clients = jax.tree_util.tree_map(
-            lambda g, l: jnp.broadcast_to(g, l.shape).astype(l.dtype),
-            new_global, stacked_new)
+        new_clients = _adopt_global(new_global, stacked_new)
     else:
         # Eq. (5): the un-stacked global broadcasts against the (N, ...)
         # stacked leaves, so the per-client rule applies verbatim.
@@ -164,6 +246,191 @@ class BatchedRoundEngine:
             jnp.asarray(weights, jnp.float32), rng,
             sel_cfg=self.selection_cfg, full_round=bool(full_round),
             dense_masks=bool(dense_masks))
+
+    def run(self, state: ScanState, telemetry: ScanTelemetry, *,
+            num_rounds: int, batched_train_fn, weights,
+            h: int, a_server: float, d_max: float, delta: float,
+            global_model_bytes: float, t_start=1, scheme: str = "feddd",
+            static_participants=None, oort_penalty=None,
+            oort_budget: float = 0.0, alloc_iters: int = 96,
+            donate: bool = True) -> Tuple[ScanState, ScanTrace]:
+        """Run ``num_rounds`` FULL rounds — training, masks, Eq. (4)
+        aggregation, Eq. (5)/(6) updates, the Eq. (9)-(11) dropout-rate
+        re-allocation AND the Eq. (12) clock — as ONE ``lax.scan`` device
+        dispatch.
+
+        Each scanned round reproduces :meth:`step` fed the same carry —
+        learning state bit-identical, allocator output pinned to
+        float32-ulp scale (the protocol's chunked executor and
+        tests/test_round_engine.py hold the contract); the win is that K
+        rounds cost one Python dispatch and one host transfer (the
+        stacked :class:`ScanTrace`) instead of K of each.
+
+        Args:
+          state: the :class:`ScanState` carry entering round ``t_start``.
+          telemetry: static :class:`ScanTelemetry` (allocator + clock
+            inputs).
+          num_rounds: K, the chunk length (static: one compile per K).
+          batched_train_fn: ``(stacked_params, round_key) ->
+            (stacked_params, (N,) losses)`` — local training must be
+            device-fused for the loop to scan.  Pass it ``jax.jit``-wrapped
+            (callers already do — jit-of-jit just inlines): per-round
+            dispatch then runs the same XLA-compiled arithmetic the scan
+            inlines, which is what makes scanned rounds bit-identical to
+            sequential ones.  An eager train fn is still correct but can
+            differ from its compiled self in the last float32 bit
+            (e.g. fused multiply-adds).
+          weights: (N,) aggregation weights m_n (sample counts).
+          h / a_server / d_max / delta / global_model_bytes: protocol
+            constants (static).
+          t_start: 1-based round index of the chunk's first round (traced:
+            successive chunks reuse the compile).
+          scheme: "feddd" runs masks + re-allocation; the dense baselines
+            ("fedavg" / "fedcs" / "oort") run full uploads with
+            non-participants masked back to stale params/losses.
+          static_participants: (N,) bool — required for "fedcs", whose
+            loss-independent selection is precomputed host-side.
+          oort_penalty / oort_budget: required for "oort" — the static
+            system-utility penalty (:func:`repro.core.baselines
+            .oort_system_penalty`) and the byte budget for the traced
+            greedy re-ranking.
+          alloc_iters: golden-section iterations of the in-scan allocator
+            (96 matches ``solve_dropout_rates_with``'s default, so the
+            scanned rates are bit-identical to the sequential
+            ``allocator="jax"`` path).
+          donate: donate the STACKED PARAMS carry to the dispatch
+            (``donate_argnums`` on the ``client_params`` argument only —
+            the global params / losses / rng may alias caller-visible
+            arrays and are never donated) so the big buffer updates in
+            place instead of being copied per chunk.  XLA implements the
+            donation on CPU/GPU/TPU for the pinned jax version; a backend
+            that declines falls back to a copy with a compile-time
+            warning.  The caller must treat the passed-in stacked carry
+            as consumed (tests/test_round_engine.py
+            ::test_scanned_run_donates_stacked_carry pins both sides).
+        """
+        if scheme == "fedcs" and static_participants is None:
+            raise ValueError("scheme='fedcs' requires static_participants")
+        if scheme == "oort" and oort_penalty is None:
+            raise ValueError("scheme='oort' requires oort_penalty (see "
+                             "baselines.oort_system_penalty) + oort_budget")
+        n = telemetry.model_bytes.shape[0]
+        fn = _scanned_rounds_fn(
+            batched_train_fn, self.selection_cfg, int(num_rounds), int(h),
+            str(scheme), float(a_server), float(d_max), float(delta),
+            float(global_model_bytes), int(alloc_iters), bool(donate))
+        part = (jnp.ones((n,), bool) if static_participants is None
+                else jnp.asarray(static_participants, bool))
+        pen = (jnp.ones((n,), jnp.float32) if oort_penalty is None
+               else jnp.asarray(oort_penalty, jnp.float32))
+        return fn(state.client_params, tuple(state)[1:], telemetry,
+                  jnp.asarray(t_start, jnp.int32),
+                  jnp.asarray(weights, jnp.float32), part, pen,
+                  jnp.asarray(oort_budget, jnp.float32))
+
+
+# One compiled fn per (train fn, selection config, chunk length, protocol
+# constants): the module-level cache is shared across engine instances and
+# protocol runs, and t_start stays traced so successive chunks of the same
+# length never retrace.
+@functools.lru_cache(maxsize=64)
+def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
+                       num_rounds: int, h: int, scheme: str,
+                       a_server: float, d_max: float, delta: float,
+                       global_model_bytes: float, alloc_iters: int,
+                       donate: bool):
+    dense = scheme != "feddd"
+
+    # client_params is a separate leading argument so donate_argnums can
+    # target JUST the stacked params carry (the big buffer): the global
+    # params / losses / rng entries of the state may alias caller-visible
+    # arrays (e.g. the protocol's user-provided global pytree) and must
+    # not be invalidated.
+    def run_rounds(client_params, rest: Tuple, tel: ScanTelemetry, t_start,
+                   weights, static_part, oort_penalty, oort_budget):
+        state = ScanState(client_params, *rest)
+        n = weights.shape[0]
+
+        def body(st: ScanState, t):
+            params, gparams, losses, dropout, rng, sim_time = st
+            rng, rk = jax.random.split(rng)
+            d_used = dropout
+            # participation — the only scheme whose selection is both
+            # dynamic and loss-dependent (oort) re-ranks in-trace
+            if scheme == "fedcs":
+                part = static_part
+            elif scheme == "oort":
+                part = baselines.select_oort_traced(
+                    losses, num_samples=tel.num_samples,
+                    system_penalty=oort_penalty,
+                    model_bytes=tel.model_bytes, budget=oort_budget)
+            else:                        # feddd / fedavg: everyone
+                part = jnp.ones((n,), bool)
+            stacked_new, loss_dev = train_fn(params, rk)
+            loss_dev = jnp.asarray(loss_dev, jnp.float32)
+            if dense:
+                # Non-participants must not train this round: the vmapped
+                # trainer computed every row, participation masks the
+                # results back to stale params/losses (exactly the
+                # per-round executor's rule).
+                pexp = part.reshape
+                stacked_new = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        pexp((-1,) + (1,) * (new.ndim - 1)), new, old),
+                    stacked_new, params)
+                loss_dev = jnp.where(part, loss_dev, losses)
+                masks, density = _dense_masks(stacked_new, n)
+            else:
+                masks, density = selection.build_masks_batched(
+                    params, stacked_new, d_used, config=sel_cfg, rng=rk)
+            new_global = aggregation.aggregate_sparse_stacked(
+                stacked_new, masks, weights * part, prev_global=gparams,
+                use_kernel=sel_cfg.use_kernel)
+            if dense:
+                new_clients = _adopt_global(new_global, stacked_new)
+            else:
+                # t is traced inside the scan, so the Eq. (5)/(6) choice
+                # is a select over both updates rather than the sequential
+                # step's two static compiles.
+                full = (t % h) == 0
+                eq6 = _adopt_global(new_global, stacked_new)
+                eq5 = aggregation.client_update_sparse(new_global,
+                                                       stacked_new, masks)
+                new_clients = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(full, a, b), eq6, eq5)
+            # Step 5: dropout-rate re-allocation for round t+1 (feddd).
+            # The f32 clip mirrors the host dispatcher's float64 clip —
+            # both feed the next round the same f32 rates.
+            if dense:
+                d_next = jnp.zeros_like(dropout)
+                d_time = jnp.zeros_like(dropout)
+            else:
+                # The solver self-fences with optimization_barrier (see
+                # its docstring), so inlining it here returns the same
+                # bits as the per-round host dispatch.
+                d_next, _ = allocation.solve_dropout_rates_jax(
+                    *tel, jnp.maximum(loss_dev, 1e-6),
+                    a_server=a_server, d_max=d_max, delta=delta,
+                    global_model_bytes=global_model_bytes,
+                    num_iters=alloc_iters)
+                d_next = jnp.clip(d_next, 0.0, d_max)
+                d_time = d_used
+            # Eq. (12) round clock over participating clients, using the
+            # dropout the uploads actually used (device f32 axis).
+            u_eff = tel.model_bytes * (1.0 - d_time)
+            t_all = (tel.compute_latency + u_eff / tel.uplink_rate
+                     + u_eff / tel.downlink_rate)
+            round_t = jnp.max(jnp.where(part, t_all, -jnp.inf))
+            sim_time = sim_time + round_t
+            st2 = ScanState(new_clients, new_global, loss_dev, d_next,
+                            rng, sim_time)
+            return st2, ScanTrace(loss_dev, density, d_next, part,
+                                  round_t, sim_time)
+
+        ts = t_start + jnp.arange(num_rounds, dtype=jnp.int32)
+        return jax.lax.scan(body, state, ts)
+
+    return jax.jit(run_rounds, donate_argnums=(0,) if donate else ())
 
 
 # --------------------------------------------------- shape-grouped engine

@@ -230,6 +230,12 @@ def build_masks_batched(
     (the per-client upload density, computed on device so the caller makes a
     single small host transfer instead of O(clients x leaves) ``float()``
     round-trips).
+
+    Everything here is scan-safe: ``dropout_rates``, ``rng``, and
+    ``client_indices`` may be values carried by an enclosing ``lax.scan``
+    (the multi-round engine passes the round key and the in-scan allocated
+    rates straight from its carry), and the ``lax.top_k`` rank compare
+    keeps the keep-count dynamic so per-round rate changes never retrace.
     """
     if config.scheme == "random" and rng is None:
         raise ValueError("scheme='random' requires rng")

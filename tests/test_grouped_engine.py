@@ -208,6 +208,44 @@ def test_build_masks_batched_coverage_matches_per_client():
         assert _trees_equal(ref, got)
 
 
+def test_aggregate_sparse_grouped_single_canvas_matches_sequential():
+    """The fused single-scatter canvas (all groups padded + concatenated,
+    ONE .at[rows].set per leaf) is bit-identical to the sequential
+    per-group scatter path it replaced — including zero-weight rows and
+    rows no group owns (prev_global fill)."""
+    from repro.fl.heterogeneity import group_by_shape
+
+    n = 7                     # one more row than clients: an un-owned row
+    gp, clients = _ragged_fleet(6, seed=11)
+    news = [jax.tree_util.tree_map(
+        lambda x, i=i: x + 0.1 * jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(3), i), x.shape), p)
+        for i, p in enumerate(clients)]
+    groups = group_by_shape(clients)
+    rk = jax.random.PRNGKey(5)
+    drop = np.linspace(0.0, 0.7, 6)
+    group_params, group_masks, group_idx = [], [], []
+    for g in groups:
+        stacked_old = stack_pytrees([clients[i] for i in g.indices])
+        stacked_new = stack_pytrees([news[i] for i in g.indices])
+        masks, _ = selection.build_masks_batched(
+            stacked_old, stacked_new,
+            jnp.asarray(drop[list(g.indices)], jnp.float32),
+            config=SelectionConfig(), rng=rk,
+            client_indices=jnp.asarray(g.indices, jnp.int32))
+        group_params.append(stacked_new)
+        group_masks.append(masks)
+        group_idx.append(jnp.asarray(g.indices, jnp.int32))
+    weights = np.asarray([1.0, 2.0, 0.0, 3.0, 1.5, 2.5, 4.0])  # 0-weight row
+    kw = dict(global_template=gp, prev_global=gp)
+    fused = aggregation.aggregate_sparse_grouped(
+        group_params, group_masks, group_idx, weights, **kw)
+    seq = aggregation.aggregate_sparse_grouped(
+        group_params, group_masks, group_idx, weights,
+        single_canvas=False, **kw)
+    assert _trees_equal(fused, seq)
+
+
 # --- end-to-end protocol parity ---------------------------------------------
 
 def test_run_scheme_grouped_bit_identical_to_loop():

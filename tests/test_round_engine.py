@@ -303,6 +303,223 @@ def test_batched_train_fn_rejected_off_engine_path():
         server.run(batched_train_fn=lambda s, k: (s, jnp.zeros(n)))
 
 
+# --- multi-round scanned dispatch (rounds_per_dispatch > 1) ----------------
+
+def _scan_telemetry(n, nbytes, seed=0):
+    from repro.core.allocation import ClientTelemetry
+
+    rng = np.random.default_rng(seed)
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+
+def _make_scan_fixture(n=8, seed=0):
+    params = _client_params(jax.random.PRNGKey(seed), 1)[0]
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(params)))
+    tel = _scan_telemetry(n, nbytes, seed=seed)
+
+    # jitted so the sequential path runs the same XLA-compiled arithmetic
+    # the scan inlines (an eager fn can differ in the last f32 bit: fma)
+    @jax.jit
+    def batched(stacked, key):
+        new = jax.tree_util.tree_map(
+            lambda x: x * 0.99 + 0.01 * jax.random.normal(
+                jax.random.fold_in(key, 1), x.shape), stacked)
+        l0 = jax.tree_util.tree_leaves(new)[0]
+        losses = jnp.mean(jnp.abs(l0.reshape(l0.shape[0], -1)), axis=1)
+        return new, losses
+
+    return params, tel, batched
+
+
+def _assert_histories_identical(h_seq, h_scan):
+    """Learning state must match EXACTLY; the allocator-derived fields
+    (dropout rates and the Eq. (12) clock computed from them) are held to
+    float32-ulp scale — XLA compiles the fenced golden-section search per
+    program, so its last bit is context sensitive (it matches exactly on
+    this fixture today, but a jax/XLA bump may legally flip an ulp)."""
+    assert len(h_seq) == len(h_scan)
+    for ra, rb in zip(h_seq, h_scan):
+        assert ra.round == rb.round
+        assert ra.mean_loss == rb.mean_loss                   # exact
+        assert ra.uploaded_fraction == rb.uploaded_fraction   # exact
+        assert ra.participants == rb.participants
+        np.testing.assert_allclose(ra.dropout_rates, rb.dropout_rates,
+                                   rtol=0, atol=5e-7)
+        assert rb.sim_time == pytest.approx(ra.sim_time, rel=1e-6)
+        assert rb.sim_round_time == pytest.approx(ra.sim_round_time,
+                                                  rel=1e-6)
+
+
+@pytest.mark.parametrize("scheme", ["feddd", "fedavg", "fedcs", "oort"])
+def test_rounds_per_dispatch_bit_identical_to_sequential(scheme):
+    """K scanned rounds == K per-round engine dispatches, bit for bit:
+    global params, client params, losses, dropout rates, and Eq. (12)
+    times (feddd runs the in-scan allocator + clock; the dense baselines
+    run full uploads with fedcs static / oort traced selection).  rounds=7
+    with K=4 also exercises the partial trailing chunk."""
+    from repro.core import FedDDServer, ProtocolConfig
+
+    params, tel, batched = _make_scan_fixture()
+    kw = dict(scheme=scheme, rounds=7, a_server=0.6, h=3, seed=0,
+              allocator="jax")
+    s_seq = FedDDServer(params, ProtocolConfig(**kw), tel)
+    r_seq = s_seq.run(batched_train_fn=batched)
+    s_scan = FedDDServer(params, ProtocolConfig(rounds_per_dispatch=4,
+                                                **kw), tel)
+    r_scan = s_scan.run(batched_train_fn=batched)
+
+    assert _trees_equal(r_seq.global_params, r_scan.global_params)
+    for a, b in zip(s_seq.clients, s_scan.clients):
+        assert _trees_equal(a.params, b.params)
+    _assert_histories_identical(r_seq.history, r_scan.history)
+    # the scenario actually exercises selection for the budgeted baselines
+    if scheme in ("fedcs", "oort"):
+        assert any(r.participants < tel.num_clients
+                   for r in r_seq.history)
+
+
+def test_rounds_per_dispatch_chunk_boundaries_agree():
+    """Chunk size must not leak into results: K=2, K=3 (uneven chunks),
+    and K=rounds all reproduce the K=1 stream."""
+    from repro.core import FedDDServer, ProtocolConfig
+
+    params, tel, batched = _make_scan_fixture(seed=3)
+    kw = dict(scheme="feddd", rounds=6, a_server=0.6, h=3, seed=0,
+              allocator="jax")
+    ref = FedDDServer(params, ProtocolConfig(**kw), tel).run(
+        batched_train_fn=batched)
+    for k in (2, 3, 6):
+        got = FedDDServer(params, ProtocolConfig(rounds_per_dispatch=k,
+                                                 **kw), tel).run(
+            batched_train_fn=batched)
+        assert _trees_equal(ref.global_params, got.global_params), k
+        _assert_histories_identical(ref.history, got.history)
+
+
+def test_scanned_engine_run_trace_and_device_clock():
+    """Engine-level contract of BatchedRoundEngine.run: trace shapes are
+    (K, N), the traced f32 clock tracks the float64 host recompute, and
+    the final carry losses/dropout equal the last trace row."""
+    from repro.core import baselines
+    from repro.core.round_engine import (BatchedRoundEngine, ScanState,
+                                         ScanTelemetry, stack_pytrees)
+
+    n, k = 6, 5
+    params, tel, batched = _make_scan_fixture(n=n, seed=1)
+    engine = BatchedRoundEngine(SelectionConfig())
+    state = ScanState(
+        client_params=stack_pytrees([params] * n),
+        global_params=params,
+        losses=jnp.ones((n,), jnp.float32),
+        dropout=jnp.zeros((n,), jnp.float32),
+        rng=jax.random.PRNGKey(0),
+        sim_time=jnp.zeros((), jnp.float32))
+    out, trace = engine.run(
+        state, ScanTelemetry.from_host(tel), num_rounds=k,
+        batched_train_fn=batched, weights=tel.num_samples, h=3,
+        a_server=0.6, d_max=0.8, delta=1.0,
+        global_model_bytes=float(np.max(tel.model_bytes)))
+    assert trace.losses.shape == (k, n)
+    assert trace.densities.shape == (k, n)
+    assert trace.next_dropout.shape == (k, n)
+    assert trace.participants.shape == (k, n)
+    assert trace.round_time.shape == (k,)
+    assert bool(jnp.all(trace.participants))         # feddd: everyone
+    np.testing.assert_array_equal(np.asarray(out.losses),
+                                  np.asarray(trace.losses[-1]))
+    np.testing.assert_array_equal(np.asarray(out.dropout),
+                                  np.asarray(trace.next_dropout[-1]))
+    # device f32 clock vs host f64 Eq. (12): close, and cumulative
+    d = np.zeros(n)
+    expect = []
+    for j in range(k):
+        expect.append(np.max(baselines.round_times(tel, d)))
+        d = np.asarray(trace.next_dropout[j], float)
+    np.testing.assert_allclose(np.asarray(trace.round_time), expect,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(trace.sim_time),
+                               np.cumsum(expect), rtol=1e-5)
+
+
+def test_scanned_run_donates_stacked_carry():
+    """donate_argnums targets ONLY the stacked params carry: the global
+    params the caller passed in must stay alive, while the stacked input
+    buffer is consumed in place (no per-dispatch copy).  XLA implements
+    donation on CPU/GPU/TPU for the pinned jax version; if a backend ever
+    declines it, it falls back to a copy and jax warns at compile — this
+    test would catch the regression by the carry staying live."""
+    from repro.core.round_engine import (BatchedRoundEngine, ScanState,
+                                         ScanTelemetry, stack_pytrees)
+
+    n = 4
+    params, tel, batched = _make_scan_fixture(n=n, seed=2)
+    stacked = stack_pytrees([params] * n)
+    donated_leaf = jax.tree_util.tree_leaves(stacked)[0]
+    global_leaf = jax.tree_util.tree_leaves(params)[0]
+    engine = BatchedRoundEngine(SelectionConfig())
+    state = ScanState(stacked, params, jnp.ones((n,), jnp.float32),
+                      jnp.zeros((n,), jnp.float32), jax.random.PRNGKey(1),
+                      jnp.zeros((), jnp.float32))
+    kw = dict(num_rounds=3, batched_train_fn=batched,
+              weights=tel.num_samples, h=3, a_server=0.6, d_max=0.8,
+              delta=1.0, global_model_bytes=float(np.max(tel.model_bytes)))
+    out, _ = engine.run(state, ScanTelemetry.from_host(tel), **kw)
+    assert not global_leaf.is_deleted()      # never donated
+    assert donated_leaf.is_deleted()         # carry consumed in place
+    # chaining chunks off the returned carry works (each chunk donates
+    # the previous chunk's output, which only the caller holds)
+    out2, _ = engine.run(out, ScanTelemetry.from_host(tel), **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out2.client_params))
+    assert jax.tree_util.tree_leaves(out.client_params)[0].is_deleted()
+
+
+def test_rounds_per_dispatch_validation():
+    """The scanned path's preconditions fail loudly: numpy allocator,
+    K < 1, missing batched_train_fn, per-round eval_fn, and non-engine
+    routes (heterogeneous fleets, batched=False) are all rejected."""
+    from repro.core import FedDDServer, ProtocolConfig
+    from repro.core.allocation import ClientTelemetry
+
+    with pytest.raises(ValueError, match="allocator"):
+        ProtocolConfig(rounds_per_dispatch=2)
+    with pytest.raises(ValueError, match="rounds_per_dispatch"):
+        ProtocolConfig(rounds_per_dispatch=0)
+
+    params, tel, batched = _make_scan_fixture(n=4)
+    cfg = dict(scheme="feddd", rounds=2, allocator="jax",
+               rounds_per_dispatch=2)
+
+    def ltf(p, idx, key):
+        return p, 1.0
+
+    srv = FedDDServer(params, ProtocolConfig(**cfg), tel)
+    with pytest.raises(ValueError, match="batched_train_fn"):
+        srv.run(ltf)
+    srv = FedDDServer(params, ProtocolConfig(**cfg), tel)
+    with pytest.raises(ValueError, match="eval_fn"):
+        srv.run(batched_train_fn=batched, eval_fn=lambda p: {})
+    srv = FedDDServer(params, ProtocolConfig(batched=False, **cfg), tel)
+    with pytest.raises(ValueError, match="homogeneous"):
+        srv.run(batched_train_fn=batched)
+
+    # ragged fleet routes to the grouped engine -> rejected
+    ragged = [params] + [jax.tree_util.tree_map(
+        lambda l: l[..., :-1] if l.ndim else l, params)] * 3
+    n4 = ClientTelemetry(*[np.ones(4)] * 7)
+    srv = FedDDServer(params, ProtocolConfig(**cfg), n4,
+                      client_params=ragged)
+    with pytest.raises(ValueError):
+        srv.run(batched_train_fn=batched)
+
+
 # --- lax.top_k vs argsort tie handling -------------------------------------
 
 def test_mask_from_scores_topk_matches_argsort_on_ties():
