@@ -121,16 +121,18 @@ def run_experiment(
     per_class_eval: bool = False,
     seed: int = 0,
     batched: bool = True,
+    comm=None,
 ):
     global_params, tel, ltf, ef, clients = setup_experiment(
         dataset, partition, num_clients=num_clients, num_train=num_train,
         num_test=num_test, hetero_specs=hetero_specs,
         per_class_eval=per_class_eval, seed=seed)
+    extra = {} if comm is None else {"comm": comm}
     return run_scheme(scheme, global_params, tel, ltf, ef,
                       client_params=clients, rounds=rounds,
                       a_server=a_server, d_max=d_max, delta=delta, h=h,
                       selection=SelectionConfig(scheme=selection_scheme),
-                      seed=seed, batched=batched)
+                      seed=seed, batched=batched, **extra)
 
 
 def run_sim_experiment(

@@ -1,0 +1,110 @@
+"""Accuracy vs ON-WIRE bytes: the wire-format grid (scheme x codec x qbits).
+
+The core protocol's byte axis was analytic (``density x model_bytes``);
+the repro.comm subsystem charges what a sparse upload actually costs —
+the kept values at the codec's precision PLUS the encoding of WHICH
+parameters survived.  This grid asks the Caldas-et-al question: where on
+the accuracy-per-byte frontier does each (mask codec, value precision)
+combination land, and where does the bitmask/index crossover sit on a
+real model?
+
+Grid (reduced mode):
+  scheme   feddd (sparse uploads) + a fedavg full-upload reference
+  codec    dense (the analytic idealization) | bitmask | index | auto
+  qbits    32 | 8 (int8 stochastic rounding)
+
+Output columns: final accuracy, CUMULATIVE on-wire MB vs raw
+(idealized) MB, overhead fraction, and simulated time — accuracy per
+wire-byte is the headline.  A second CSV section sweeps the analytic
+byte model over density to report each leaf census's measured
+bitmask/index crossover (~density 1/8).
+
+Writes ``wire_formats.csv`` to the results dir; CI uploads it as a
+build artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import csv_row, run_experiment, timed  # noqa: E402
+from repro.comm.payload import (CommConfig, WireSpec,  # noqa: E402
+                                analytic_wire_bytes)
+
+CODECS = ("dense", "bitmask", "index", "auto")
+
+
+def _crossover_rows(spec: WireSpec):
+    """Density where index coding stops beating the packed bitmask."""
+    dens = np.linspace(0.005, 0.995, 199)
+    ix = np.asarray([float(analytic_wire_bytes(
+        spec, 1.0 - d, CommConfig(codec="index"))) for d in dens])
+    bm = np.asarray([float(analytic_wire_bytes(
+        spec, 1.0 - d, CommConfig(codec="bitmask"))) for d in dens])
+    worse = np.flatnonzero(ix > bm)
+    cross = float(dens[worse[0]]) if worse.size else float("nan")
+    return cross
+
+
+def run(full: bool = False, out_dir: Path | None = None):
+    rounds = 16 if full else 6
+    clients = 16 if full else 8
+    qbits_grid = (32, 16, 8) if full else (32, 8)
+    rows = []
+    table = ["scheme,codec,qbits,final_acc,wire_mb,raw_mb,overhead_frac,"
+             "sim_s"]
+    cells = [("fedavg", "dense", 32)]
+    cells += [("feddd", c, q) for c in CODECS for q in qbits_grid]
+    for scheme, codec, qbits in cells:
+        comm = CommConfig(codec=codec, qbits=qbits)
+        res, wall = timed(lambda: run_experiment(
+            "mnist", "noniid_b", scheme, num_clients=clients,
+            rounds=rounds, num_train=2000, num_test=500, seed=0,
+            comm=comm))
+        final = res.history[-1]
+        acc = (final.metrics or {}).get("accuracy", float("nan"))
+        wire = sum(r.wire_bytes for r in res.history)
+        raw = sum(r.uploaded_bytes for r in res.history)
+        over = (wire - raw * qbits / 32.0) / max(wire, 1e-9)
+        name = f"wire_{scheme}_{codec}_q{qbits}"
+        rows.append(csv_row(
+            name, wall,
+            f"acc={acc:.3f};wire_mb={wire / 1e6:.3f};"
+            f"overhead={over:.1%}"))
+        table.append(f"{scheme},{codec},{qbits},{acc:.4f},"
+                     f"{wire / 1e6:.4f},{raw / 1e6:.4f},{over:.4f},"
+                     f"{final.sim_time:.1f}")
+    # analytic crossover of the benchmark model's leaf census
+    from repro.fl import MLP_SPEC, init_cnn_spec  # noqa: E402
+    import jax  # noqa: E402
+
+    spec = WireSpec.from_params(init_cnn_spec(jax.random.PRNGKey(0),
+                                              MLP_SPEC))
+    cross = _crossover_rows(spec)
+    table.append(f"crossover,index>bitmask,-,-,-,-,-,{cross:.4f}")
+    rows.append(csv_row("wire_crossover_density", 0.0,
+                        f"density={cross:.4f}"))
+    if out_dir:
+        out_dir.mkdir(exist_ok=True)
+        (out_dir / "wire_formats.csv").write_text("\n".join(table) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(__file__).resolve().parents[1] / "results"
+    for r in run(full=args.full, out_dir=out_dir):
+        print(r)
+    print((out_dir / "wire_formats.csv").read_text())
+
+
+if __name__ == "__main__":
+    main()

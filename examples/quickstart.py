@@ -30,6 +30,19 @@ dispatch at 64 clients on CPU — ``benchmarks/perf_federated.py``).  For
 a handful of rounds, or when you need per-round ``eval_fn`` callbacks
 (like this example) or per-client Python training, stay on per-round
 dispatch.
+
+Choosing a wire codec (``--codec`` / ``--qbits``, repro.comm): the
+default ``dense`` is the analytic idealization — bytes are just
+``density x model_bytes``.  A real sparse upload also ships WHICH
+channels survived: pick ``index`` (delta+varint) below ~12.5% upload
+density, ``bitmask`` (packed bits, ceil(C/8) per leaf) above it, or
+``auto`` to take the per-leaf minimum — the crossover sits at density
+~1/8 because a varint gap costs ~1 byte per kept channel while the
+bitmask costs C/8 regardless.  ``--qbits 8`` additionally quantizes the
+uploaded values (int8 stochastic rounding) for ~4x fewer wire bytes at
+a small accuracy cost; ``RoundRecord.wire_bytes`` then reports what
+actually crossed the uplink next to the raw ``uploaded_bytes``
+(``benchmarks/wire_formats.py`` maps the full frontier).
 """
 
 import argparse
@@ -40,6 +53,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402
 
+from repro.comm import CommConfig  # noqa: E402
 from repro.core import run_scheme  # noqa: E402
 from repro.data import (label_coverage_score, make_dataset,  # noqa: E402
                         partition_noniid_b)
@@ -56,6 +70,13 @@ def main():
     ap.add_argument("--loop", action="store_true",
                     help="force the per-client loop instead of the "
                          "batched round engine")
+    ap.add_argument("--codec", default="dense",
+                    choices=("dense", "bitmask", "index", "auto"),
+                    help="upload mask wire codec (repro.comm); dense is "
+                         "the analytic idealization")
+    ap.add_argument("--qbits", type=int, default=32, choices=(32, 16, 8),
+                    help="uploaded-value precision (8 = int8 stochastic "
+                         "rounding)")
     args = ap.parse_args()
 
     train, test = make_dataset("mnist", num_train=6000, num_test=1500)
@@ -69,12 +90,16 @@ def main():
     ef = make_eval_fn(MLP_SPEC, test, flatten=True)
 
     engine = "per-client loop" if args.loop else "batched round engine"
-    print(f"== FedDD (A_server={args.a_server}, {engine}) ==")
+    comm = CommConfig(codec=args.codec, qbits=args.qbits)
+    print(f"== FedDD (A_server={args.a_server}, {engine}, "
+          f"codec={args.codec}/q{args.qbits}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
-                       a_server=args.a_server, h=5, batched=not args.loop)
+                       a_server=args.a_server, h=5, batched=not args.loop,
+                       comm=comm)
     for r in feddd.history:
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
               f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}  "
+              f"wire={r.wire_bytes / 1e3:.0f}kB  "
               f"host={r.host_wall_time:.2f}s")
 
     print("== FedAvg (full uploads) ==")

@@ -1,0 +1,47 @@
+"""Wire-format subsystem — what a FedDD upload actually costs on the wire.
+
+The core protocol's byte accounting is analytic: ``density x model_bytes``.
+A real sparse upload must also ship *which* parameters survived the dropout
+(a mask encoding) and may quantize the surviving values (Caldas et al.,
+1812.07210; Coded Federated Dropout, 2201.11036).  This package is the
+transport layer that makes those costs first-class:
+
+  codecs     sparse-set encodings for the per-leaf channel mask — packed
+             bitmask, sorted-index delta+varint, the dense (values-only)
+             idealization, and an auto per-leaf minimum — with exact,
+             jax-traceable byte-size formulas (integer arithmetic only, so
+             the scanned multi-round engine carries them bit-stably)
+  quantize   value codecs for the kept payload: fp32 (lossless), fp16
+             (deterministic cast), int8 with PRNG-keyed stochastic
+             rounding (unbiased, deterministic cross-process)
+  payload    per-client encode_upload / decode_upload over masked pytrees,
+             the CommConfig / WireSpec plumbing, and the byte-accounting
+             helpers every driver charges through (uplink_bytes_raw /
+             account_uplink / analytic_wire_bytes)
+
+Routing: ``ProtocolConfig(comm=CommConfig(codec=..., qbits=...))``.  With
+the default ``CommConfig()`` (dense codec, 32-bit values) every driver is
+bit-identical to the pre-comm accounting: ``RoundRecord.wire_bytes ==
+uploaded_bytes`` exactly, and the Eq. (12) clock is untouched.  Sparse
+codecs add the measured mask overhead to ``wire_bytes`` and charge the
+codec's analytic bytes on the uplink leg of the clock; ``qbits < 32``
+additionally quantizes the values the server aggregates (the client's own
+Eq. (5) update keeps its local full-precision weights).
+
+The bitmask/index crossover: a packed bitmask costs ceil(C/8) bytes per
+leaf regardless of density, delta+varint index coding costs ~1 byte per
+kept channel at low density — index wins below density ~1/8 (~0.125),
+bitmask above (benchmarks/wire_formats.py measures it on the real grid).
+"""
+
+from repro.comm.codecs import (AUTO_TAG_BYTES, CODECS, HEADER_BYTES,
+                               bitmask_bytes, decode_mask, encode_mask,
+                               index_bytes, mask_overhead_bytes,
+                               mask_overhead_bytes_stacked, varint_bytes)
+from repro.comm.payload import (CommConfig, UploadPayload, WireSpec,
+                                account_uplink, analytic_uplink_vector,
+                                analytic_wire_bytes, decode_upload,
+                                encode_upload, uplink_bytes_raw)
+from repro.comm.quantize import (QBITS, quantize_dequantize,
+                                 quantize_dequantize_stacked, scale_bytes,
+                                 value_bytes)

@@ -1,0 +1,286 @@
+"""Sparse-set codecs for upload masks — who survived the dropout, in bytes.
+
+FedDD masks are *channel*-granular: per leaf, the kept set is a subset of
+the C channels (selection.build_masks returns leaves shaped
+(1, ..., C, ..., 1)).  A sparse upload therefore ships, per leaf, an
+encoding of that channel subset plus the kept values.  This module owns
+the subset encodings and their exact byte-size formulas:
+
+* ``bitmask`` — a 4-byte kept-count header + ceil(C/8) packed bits.
+  Density-independent: the right choice for moderate-to-high densities.
+* ``index``  — a 4-byte header + the kept channel indices, sorted
+  ascending, delta-encoded (gaps ``idx_k - idx_{k-1} - 1``) and
+  varint-compressed (7 data bits per byte, MSB continuation).  ~1 byte
+  per kept channel at low density; the winner below density ~1/8.
+* ``dense``  — the values-only idealization: NO mask bytes at all (the
+  receiver is assumed to know the mask).  This is exactly the analytic
+  accounting the core protocol used before this subsystem existed, kept
+  as the bit-identical baseline (``CommConfig()`` default).
+* ``auto``   — per leaf, a 1-byte codec tag + the cheaper of bitmask and
+  index — rides the crossover automatically.  (At full density the
+  ``dense`` codec itself is the fallback that beats index coding; the
+  degenerate-settings tests pin that ordering.)
+
+Byte-size formulas come in two renderings that MUST agree:
+
+* the *measured* formulas here (``mask_overhead_bytes*``) — computed from
+  an actual mask, in pure int32 arithmetic (comparison sums, no float
+  log2), so they are jax-traceable AND bit-stable across XLA programs:
+  the multi-round ``lax.scan`` engine carries them in its trace and the
+  per-round dispatch must reproduce them exactly;
+* the serialized encodings (``encode_mask`` / ``decode_mask``) — real
+  byte buffers whose length equals the measured formula and whose
+  roundtrip is exact (tests/test_comm.py pins both).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+CODECS = ("dense", "bitmask", "index", "auto")
+
+# Per-leaf framing for the sparse codecs: a u32 kept-count header (bitmask
+# and index), plus a 1-byte codec tag when "auto" picks per leaf.  The
+# dense idealization ships no mask and no header by construction.
+HEADER_BYTES = 4
+AUTO_TAG_BYTES = 1
+
+# varint thresholds: value v needs 1 + sum(v >= 2^(7k)) bytes (7 data bits
+# per byte).  Channel gaps are < 2^28 for any model this repo can hold, so
+# four thresholds suffice and everything stays in int32.
+_VARINT_THRESHOLDS = (1 << 7, 1 << 14, 1 << 21, 1 << 28)
+
+
+def varint_bytes(values, xp=jnp):
+    """Bytes to varint-encode each non-negative integer in ``values``.
+
+    Integer comparison sums only — exact (no float log2), traceable when
+    ``xp is jnp``, and identical under numpy for host-side accounting.
+    """
+    v = xp.asarray(values)
+    out = xp.ones_like(v, dtype=xp.int32)
+    for t in _VARINT_THRESHOLDS:
+        out = out + (v >= t).astype(xp.int32)
+    return out
+
+
+def bitmask_bytes(num_channels: int) -> int:
+    """Packed-bitmask payload bytes for a C-channel leaf (header excluded)."""
+    return (int(num_channels) + 7) // 8
+
+
+def _cummax(x, xp):
+    if xp is jnp:
+        return jax.lax.cummax(x, axis=x.ndim - 1)
+    return np.maximum.accumulate(x, axis=-1)
+
+
+def _index_gaps(mask1d, xp=jnp):
+    """Delta gaps ``idx_k - idx_{k-1} - 1`` at kept positions, else 0.
+
+    ``mask1d`` is a 0/1 vector (..., C); the previous kept index is an
+    exclusive running max of ``i if kept else -1`` (first gap counts from
+    index -1, so a kept channel 0 encodes gap 0).
+    """
+    m = xp.asarray(mask1d) > 0
+    c = m.shape[-1]
+    idx = xp.arange(c, dtype=xp.int32)
+    marked = xp.where(m, idx, xp.asarray(-1, xp.int32))
+    incl = _cummax(marked, xp)
+    prev = xp.concatenate(
+        [xp.full(m.shape[:-1] + (1,), -1, xp.int32), incl[..., :-1]],
+        axis=-1)
+    return xp.where(m, idx - prev - 1, 0), m
+
+
+def index_bytes(mask1d, xp=jnp):
+    """Exact delta+varint payload bytes for a 0/1 channel mask (...,C)
+    (header excluded).  Empty mask -> 0 payload bytes."""
+    gaps, m = _index_gaps(mask1d, xp)
+    return xp.sum(xp.where(m, varint_bytes(gaps, xp), 0),
+                  axis=-1).astype(xp.int32)
+
+
+def _leaf_channel_mask(mask_leaf, lead: int, xp):
+    """Collapse a broadcastable mask leaf to (..., C).
+
+    Engine masks are (N, 1, ..., C, ..., 1); per-client masks are
+    (1, ..., C, ..., 1); scalar-leaf masks are (N,) or ().  All non-channel
+    dims are 1, so a reshape to (lead dims, -1) is the channel vector.
+    """
+    m = xp.asarray(mask_leaf)
+    if lead:
+        return m.reshape(m.shape[:lead] + (-1,))
+    return m.reshape(-1)
+
+
+def _leaf_overhead(m1d, num_channels: int, codec: str, xp):
+    """Measured per-leaf mask overhead (..., ) int32 for one codec
+    (``m1d`` is the (..., C) channel mask).  The dense idealization ships
+    no mask — zero overhead (int8 scale framing is added by the callers)."""
+    lead_shape = m1d.shape[:-1]
+    if codec == "dense":
+        return xp.zeros(lead_shape, xp.int32)
+    bm = HEADER_BYTES + bitmask_bytes(num_channels)
+    ix = HEADER_BYTES + index_bytes(m1d, xp)
+    if codec == "bitmask":
+        return xp.broadcast_to(xp.asarray(bm, xp.int32), lead_shape)
+    if codec == "index":
+        return ix
+    if codec == "auto":
+        return AUTO_TAG_BYTES + xp.minimum(ix, xp.asarray(bm, xp.int32))
+    raise ValueError(f"unknown sparse codec {codec!r}; one of {CODECS}")
+
+
+def mask_overhead_bytes_stacked(masks, params_stacked, comm) -> jax.Array:
+    """Measured mask overhead per client, (N,) int32, jax-traceable.
+
+    Args:
+      masks: stacked mask pytree, leaves (N, 1, ..., C, ..., 1) — exactly
+        what ``selection.build_masks_batched`` (or the engines' dense
+        all-ones masks) produce.
+      params_stacked: the matching stacked params (client-count anchor —
+        scalar-leaf masks may carry no client axis of their own).
+      comm: a :class:`repro.comm.payload.CommConfig`.
+
+    Includes the int8 per-leaf scale framing (4 bytes per leaf with a
+    non-empty kept set) when ``comm.qbits == 8`` — the scale ships with
+    the mask header, not the values.  Everything is int32 comparison/sum
+    arithmetic, so per-round dispatch and the scan-inlined rendering
+    return identical bytes (no optimization_barrier needed).
+    """
+    mleaves = jax.tree_util.tree_leaves(masks)
+    n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+    total = jnp.zeros((n,), jnp.int32)
+    for m in mleaves:
+        m1d = _leaf_channel_mask(m, 1, jnp)
+        if m1d.shape[0] != n:    # mask leaf without a client axis
+            m1d = jnp.broadcast_to(m1d.reshape(1, -1), (n, m1d.shape[-1]))
+        nch = int(m1d.shape[-1])
+        oh = _leaf_overhead(m1d, nch, comm.codec, jnp)
+        if comm.qbits == 8:
+            kept = jnp.sum((m1d > 0).astype(jnp.int32), axis=-1)
+            oh = oh + 4 * (kept > 0).astype(jnp.int32)
+        total = total + oh
+    return total
+
+
+def full_upload_overhead_bytes(spec, comm) -> int:
+    """Measured overhead of a FULL (all-channels) upload, closed form.
+
+    Dense-mask rounds (the fedavg/fedcs/oort baselines, and the reference
+    loop's all-ones masks) keep every channel, but the engines represent
+    those masks with a collapsed channel dim of 1 — encoding THAT shape
+    would undercount the real mask bytes.  The all-ones mask's cost is a
+    constant of the model shape: bitmask = header + ceil(C/8); index =
+    header + C (every gap is 0 -> 1 varint byte per kept channel); auto =
+    tag + min of the two — exactly what ``mask_overhead_bytes`` returns
+    for a materialized all-ones C-channel mask, and exactly what
+    ``payload.analytic_wire_bytes`` charges at dropout 0, so the record
+    and the clock agree.  ``spec`` is a ``payload.WireSpec``.
+    """
+    total = 0
+    for c, _ in spec.leaves:
+        if comm.codec != "dense":
+            bm = HEADER_BYTES + bitmask_bytes(c)
+            ix = HEADER_BYTES + c
+            if comm.codec == "bitmask":
+                total += bm
+            elif comm.codec == "index":
+                total += ix
+            else:                    # auto
+                total += AUTO_TAG_BYTES + min(bm, ix)
+        if comm.qbits == 8:
+            total += 4               # per-leaf scale, kept set non-empty
+    return total
+
+
+def mask_overhead_bytes(masks, params, comm) -> int:
+    """Per-client (un-stacked) measured overhead — the reference-loop and
+    encode_upload rendering of :func:`mask_overhead_bytes_stacked`."""
+    del params  # kept for signature symmetry with the stacked rendering
+    total = 0
+    for m in jax.tree_util.tree_leaves(masks):
+        m1d = np.asarray(jax.device_get(m)).reshape(-1)
+        nch = int(m1d.shape[0])
+        oh = int(_leaf_overhead(m1d[None], nch, comm.codec, np)[0])
+        if comm.qbits == 8 and int(np.sum(m1d > 0)) > 0:
+            oh += 4
+        total += oh
+    return total
+
+
+# ------------------------------------------------------------ wire bytes
+
+def encode_mask(mask1d: np.ndarray, codec: str) -> bytes:
+    """Serialize a 0/1 channel mask.  ``len(result)`` equals the measured
+    formula (header + payload) for the chosen codec; ``dense`` encodes to
+    b"" (receiver-known mask, the analytic idealization)."""
+    m = np.asarray(mask1d).reshape(-1) > 0
+    kept = int(np.sum(m))
+    header = np.uint32(kept).tobytes()
+    if codec == "dense":
+        return b""
+    if codec == "bitmask":
+        return header + np.packbits(m).tobytes()
+    if codec == "index":
+        gaps, mm = _index_gaps(m.astype(np.int32)[None], np)
+        out = bytearray(header)
+        for g in np.asarray(gaps[0])[np.asarray(mm[0])]:
+            v = int(g)
+            while True:
+                b = v & 0x7F
+                v >>= 7
+                out.append(b | (0x80 if v else 0))
+                if not v:
+                    break
+        return bytes(out)
+    if codec == "auto":
+        bm = encode_mask(m, "bitmask")
+        ix = encode_mask(m, "index")
+        tag, body = (1, bm) if len(bm) <= len(ix) else (2, ix)
+        return bytes([tag]) + body
+    raise ValueError(f"unknown codec {codec!r}; one of {CODECS}")
+
+
+def decode_mask(buf: bytes, num_channels: int, codec: str,
+                kept_hint: Optional[int] = None) -> np.ndarray:
+    """Inverse of :func:`encode_mask` -> 0/1 float32 vector of length C.
+
+    ``dense`` needs the receiver-known mask; with no hint it decodes to
+    all-ones (full upload), which is the only case the idealization is
+    byte-accounted for."""
+    if codec == "dense":
+        return np.ones(num_channels, np.float32)
+    if codec == "auto":
+        tag = buf[0]
+        inner = {1: "bitmask", 2: "index"}[tag]
+        return decode_mask(buf[1:], num_channels, inner)
+    kept = int(np.frombuffer(buf[:4], np.uint32)[0])
+    body = buf[4:]
+    if codec == "bitmask":
+        bits = np.unpackbits(np.frombuffer(body, np.uint8))[:num_channels]
+        m = bits.astype(np.float32)
+        assert int(m.sum()) == kept
+        return m
+    if codec == "index":
+        m = np.zeros(num_channels, np.float32)
+        pos, prev = 0, -1
+        for _ in range(kept):
+            v, shift = 0, 0
+            while True:
+                b = body[pos]
+                pos += 1
+                v |= (b & 0x7F) << shift
+                shift += 7
+                if not (b & 0x80):
+                    break
+            prev = prev + 1 + v
+            m[prev] = 1.0
+        return m
+    raise ValueError(f"unknown codec {codec!r}; one of {CODECS}")

@@ -1,0 +1,335 @@
+"""Upload payloads and on-wire byte accounting.
+
+Glue layer of the wire-format subsystem: combines the mask codecs
+(repro.comm.codecs) and value codecs (repro.comm.quantize) into
+
+* :class:`CommConfig` — the protocol-level wire-format choice
+  (``ProtocolConfig.comm``); the default (dense codec, 32-bit values) is
+  the pre-comm analytic accounting, bit for bit.
+* :class:`WireSpec` — the static per-model shape summary (channel / element
+  counts per leaf) the analytic byte model and the overhead-aware
+  allocation need.  Hashable, so it rides jit static args and lru caches.
+* :func:`encode_upload` / :func:`decode_upload` — an actual serialized
+  per-client upload (host-side): per-leaf mask bytes + quantized kept
+  values.  The roundtrip contract (tests/test_comm.py): decoded masks are
+  exact for every codec, decoded values are bit-identical for qbits=32,
+  cast-exact for 16, and within one scale step (deterministically, keyed)
+  for 8; ``payload.nbytes`` equals the measured accounting formulas.
+* the accounting helpers every driver charges through:
+  :func:`uplink_bytes_raw` (the ONE place raw ``density x model_bytes``
+  uploads are computed — protocol executors, the scanned splice, and the
+  sim runner all call it, so wire accounting cannot drift from it),
+  :func:`account_uplink` (raw + wire bytes from measured overheads), and
+  :func:`analytic_wire_bytes` (the byte model as a function of the
+  dropout rate — what the Eq. (12) clock, the sim's event scheduling, and
+  the overhead-aware LP consume; exact for dense/bitmask, an expected
+  uniform-gap estimate for index/auto).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import codecs, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Wire-format choice for a protocol run.
+
+    codec: mask encoding — ``dense`` (values-only idealization; the
+      pre-comm accounting), ``bitmask``, ``index``, or ``auto`` (per-leaf
+      cheaper of the two sparse encodings; crossover density ~1/8).
+    qbits: value precision — 32 (lossless), 16 (fp16 cast), 8 (int8
+      stochastic rounding; also quantizes the values the server
+      AGGREGATES — clients keep local full precision for Eq. (5)).
+    overhead_aware_allocation: solve the dropout LP on effective
+      bytes-per-kept-parameter (nonlinear in the dropout rate) instead of
+      the linear ``U_n`` proxy.  Host-side fixed point — requires
+      ``allocator="numpy"`` (so it cannot ride the multi-round scan).
+    """
+
+    codec: str = "dense"
+    qbits: int = 32
+    overhead_aware_allocation: bool = False
+
+    def __post_init__(self):
+        if self.codec not in codecs.CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; "
+                             f"expected one of {codecs.CODECS}")
+        if self.qbits not in quantize.QBITS:
+            raise ValueError(f"qbits must be one of {quantize.QBITS}, "
+                             f"got {self.qbits}")
+
+    @property
+    def is_default(self) -> bool:
+        """True when the wire format is the pre-comm analytic accounting
+        (dense codec, lossless values): every driver must then be
+        bit-identical to a run without a comm config at all."""
+        return self.codec == "dense" and self.qbits == 32
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static shape summary of one model: per-leaf (channels, elements).
+
+    Built once per model (host-side shape inspection only) and hashable,
+    so the scanned engine can bake it into its compiled round body and the
+    overhead-aware LP can cache on it.
+    """
+
+    leaves: Tuple[Tuple[int, int], ...]   # per leaf: (C, total elements)
+
+    @classmethod
+    def from_params(cls, params, channel_axis: int = -1) -> "WireSpec":
+        out = []
+        for l in jax.tree_util.tree_leaves(params):
+            if l.ndim == 0:
+                out.append((1, 1))
+                continue
+            ax = channel_axis % l.ndim
+            out.append((int(l.shape[ax]),
+                        int(np.prod(l.shape, dtype=np.int64))))
+        return cls(tuple(out))
+
+    @classmethod
+    def from_stacked(cls, stacked, channel_axis: int = -1) -> "WireSpec":
+        """Spec from client-STACKED params (leading client axis dropped)."""
+        one = jax.tree_util.tree_map(lambda l: jax.ShapeDtypeStruct(
+            l.shape[1:], l.dtype), stacked)
+        return cls.from_params(one, channel_axis)
+
+    @property
+    def total_elements(self) -> int:
+        return sum(e for _, e in self.leaves)
+
+
+# ------------------------------------------------------- real payloads
+
+@dataclasses.dataclass
+class LeafUpload:
+    mask_bytes: bytes
+    value_bytes: bytes
+    scale: Optional[float]        # int8 per-leaf scale (ships with framing)
+    num_channels: int
+    shape: Tuple[int, ...]
+    channel_axis: int             # which leaf axis the mask spans (part of
+                                  # the model schema both ends share — NOT
+                                  # inferable from shape for square leaves)
+    known_mask: Optional[np.ndarray] = None   # dense codec: the mask the
+                                              # receiver is assumed to know
+                                              # (out-of-band, zero bytes)
+
+
+@dataclasses.dataclass
+class UploadPayload:
+    """One client's serialized sparse upload (host-side rendering)."""
+
+    leaves: List[LeafUpload]
+    treedef: object
+    comm: CommConfig
+
+    @property
+    def nbytes(self) -> int:
+        """Total on-wire bytes: mask framing + quantized values + int8
+        scales.  Equals the measured accounting
+        (codecs.mask_overhead_bytes + kept * value_bytes)."""
+        total = 0
+        for lf in self.leaves:
+            total += len(lf.mask_bytes) + len(lf.value_bytes)
+            if lf.scale is not None:
+                total += 4
+        return total
+
+
+def encode_upload(params, masks, comm: CommConfig,
+                  key: Optional[jax.Array] = None) -> UploadPayload:
+    """Serialize one client's masked update What ⊙ M.
+
+    ``key`` is the client's quantization key
+    (:func:`repro.comm.quantize.client_quant_key`), folded per leaf in
+    flatten order — the same noise the in-engine QDQ draws, so
+    ``decode_upload(encode_upload(x))`` equals the values the server's
+    aggregation actually consumed.
+    """
+    pleaves, treedef = jax.tree_util.tree_flatten(params)
+    mleaves = jax.tree_util.tree_leaves(masks)
+    out: List[LeafUpload] = []
+    for i, (p, m) in enumerate(zip(pleaves, mleaves)):
+        p_host = np.asarray(jax.device_get(p), np.float32)
+        m_host = np.asarray(jax.device_get(m), np.float32)
+        m1d = m_host.reshape(-1)
+        # the channel axis is the mask's single non-unit axis (mask
+        # leaves are (1, ..., C, ..., 1)); an all-unit mask degenerates
+        # to the last axis
+        nonunit = [ax for ax, s in enumerate(m_host.shape) if s > 1]
+        ch_ax = nonunit[0] if nonunit else max(m_host.ndim - 1, 0)
+        mask_buf = codecs.encode_mask(m1d, comm.codec)
+        mfull = np.broadcast_to(m_host, p_host.shape) > 0
+        kept_vals = p_host[mfull]
+        scale = None
+        if comm.qbits == 32:
+            buf = kept_vals.astype(np.float32).tobytes()
+        elif comm.qbits == 16:
+            buf = kept_vals.astype(np.float16).tobytes()
+        else:
+            leaf_key = (jax.random.fold_in(key, i) if key is not None
+                        else None)
+            codes, s = quantize.quantize_leaf(jnp.asarray(p_host),
+                                              comm.qbits, leaf_key)
+            # the scale only ships when there are values to decode with it
+            scale = float(s) if int(np.sum(mfull)) else None
+            buf = np.asarray(jax.device_get(codes))[mfull].tobytes()
+        out.append(LeafUpload(mask_buf, buf, scale, int(m1d.shape[0]),
+                              tuple(p_host.shape), ch_ax,
+                              known_mask=(m1d if comm.codec == "dense"
+                                          else None)))
+    return UploadPayload(out, treedef, comm)
+
+
+def decode_upload(payload: UploadPayload):
+    """Inverse of :func:`encode_upload` -> (values, masks) pytrees.
+
+    ``values`` holds the decoded kept values at their positions (zeros at
+    dropped positions — exactly the numerator contribution of Eq. (4));
+    ``masks`` is the decoded full-shape 0/1 mask.
+    """
+    comm = payload.comm
+    vals, msks = [], []
+    for lf in payload.leaves:
+        m1d = (np.asarray(lf.known_mask, np.float32)
+               if lf.known_mask is not None
+               else codecs.decode_mask(lf.mask_bytes, lf.num_channels,
+                                       comm.codec))
+        # re-inflate the channel vector to the leaf's broadcast shape on
+        # the axis the sender recorded (shape alone is ambiguous for
+        # square leaves)
+        if len(lf.shape) == 0:
+            mfull = np.ones((), np.float32) * m1d[0]
+        else:
+            shape = [1] * len(lf.shape)
+            shape[lf.channel_axis] = lf.num_channels
+            mfull = np.broadcast_to(m1d.reshape(shape), lf.shape)
+        sel = mfull > 0
+        kept = int(np.sum(sel))
+        if comm.qbits == 32:
+            dec = np.frombuffer(lf.value_bytes, np.float32, count=kept)
+        elif comm.qbits == 16:
+            dec = np.frombuffer(lf.value_bytes, np.float16,
+                                count=kept).astype(np.float32)
+        else:
+            q = np.frombuffer(lf.value_bytes, np.int8, count=kept)
+            dec = (q.astype(np.float32) * lf.scale
+                   if lf.scale and lf.scale > 0 else np.zeros(kept,
+                                                              np.float32))
+        full = np.zeros(lf.shape, np.float32)
+        full[sel] = dec
+        vals.append(full)
+        msks.append(np.asarray(mfull, np.float32))
+    return (jax.tree_util.tree_unflatten(payload.treedef, vals),
+            jax.tree_util.tree_unflatten(payload.treedef, msks))
+
+
+# ------------------------------------------------------- byte accounting
+
+def uplink_bytes_raw(densities, participants, model_bytes) -> float:
+    """THE raw uploaded-bytes reduction: sum_n density_n * U_n over the
+    round's uploaders.  Single source for ``RoundRecord.uploaded_bytes``
+    (and ``uploaded_fraction``) — every executor, the scanned splice, and
+    the sim runner charge through here.
+    """
+    d = np.asarray(densities, np.float64)
+    p = np.asarray(participants, np.float64)
+    return float(np.dot(d * p, np.asarray(model_bytes, np.float64)))
+
+
+def account_uplink(densities, participants, model_bytes, wire_overhead,
+                   comm: CommConfig) -> Tuple[float, float]:
+    """(uploaded_bytes, wire_bytes) for one round.
+
+    ``uploaded_bytes`` is the raw kept-parameter mass (density x U_n, the
+    pre-comm accounting).  ``wire_bytes`` rescales the values to the
+    codec's precision and adds the MEASURED per-client mask overhead
+    (``wire_overhead``, from codecs.mask_overhead_bytes_stacked; None for
+    the dense codec).  With the default CommConfig the two are the same
+    float, bitwise.
+    """
+    raw = uplink_bytes_raw(densities, participants, model_bytes)
+    if comm.is_default:
+        return raw, raw
+    wire = raw * (comm.qbits / 32.0)
+    if wire_overhead is not None:
+        wire += float(np.dot(np.asarray(wire_overhead, np.float64),
+                             np.asarray(participants, np.float64)))
+    return raw, wire
+
+
+def analytic_wire_bytes(spec: WireSpec, dropout, comm: CommConfig, xp=np):
+    """Modelled on-wire upload bytes as a function of the dropout rate.
+
+    Mirrors the mask builder exactly on kept counts (per leaf,
+    ``kept = clip(ceil(C*(1-D)), 0, C)`` — the same D for every leaf) and
+    the measured formulas on framing.  Exact for ``dense`` and
+    ``bitmask``; for ``index``/``auto`` the varint gap length uses the
+    expected uniform spacing ``C/kept - 1`` (the measured overhead
+    depends on WHICH channels survive, which only the mask knows).
+
+    ``dropout`` may be scalar or a vector (broadcasts); ``xp=jnp`` gives
+    the traced rendering the scanned engine's device clock uses.
+    """
+    d = xp.asarray(dropout, xp.float32)
+    vbytes = float(quantize.value_bytes(comm.qbits))
+    values = xp.zeros_like(d)
+    overhead = xp.zeros_like(d)
+    for c, e in spec.leaves:
+        kept = xp.clip(xp.ceil(c * (1.0 - d)), 0.0, float(c))
+        values = values + kept * (e / c) * vbytes
+        if comm.qbits == 8:
+            overhead = overhead + 4.0 * (kept > 0).astype(xp.float32)
+        if comm.codec != "dense":
+            bm = float(codecs.HEADER_BYTES + codecs.bitmask_bytes(c))
+            if comm.codec in ("index", "auto"):
+                gap = xp.maximum(c / xp.maximum(kept, 1.0) - 1.0, 0.0)
+                gap_b = varint_bytes_f(gap, xp)
+                ix = codecs.HEADER_BYTES + kept * gap_b
+                if comm.codec == "index":
+                    overhead = overhead + ix
+                else:
+                    overhead = (overhead + codecs.AUTO_TAG_BYTES
+                                + xp.minimum(ix, bm))
+            else:
+                overhead = overhead + bm
+    return values + overhead
+
+
+def varint_bytes_f(v, xp=np):
+    """Float rendering of codecs.varint_bytes for the analytic model
+    (expected gaps are fractional)."""
+    out = xp.ones_like(xp.asarray(v, xp.float32))
+    for t in (1 << 7, 1 << 14, 1 << 21, 1 << 28):
+        out = out + (xp.asarray(v) >= t).astype(xp.float32)
+    return out
+
+
+def analytic_uplink_vector(specs, dropout_vec, comm: CommConfig
+                           ) -> np.ndarray:
+    """Per-client analytic uplink bytes for a (possibly ragged) fleet:
+    ``specs`` is one WireSpec per client, ``dropout_vec`` the (N,) rates.
+    The host-side vector the Eq. (12) clock and the sim's event scheduling
+    charge when the codec is not dense."""
+    d = np.asarray(dropout_vec, np.float64)
+    out = np.empty_like(d)
+    cache = {}
+    for i, spec in enumerate(specs):
+        key = (spec, float(d[i]))
+        if key not in cache:
+            cache[key] = float(analytic_wire_bytes(spec, d[i], comm,
+                                                   xp=np))
+        out[i] = cache[key]
+    return out

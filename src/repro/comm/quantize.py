@@ -1,0 +1,153 @@
+"""Value codecs for the kept upload payload — fp32 / fp16 / int8-SR.
+
+The mask codecs (repro.comm.codecs) say WHICH parameters ship; this module
+says how many bytes each surviving value costs and what the server decodes:
+
+* ``qbits=32`` — lossless: the identity.  4 bytes/value.
+* ``qbits=16`` — IEEE fp16 cast roundtrip.  Deterministic (no key), 2
+  bytes/value; cast-roundtrip error is the usual half-precision ulp.
+* ``qbits=8``  — symmetric int8 with PRNG-keyed STOCHASTIC rounding
+  (Caldas et al., 1812.07210 style): per leaf, scale = max|x| / 127 and
+  q = clip(floor(x/scale + u), -127, 127) with u ~ U[0,1) drawn from a
+  jax PRNG key.  Unbiased (E[q*scale] = x), error bounded by one scale
+  step, and — because the noise is counter-based threefry on an explicit
+  key — deterministic across processes and across the per-client /
+  batched / scanned execution paths.  1 byte/value + a 4-byte scale per
+  leaf (charged with the mask framing in codecs.mask_overhead_bytes*).
+
+Key discipline mirrors mask building exactly: the round key is folded as
+``fold_in(round_key, 20_000 + client_index)`` (masks use 10_000 +) and
+then per-leaf ``fold_in(client_key, leaf_index)`` in flatten order, so the
+per-client loop, the stacked engine, the grouped engine, and the
+multi-round scan all draw the SAME noise for the same client/leaf — the
+cross-path bit-exactness contracts extend to quantized uploads.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+QBITS = (32, 16, 8)
+
+# PRNG fold namespace for quantization keys (masks use 10_000 + i).
+_QKEY_OFFSET = 20_000
+
+
+def value_bytes(qbits: int) -> int:
+    """Bytes per surviving parameter value."""
+    if qbits not in QBITS:
+        raise ValueError(f"qbits must be one of {QBITS}, got {qbits}")
+    return qbits // 8
+
+
+def scale_bytes(qbits: int) -> int:
+    """Per-leaf framing bytes for the value codec (int8 ships a scale)."""
+    return 4 if qbits == 8 else 0
+
+
+def _int8_scale(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+
+
+def quantize_leaf(x: jax.Array, qbits: int, key: Optional[jax.Array] = None):
+    """Encode one leaf -> (codes, scale).  fp32/fp16 codes are the values
+    themselves in the target dtype; int8 codes are the SR integers."""
+    if qbits == 32:
+        return x.astype(jnp.float32), None
+    if qbits == 16:
+        return x.astype(jnp.float16), None
+    if key is None:
+        raise ValueError("qbits=8 stochastic rounding requires a PRNG key")
+    xf = x.astype(jnp.float32)
+    scale = _int8_scale(xf)
+    u = jax.random.uniform(key, xf.shape)
+    q = jnp.clip(jnp.floor(xf / jnp.maximum(scale, 1e-30) + u), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_leaf(codes: jax.Array, scale: Optional[jax.Array],
+                    qbits: int) -> jax.Array:
+    if qbits == 32:
+        return codes.astype(jnp.float32)
+    if qbits == 16:
+        return codes.astype(jnp.float32)
+    return jnp.where(scale > 0, codes.astype(jnp.float32) * scale, 0.0)
+
+
+def qdq_leaf(x: jax.Array, qbits: int,
+             key: Optional[jax.Array] = None) -> jax.Array:
+    """quantize -> dequantize one leaf (what the server's aggregate sees).
+    Identity for qbits=32; preserves the input dtype."""
+    if qbits == 32:
+        return x
+    codes, scale = quantize_leaf(x, qbits, key)
+    return dequantize_leaf(codes, scale, qbits).astype(x.dtype)
+
+
+def quantize_dequantize(params, key: Optional[jax.Array], qbits: int):
+    """Per-client QDQ over a pytree, folding the leaf index into ``key``
+    in flatten order (the per-client reference-loop rendering).
+
+    Bitwise stability: inputs and outputs are fenced with
+    ``lax.optimization_barrier`` (as is :func:`quantize_dequantize_stacked`)
+    so the QDQ subgraph is opaque to any enclosing fusion — without the
+    fence, XLA folds the trailing ``q * scale`` into the engine's Eq. (4)
+    multiply chain as an fma.  With the fence, every JITTED rendering
+    (per-round engine, grouped engine, multi-round scan) returns the same
+    bits; the EAGER per-op rendering may still legally differ by an ulp
+    in the division chain (XLA compiles per program — see the int8
+    engine-vs-loop test), which is why the reference-loop contract for
+    int8 is ulp-scale rather than bitwise."""
+    if qbits == 32:
+        return params
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    leaves = list(jax.lax.optimization_barrier(tuple(leaves)))
+    out = [qdq_leaf(l, qbits,
+                    jax.random.fold_in(key, i) if key is not None else None)
+           for i, l in enumerate(leaves)]
+    out = list(jax.lax.optimization_barrier(tuple(out)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def client_quant_key(round_key: jax.Array, client_index) -> jax.Array:
+    """The per-client quantization key: fold_in(round_key, 20_000 + i)."""
+    return jax.random.fold_in(round_key, _QKEY_OFFSET + client_index)
+
+
+def quantize_dequantize_stacked(stacked, rng: Optional[jax.Array],
+                                qbits: int, client_indices=None):
+    """Client-stacked QDQ: leaves (N, *leaf) -> same, with per-client keys
+    ``fold_in(fold_in(rng, 20_000 + i), leaf_index)`` — bit-identical to
+    looping :func:`quantize_dequantize` with
+    ``key=client_quant_key(rng, i)`` (scale is a max reduction, exact in
+    any order; everything else is elementwise).
+
+    ``client_indices`` defaults to ``arange(N)``; shape groups pass their
+    members' fleet positions, async merges their buffer rows — exactly the
+    mask builder's convention.  Traced values are fine (scan-safe).
+    """
+    if qbits == 32:
+        return stacked
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    leaves = list(jax.lax.optimization_barrier(tuple(leaves)))
+    n = leaves[0].shape[0]
+    client_keys = None
+    if rng is not None:
+        ids = (jnp.asarray(client_indices)
+               if client_indices is not None else jnp.arange(n))
+        client_keys = jax.vmap(
+            lambda i: jax.random.fold_in(rng, i))(_QKEY_OFFSET + ids)
+    out = []
+    for i, l in enumerate(leaves):
+        if qbits == 16:
+            out.append(qdq_leaf(l, qbits))
+            continue
+        leaf_keys = jax.vmap(lambda k: jax.random.fold_in(k, i))(client_keys)
+        out.append(jax.vmap(lambda x, k: qdq_leaf(x, qbits, k))(l, leaf_keys))
+    # opaque outputs: see quantize_dequantize — keeps the jitted engine's
+    # aggregation from fma-fusing across the QDQ boundary
+    out = list(jax.lax.optimization_barrier(tuple(out)))
+    return jax.tree_util.tree_unflatten(treedef, out)

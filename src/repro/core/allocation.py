@@ -357,6 +357,89 @@ def solve_dropout_rates_jax(
 ALLOCATORS = ("numpy", "jax")
 
 
+def solve_dropout_rates_overhead_aware(
+    tel: ClientTelemetry,
+    wire_specs,
+    *,
+    comm,
+    a_server: float,
+    d_max: float,
+    delta: float,
+    global_model_bytes: Optional[float] = None,
+    num_refinements: int = 4,
+) -> AllocationResult:
+    """Eq. (16)/(17) on EFFECTIVE on-wire bytes instead of the linear proxy.
+
+    The LP treats client n's upload as ``U_n (1 - D_n)`` — linear in the
+    dropout rate.  On a real wire the upload is
+    ``B_n(D) = values(D) * qbits/32 + mask_overhead(D)`` (repro.comm
+    .payload.analytic_wire_bytes): NONLINEAR in D, because the mask
+    encoding has a floor (headers, the bitmask's density-independent
+    ceil(C/8)) and the index codec's cost tracks the kept count.  Dropping
+    harder therefore saves fewer bytes per unit of D than the proxy
+    claims, and the LP overspends its budget on the wire.
+
+    This solver keeps the exact knapsack/golden-section machinery but
+    linearises around the current solution: each refinement replaces the
+    per-client byte weight with the effective bytes-per-kept-fraction
+    ``U_eff,n = B_n(D_n) / (1 - D_n)`` and rescales ``a_server`` so the
+    budget equality binds on actual wire bytes,
+    ``sum_n B_n(D_n) = A_server * sum_n B_n(0)``.  The overhead is mildly
+    nonlinear, so a handful of refinements converge (tests pin the
+    on-wire budget).  Host-side numpy only — it cannot ride the
+    multi-round ``lax.scan`` (``ProtocolConfig`` enforces
+    ``allocator="numpy"``).
+
+    Args:
+      wire_specs: one ``repro.comm.payload.WireSpec`` per client.
+      comm: the ``repro.comm.payload.CommConfig`` whose byte model to use.
+    """
+    from repro.comm.payload import analytic_uplink_vector  # comm <- core
+
+    n = tel.num_clients
+    kw = dict(a_server=a_server, d_max=d_max, delta=delta,
+              global_model_bytes=global_model_bytes)
+    result = solve_dropout_rates(tel, **kw)
+    wire_full = analytic_uplink_vector(wire_specs, np.zeros(n), comm)
+    total_full = float(np.sum(wire_full))
+    u_raw = tel.model_bytes.astype(np.float64)
+    for _ in range(num_refinements):
+        d = np.clip(result.dropout_rates, 0.0, d_max)
+        keep = np.maximum(1.0 - d, 1e-6)
+        u_eff = analytic_uplink_vector(wire_specs, d, comm) / keep
+        # budget equality on wire bytes: sum u_eff (1-D) = a_server *
+        # sum B(0)  ==>  rescale a_server into u_eff units
+        a_eff = float(np.clip(a_server * total_full / max(
+            float(np.sum(u_eff)), 1e-30), 0.0, 1.0))
+        # u_eff must change ONLY the uplink mass the budget and the
+        # straggler uplink leg see.  The inner solver derives everything
+        # from model_bytes, so compensate the two places it would leak:
+        # the Eq. (13) regularizer's (U_n/U) term (fold the inverse ratio
+        # into train_loss — re_n is linear in both) and the downlink leg
+        # of k_n (scale downlink_rate by the same ratio so
+        # u_eff/r_d_eff == U_raw/r_d; the broadcast stays idealized).
+        ratio = u_eff / np.maximum(u_raw, 1e-30)
+        tel_eff = dataclasses.replace(
+            tel, model_bytes=np.asarray(u_eff, np.float64),
+            train_loss=tel.train_loss / np.maximum(ratio, 1e-30),
+            downlink_rate=tel.downlink_rate * ratio)
+        result = solve_dropout_rates(
+            tel_eff, a_server=a_eff, d_max=d_max, delta=delta,
+            global_model_bytes=global_model_bytes)
+    d = np.clip(result.dropout_rates, 0.0, d_max)
+    wire = analytic_uplink_vector(wire_specs, d, comm)
+    # report the makespan the WIRE would see (uplink = codec bytes)
+    u_eff_dl = tel.model_bytes.astype(np.float64) * (1.0 - d)
+    makespan = float(np.max(tel.compute_latency + wire / tel.uplink_rate
+                            + u_eff_dl / tel.downlink_rate))
+    gmb = float(global_model_bytes if global_model_bytes is not None
+                else np.max(tel.model_bytes))
+    obj = makespan + delta * float(np.dot(regularizer(tel, gmb), d))
+    feasible = bool(abs(float(np.sum(wire)) - a_server * total_full)
+                    <= 5e-2 * max(total_full, 1.0))
+    return AllocationResult(d, makespan, obj, feasible)
+
+
 def solve_dropout_rates_with(
     allocator: str,
     tel: ClientTelemetry,

@@ -54,6 +54,17 @@ stragglers / deadline or    ``sim=``/``network=`` to :func:`run_scheme`;
 async serving               event-driven clock, observed-telemetry LP
                             re-solve, sync / deadline / async policies;
                             ragged fleets ride the grouped engine there too
+wire formats (sparse        **every executor** via ``ProtocolConfig(comm=
+codecs, quantization,       CommConfig(codec=..., qbits=...))`` (repro.comm):
+on-wire byte accounting)    masks ship as packed-bitmask / delta+varint
+                            index / auto encodings, values as fp32 / fp16 /
+                            int8-SR; ``RoundRecord.wire_bytes`` carries the
+                            measured cost next to the raw
+                            ``uploaded_bytes``, the Eq. (12) uplink and the
+                            sim's event timeline charge codec bytes, and
+                            ``comm.overhead_aware_allocation`` solves the
+                            LP on effective bytes.  Default = the analytic
+                            accounting, bit for bit
 ==========================  =================================================
 
 * The batched and grouped engines are bit-identical to the reference loop
@@ -84,10 +95,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.comm import codecs as wire_codecs
+from repro.comm import quantize as wire_quant
+from repro.comm.payload import (CommConfig, WireSpec, account_uplink,
+                                analytic_uplink_vector)
 from repro.core import (aggregation, baselines, coverage as cov_mod,
                         round_engine, selection)
 from repro.core.allocation import (ALLOCATORS, AllocationResult,
-                                   ClientTelemetry, solve_dropout_rates_with)
+                                   ClientTelemetry,
+                                   solve_dropout_rates_overhead_aware,
+                                   solve_dropout_rates_with)
 from repro.core.convergence import estimate_epsilon
 
 Params = object  # pytree
@@ -117,6 +134,12 @@ class ProtocolConfig:
                                      # device dispatch (homogeneous engine
                                      # + batched_train_fn + allocator="jax"
                                      # only); 1 = per-round dispatch
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+                                     # wire format (repro.comm): mask codec
+                                     # + value precision + overhead-aware
+                                     # allocation.  The default (dense, 32)
+                                     # is the pre-comm analytic accounting,
+                                     # bit for bit.
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -132,6 +155,11 @@ class ProtocolConfig:
                 "rounds_per_dispatch > 1 scans the dropout-rate allocation "
                 "inside the device step and therefore requires "
                 "allocator='jax' (the numpy LP cannot be traced)")
+        if self.comm.overhead_aware_allocation and self.allocator != "numpy":
+            raise ValueError(
+                "comm.overhead_aware_allocation is a host-side fixed point "
+                "around the numpy LP; it requires allocator='numpy' (and "
+                "therefore cannot ride rounds_per_dispatch > 1)")
 
 
 @dataclasses.dataclass
@@ -160,16 +188,17 @@ class RoundRecord:
     host_wall_time: float            # real host secs spent in this round
     mean_loss: float
     dropout_rates: np.ndarray        # rates allocated for the NEXT round
-    uploaded_fraction: float         # actual bytes uploaded / full bytes
+    uploaded_fraction: float         # raw kept bytes / full bytes
     participants: int
     sim_round_time: float = 0.0      # this round's simulated duration
+    uploaded_bytes: float = 0.0      # raw kept-parameter mass (density x U)
+    wire_bytes: float = 0.0          # actual on-wire uplink bytes: values
+                                     # at the codec's precision + measured
+                                     # mask/scale overhead (repro.comm).
+                                     # == uploaded_bytes with the default
+                                     # CommConfig, bit for bit.
     epsilon: Optional[float] = None
     metrics: Optional[Dict] = None
-
-    @property
-    def wall_time(self) -> float:
-        """Deprecated alias of ``host_wall_time`` (pre-sim naming)."""
-        return self.host_wall_time
 
 
 @dataclasses.dataclass
@@ -194,9 +223,11 @@ class _RoundData(NamedTuple):
     """What one executed round reports back to the shared driver loop."""
 
     losses: np.ndarray               # server-side loss view after the round
-    uploaded_bytes: float            # actual bytes uploaded this round
+    uploaded_bytes: float            # raw kept bytes uploaded this round
     active: np.ndarray               # (N,) bool: clients on the Eq. (12) clock
     epsilon: Optional[float]         # Assumption-3 estimate (loop only)
+    wire_bytes: float                # on-wire bytes (== uploaded_bytes for
+                                     # the default CommConfig)
 
 
 class _RoundExecutor:
@@ -239,7 +270,8 @@ class _EngineExecutor(_RoundExecutor):
 
     def __init__(self, server, local_train_fn, batched_train_fn):
         super().__init__(server, local_train_fn, batched_train_fn)
-        self.engine = round_engine.BatchedRoundEngine(server.cfg.selection)
+        self.engine = round_engine.BatchedRoundEngine(server.cfg.selection,
+                                                      server.cfg.comm)
         self.weights = np.asarray(
             [cs.num_samples for cs in server.clients], float)
         self.stacked = round_engine.stack_pytrees(
@@ -286,12 +318,14 @@ class _EngineExecutor(_RoundExecutor):
                                dense_masks=dense)
         srv.global_params = out.global_params
         self.stacked = out.client_params
-        # the ONE device->host transfer of the round
-        dens, loss_host = jax.device_get((out.densities, loss_dev))
+        # the ONE device->host transfer of the round (wire_overhead is
+        # None with the default comm config — no extra sync either way)
+        dens, oh, loss_host = jax.device_get(
+            (out.densities, out.wire_overhead, loss_dev))
         new_losses = np.asarray(loss_host, float)
-        uploaded = float(np.dot(np.asarray(dens, float) * part,
-                                srv.tel.model_bytes))
-        return _RoundData(new_losses, uploaded, part, None)
+        uploaded, wire = account_uplink(dens, part, srv.tel.model_bytes,
+                                        oh, cfg.comm)
+        return _RoundData(new_losses, uploaded, part, None, wire)
 
     def finalize(self) -> None:
         n = self.srv.tel.num_clients
@@ -307,11 +341,18 @@ class _EngineExecutor(_RoundExecutor):
         dispatch (:meth:`BatchedRoundEngine.run`), rebinding the stacked
         client state / global params / PRNG key from the final carry and
         returning the host-fetched :class:`ScanTrace` — the chunk's single
-        device->host transfer.  The scanned carry donates its buffers
-        (in-place params update where the backend supports donation).
+        device->host transfer.  The scanned carry donates BOTH model
+        buffers (stacked client params and the global params — in-place
+        updates where the backend supports donation); the user-provided
+        global pytree is copied once before the first chunk so donation
+        never invalidates caller-held arrays.
         """
         srv, cfg = self.srv, self.srv.cfg
         if not hasattr(self, "_scan_static"):
+            # own the global params before the first donating dispatch:
+            # the executor's carry must not alias the caller's pytree
+            srv.global_params = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), srv.global_params)
             # static per run: the staged telemetry, the loss-independent
             # fedcs selection, and oort's system penalty / byte budget
             static_part, pen, budget = None, None, 0.0
@@ -373,7 +414,7 @@ class _GroupedEngineExecutor(_RoundExecutor):
         ]
         self.fleet = round_engine.GroupedFleetState(
             groups, coverage, client_params, cfg.selection,
-            server.tel.num_clients)
+            server.tel.num_clients, cfg.comm)
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
@@ -383,14 +424,14 @@ class _GroupedEngineExecutor(_RoundExecutor):
                 else srv._participants(losses))
         loss_dev = self.fleet.train(self.local_train_fn, rk, part, losses,
                                     d_used, dense=dense)
-        srv.global_params, densities = self.fleet.step(
+        srv.global_params, densities, wire_oh = self.fleet.step(
             srv.global_params, self.weights * part, rk,
             full_round=(t % cfg.h == 0) or dense, dense=dense)
-        dens, loss_host = jax.device_get((densities, loss_dev))
+        dens, oh, loss_host = jax.device_get((densities, wire_oh, loss_dev))
         new_losses = np.asarray(loss_host, float)
-        uploaded = float(np.dot(np.asarray(dens, float) * part,
-                                srv.tel.model_bytes))
-        return _RoundData(new_losses, uploaded, part, None)
+        uploaded, wire = account_uplink(dens, part, srv.tel.model_bytes,
+                                        oh, cfg.comm)
+        return _RoundData(new_losses, uploaded, part, None, wire)
 
     def finalize(self) -> None:
         for cs, p in zip(self.srv.clients, self.fleet.export()):
@@ -423,8 +464,12 @@ class _ReferenceLoopExecutor(_RoundExecutor):
                 new_params[i] = p
                 losses[i] = float(l)
 
-        # --- Steps 2-3: mask building + (simulated) upload
-        uploaded_bytes = 0.0
+        # --- Steps 2-3: mask building + (simulated) upload.  Per-client
+        # densities / wire overheads collect into vectors so the byte
+        # accounting below runs through the ONE shared reduction
+        # (repro.comm.payload.account_uplink) every executor uses.
+        densities = np.zeros(n)
+        wire_oh = (None if cfg.comm.is_default else np.zeros(n))
         client_masks: List[Params] = [None] * n
         if cfg.scheme == "feddd":
             for i, cs in enumerate(srv.clients):
@@ -437,19 +482,42 @@ class _ReferenceLoopExecutor(_RoundExecutor):
                     config=cfg.selection, coverage=cov,
                     rng=jax.random.fold_in(rk, 10_000 + i))
                 client_masks[i] = m
-                dens = float(selection.mask_density(new_params[i], m))
-                uploaded_bytes += dens * float(srv.tel.model_bytes[i])
+                densities[i] = float(selection.mask_density(new_params[i],
+                                                            m))
         else:
             for i in range(n):
                 if part[i]:
                     client_masks[i] = jax.tree_util.tree_map(
                         lambda w: jnp.ones((1,) * w.ndim, w.dtype),
                         new_params[i])
-                    uploaded_bytes += float(srv.tel.model_bytes[i])
+                    densities[i] = 1.0
+        uploads = np.asarray([m is not None for m in client_masks])
+        if wire_oh is not None:
+            for i in np.flatnonzero(uploads):
+                # baseline full uploads carry collapsed all-ones masks;
+                # their overhead is the closed-form full-upload constant
+                # at true widths (the engines charge the same)
+                wire_oh[i] = (
+                    wire_codecs.mask_overhead_bytes(
+                        client_masks[i], new_params[i], cfg.comm)
+                    if cfg.scheme == "feddd" else
+                    wire_codecs.full_upload_overhead_bytes(
+                        srv.wire_specs[i], cfg.comm))
 
-        # --- Step 4: aggregation (over uploaded clients only)
+        # --- Step 4: aggregation (over uploaded clients only).  The
+        # server aggregates what it DECODED: with qbits < 32 the uploads
+        # are quantize->dequantized per client (same PRNG fold as the
+        # engines — repro.comm.quantize); Eq. (5)/(6) below keep each
+        # client's own full-precision params.
         idxs = [i for i in range(n) if client_masks[i] is not None]
-        agg_params = [srv._pad_to_global(new_params[i], i) for i in idxs]
+        agg_src = {
+            i: (new_params[i] if cfg.comm.qbits == 32 else
+                wire_quant.quantize_dequantize(
+                    new_params[i], wire_quant.client_quant_key(rk, i),
+                    cfg.comm.qbits))
+            for i in idxs
+        }
+        agg_params = [srv._pad_to_global(agg_src[i], i) for i in idxs]
         agg_masks = [srv._pad_mask_to_global(client_masks[i],
                                              new_params[i]) for i in idxs]
         agg_weights = [srv.clients[i].num_samples for i in idxs]
@@ -474,8 +542,11 @@ class _ReferenceLoopExecutor(_RoundExecutor):
                 cs.params = aggregation.client_update_sparse(
                     g_local, new_params[i], client_masks[i])
 
+        uploaded, wire = account_uplink(densities, uploads,
+                                        srv.tel.model_bytes, wire_oh,
+                                        cfg.comm)
         active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
-        return _RoundData(losses, uploaded_bytes, active, eps_val)
+        return _RoundData(losses, uploaded, active, eps_val, wire)
 
 
 class FedDDServer:
@@ -503,6 +574,13 @@ class FedDDServer:
               for p in client_params]
         self.cr = cov_mod.coverage_rates(cw, full_w)
         self.heterogeneous = any(w != full_w for w in cw)
+        # static per-client wire-format shape specs (repro.comm): the
+        # analytic byte model behind the Eq. (12) uplink charge and the
+        # overhead-aware allocation
+        self.wire_specs = [
+            WireSpec.from_params(p, cfg.selection.channel_axis)
+            for p in client_params
+        ]
         self.dropout = np.zeros(n)           # D_n^1 = 0 (Algorithm 1)
         self.rng = jax.random.PRNGKey(cfg.seed)
 
@@ -510,6 +588,12 @@ class FedDDServer:
 
     def allocate(self, losses: np.ndarray) -> AllocationResult:
         tel = dataclasses.replace(self.tel, train_loss=losses)
+        if self.cfg.comm.overhead_aware_allocation:
+            return solve_dropout_rates_overhead_aware(
+                tel, self.wire_specs, comm=self.cfg.comm,
+                a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+                delta=self.cfg.delta,
+                global_model_bytes=_tree_bytes(self.global_params))
         return solve_dropout_rates_with(
             self.cfg.allocator, tel,
             a_server=self.cfg.a_server, d_max=self.cfg.d_max,
@@ -633,8 +717,9 @@ class FedDDServer:
             sim_time, round_t, metrics = self._finish_round(
                 rd.active, sim_time, eval_fn, d_used)
             history.append(self._record(t, t0, sim_time, round_t, losses,
-                                        rd.uploaded_bytes, full_bytes,
-                                        rd.active, rd.epsilon, metrics))
+                                        rd.uploaded_bytes, rd.wire_bytes,
+                                        full_bytes, rd.active, rd.epsilon,
+                                        metrics))
 
         executor.finalize()
         return RunResult(history, self.global_params)
@@ -668,6 +753,8 @@ class FedDDServer:
             tr_dens = np.asarray(trace.densities, float)
             tr_dnext = np.asarray(trace.next_dropout, np.float64)
             tr_part = np.asarray(trace.participants, bool)
+            tr_oh = (None if trace.wire_overhead is None
+                     else np.asarray(trace.wire_overhead))
             for j in range(k):
                 d_used = self.dropout.copy()
                 part = tr_part[j]
@@ -677,8 +764,9 @@ class FedDDServer:
                     # float64 (solve_dropout_rates_with); replay that on
                     # the traced rates so records match bit for bit
                     self.dropout = np.clip(tr_dnext[j], 0.0, cfg.d_max)
-                uploaded = float(np.dot(tr_dens[j] * part,
-                                        self.tel.model_bytes))
+                uploaded, wire = account_uplink(
+                    tr_dens[j], part, self.tel.model_bytes,
+                    None if tr_oh is None else tr_oh[j], cfg.comm)
                 sim_time, round_t, _ = self._finish_round(
                     part, sim_time, None, d_used)
                 history.append(RoundRecord(
@@ -687,20 +775,22 @@ class FedDDServer:
                     mean_loss=float(np.mean(losses)),
                     dropout_rates=self.dropout.copy(),
                     uploaded_fraction=uploaded / max(full_bytes, 1e-9),
+                    uploaded_bytes=uploaded, wire_bytes=wire,
                     participants=int(np.sum(part))))
             t += k
 
     def _record(self, t: int, t0: float, sim_time: float,
                 sim_round_time: float, losses: np.ndarray,
-                uploaded_bytes: float, full_bytes: float, active: np.ndarray,
-                eps_val: Optional[float], metrics: Optional[Dict]
-                ) -> RoundRecord:
+                uploaded_bytes: float, wire_bytes: float, full_bytes: float,
+                active: np.ndarray, eps_val: Optional[float],
+                metrics: Optional[Dict]) -> RoundRecord:
         return RoundRecord(
             round=t, sim_time=sim_time, sim_round_time=sim_round_time,
             host_wall_time=time.perf_counter() - t0,
             mean_loss=float(np.mean(losses)),
             dropout_rates=self.dropout.copy(),
             uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
+            uploaded_bytes=uploaded_bytes, wire_bytes=wire_bytes,
             participants=int(np.sum(active)),
             epsilon=eps_val, metrics=metrics)
 
@@ -712,10 +802,19 @@ class FedDDServer:
         ``dropout_used`` is D_t — the rates this round's uploads actually
         used (NOT the freshly allocated D_{t+1}; the allocation for the
         next round happens before the clock update).
+
+        With a non-default wire format the UPLINK leg charges the codec's
+        analytic byte model (mask overhead + value precision,
+        repro.comm.payload.analytic_wire_bytes) instead of the idealized
+        ``U(1-D)``; the downlink broadcast stays idealized.
         """
         d_for_time = (dropout_used if self.cfg.scheme == "feddd"
                       else np.zeros(self.tel.num_clients))
-        t_all = baselines.round_times(self.tel, d_for_time)
+        up = (None if self.cfg.comm.is_default else
+              analytic_uplink_vector(self.wire_specs, d_for_time,
+                                     self.cfg.comm))
+        t_all = baselines.round_times(self.tel, d_for_time,
+                                      uplink_bytes=up)
         round_t = float(np.max(t_all[active]))
         sim_time += round_t
         metrics = eval_fn(self.global_params) if eval_fn else None

@@ -61,6 +61,9 @@ from typing import List, NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import codecs as wire_codecs
+from repro.comm import quantize as wire_quant
+from repro.comm.payload import CommConfig, WireSpec, analytic_wire_bytes
 from repro.core import aggregation, allocation, baselines, selection
 
 
@@ -70,6 +73,9 @@ class RoundOutputs(NamedTuple):
     client_params: object      # pytree, leaves (N, *leaf): W_n^{t+1}
     global_params: object      # pytree: W^t
     densities: jax.Array       # (N,) fraction of elements uploaded
+    wire_overhead: object = None   # (N,) int32 measured mask/scale bytes
+                                   # (repro.comm), or None with the default
+                                   # CommConfig (dense codec, no overhead)
 
 
 class GroupBatch(NamedTuple):
@@ -93,6 +99,8 @@ class GroupedRoundOutputs(NamedTuple):
     group_client_params: Tuple # per group: pytree, leaves (n_g, *local)
     global_params: object      # full-width pytree: W^t
     densities: jax.Array       # (N,) canvas of upload densities
+    wire_overhead: object = None   # (N,) int32 canvas of measured mask /
+                                   # scale bytes, or None (default comm)
 
 
 class ScanTelemetry(NamedTuple):
@@ -146,6 +154,10 @@ class ScanTrace(NamedTuple):
     participants: jax.Array    # (K, N) bool round participation
     round_time: jax.Array      # (K,) f32 Eq. (12) round duration (device)
     sim_time: jax.Array        # (K,) f32 cumulative device clock
+    wire_overhead: object = None   # (K, N) int32 measured mask/scale bytes
+                                   # (repro.comm), or None (default comm) —
+                                   # integer arithmetic, so the scanned and
+                                   # per-round renderings agree exactly
 
 
 def stack_pytrees(trees: Sequence) -> object:
@@ -174,14 +186,36 @@ def _dense_masks(stacked, n: int):
     return masks, jnp.ones((n,), jnp.float32)
 
 
+def _wire_overhead(masks, stacked_new, comm: CommConfig, channel_axis: int,
+                   dense_masks: bool):
+    """(N,) int32 measured mask/scale bytes, or None for the default comm.
+
+    Sparse (feddd) masks encode their actual kept sets; dense all-ones
+    masks charge the closed-form full-upload constant at true channel
+    widths (their in-trace representation collapses the channel dim —
+    see ``wire_codecs.full_upload_overhead_bytes``).
+    """
+    if comm.is_default:
+        return None
+    n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
+    if dense_masks:
+        const = wire_codecs.full_upload_overhead_bytes(
+            WireSpec.from_stacked(stacked_new, channel_axis), comm)
+        return jnp.full((n,), const, jnp.int32)
+    return wire_codecs.mask_overhead_bytes_stacked(masks, stacked_new,
+                                                   comm)
+
+
 # The whole server side of Algorithm 1 (steps 2-4 + 6-7) in one trace.
 # Module-level jit keyed on the (hashable, frozen) SelectionConfig so the
 # compile cache is shared across engine instances and server runs.
 @functools.partial(jax.jit,
-                   static_argnames=("sel_cfg", "full_round", "dense_masks"))
+                   static_argnames=("sel_cfg", "full_round", "dense_masks",
+                                    "comm"))
 def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
                 weights, rng, *, sel_cfg: selection.SelectionConfig,
-                full_round: bool, dense_masks: bool = False) -> RoundOutputs:
+                full_round: bool, dense_masks: bool = False,
+                comm: CommConfig = CommConfig()) -> RoundOutputs:
     if dense_masks:
         # Baseline rounds (fedavg/fedcs/oort): participants upload FULL
         # models, so masks are all-ones and no importance scoring runs.
@@ -193,8 +227,20 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
     else:
         masks, density = selection.build_masks_batched(
             stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
+    # Wire format (repro.comm): the server aggregates what it DECODED —
+    # with qbits < 32 that is the quantize->dequantize rendering of the
+    # uploads (the clients' own Eq. (5) updates keep local full precision,
+    # so only the aggregation input changes).  Static branch: the default
+    # comm config traces the exact pre-comm graph.  Dense (all-ones)
+    # masks carry a collapsed channel dim, so their overhead is the
+    # closed-form full-upload constant at TRUE widths, not an encoding of
+    # the collapsed shape.
+    stacked_agg = wire_quant.quantize_dequantize_stacked(
+        stacked_new, rng, comm.qbits)
+    wire_oh = _wire_overhead(masks, stacked_new, comm,
+                             sel_cfg.channel_axis, dense_masks)
     new_global = aggregation.aggregate_sparse_stacked(
-        stacked_new, masks, weights, prev_global=global_params,
+        stacked_agg, masks, weights, prev_global=global_params,
         use_kernel=sel_cfg.use_kernel)
     if full_round:
         new_clients = _adopt_global(new_global, stacked_new)
@@ -203,7 +249,7 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
         # stacked leaves, so the per-client rule applies verbatim.
         new_clients = aggregation.client_update_sparse(
             new_global, stacked_new, masks)
-    return RoundOutputs(new_clients, new_global, density)
+    return RoundOutputs(new_clients, new_global, density, wire_oh)
 
 
 @dataclasses.dataclass
@@ -214,10 +260,15 @@ class BatchedRoundEngine:
       selection_cfg: mask-building config; ``selection_cfg.use_kernel``
         routes BOTH the importance scoring and the Eq. (4) aggregation
         through the Pallas kernels.
+      comm: wire-format config (repro.comm).  Non-default codecs add the
+        measured mask/scale overhead to the step outputs; ``qbits < 32``
+        quantizes the values the aggregation consumes.  The default is
+        bit-identical to a comm-less engine.
     """
 
     selection_cfg: selection.SelectionConfig = dataclasses.field(
         default_factory=selection.SelectionConfig)
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
 
     def step(self, stacked_old, stacked_new, global_params,
              dropout_rates, weights, rng, *, full_round: bool,
@@ -245,7 +296,7 @@ class BatchedRoundEngine:
             jnp.asarray(dropout_rates, jnp.float32),
             jnp.asarray(weights, jnp.float32), rng,
             sel_cfg=self.selection_cfg, full_round=bool(full_round),
-            dense_masks=bool(dense_masks))
+            dense_masks=bool(dense_masks), comm=self.comm)
 
     def run(self, state: ScanState, telemetry: ScanTelemetry, *,
             num_rounds: int, batched_train_fn, weights,
@@ -298,16 +349,19 @@ class BatchedRoundEngine:
             (96 matches ``solve_dropout_rates_with``'s default, so the
             scanned rates are bit-identical to the sequential
             ``allocator="jax"`` path).
-          donate: donate the STACKED PARAMS carry to the dispatch
-            (``donate_argnums`` on the ``client_params`` argument only —
-            the global params / losses / rng may alias caller-visible
-            arrays and are never donated) so the big buffer updates in
-            place instead of being copied per chunk.  XLA implements the
-            donation on CPU/GPU/TPU for the pinned jax version; a backend
-            that declines falls back to a copy with a compile-time
-            warning.  The caller must treat the passed-in stacked carry
-            as consumed (tests/test_round_engine.py
-            ::test_scanned_run_donates_stacked_carry pins both sides).
+          donate: donate the STACKED PARAMS and GLOBAL PARAMS carries to
+            the dispatch (``donate_argnums`` on the ``client_params`` and
+            ``global_params`` arguments — the losses / rng / clock stay
+            un-donated, they are tiny and may alias caller arrays) so both
+            model buffers update in place instead of being copied per
+            chunk.  XLA implements the donation on CPU/GPU/TPU for the
+            pinned jax version; a backend that declines falls back to a
+            copy with a compile-time warning.  The caller must treat BOTH
+            passed-in carries as consumed — the protocol executor copies
+            the user-provided global pytree once before its first chunk so
+            the caller's arrays are never invalidated
+            (tests/test_round_engine.py
+            ::test_scanned_run_donates_stacked_carry pins all sides).
         """
         if scheme == "fedcs" and static_participants is None:
             raise ValueError("scheme='fedcs' requires static_participants")
@@ -315,15 +369,19 @@ class BatchedRoundEngine:
             raise ValueError("scheme='oort' requires oort_penalty (see "
                              "baselines.oort_system_penalty) + oort_budget")
         n = telemetry.model_bytes.shape[0]
+        spec = (None if self.comm.is_default else WireSpec.from_stacked(
+            state.client_params, self.selection_cfg.channel_axis))
         fn = _scanned_rounds_fn(
             batched_train_fn, self.selection_cfg, int(num_rounds), int(h),
             str(scheme), float(a_server), float(d_max), float(delta),
-            float(global_model_bytes), int(alloc_iters), bool(donate))
+            float(global_model_bytes), int(alloc_iters), bool(donate),
+            self.comm, spec)
         part = (jnp.ones((n,), bool) if static_participants is None
                 else jnp.asarray(static_participants, bool))
         pen = (jnp.ones((n,), jnp.float32) if oort_penalty is None
                else jnp.asarray(oort_penalty, jnp.float32))
-        return fn(state.client_params, tuple(state)[1:], telemetry,
+        return fn(state.client_params, state.global_params,
+                  tuple(state)[2:], telemetry,
                   jnp.asarray(t_start, jnp.int32),
                   jnp.asarray(weights, jnp.float32), part, pen,
                   jnp.asarray(oort_budget, jnp.float32))
@@ -338,17 +396,20 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
                        num_rounds: int, h: int, scheme: str,
                        a_server: float, d_max: float, delta: float,
                        global_model_bytes: float, alloc_iters: int,
-                       donate: bool):
+                       donate: bool, comm: CommConfig,
+                       wire_spec):
     dense = scheme != "feddd"
 
-    # client_params is a separate leading argument so donate_argnums can
-    # target JUST the stacked params carry (the big buffer): the global
-    # params / losses / rng entries of the state may alias caller-visible
-    # arrays (e.g. the protocol's user-provided global pytree) and must
-    # not be invalidated.
-    def run_rounds(client_params, rest: Tuple, tel: ScanTelemetry, t_start,
+    # client_params and global_params are separate leading arguments so
+    # donate_argnums can target exactly the two model-buffer carries: the
+    # losses / rng / clock entries of the state are tiny, may alias
+    # caller-visible arrays, and are never donated.  The protocol executor
+    # copies the user-provided global pytree once before its first chunk,
+    # so donating the global carry never invalidates caller state.
+    def run_rounds(client_params, global_params, rest: Tuple,
+                   tel: ScanTelemetry, t_start,
                    weights, static_part, oort_penalty, oort_budget):
-        state = ScanState(client_params, *rest)
+        state = ScanState(client_params, global_params, *rest)
         n = weights.shape[0]
 
         def body(st: ScanState, t):
@@ -383,8 +444,15 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
             else:
                 masks, density = selection.build_masks_batched(
                     params, stacked_new, d_used, config=sel_cfg, rng=rk)
+            # wire format: same static branches as _round_step — the
+            # server aggregates the decoded (possibly quantized) uploads
+            # and the measured mask/scale overhead rides the trace
+            stacked_agg = wire_quant.quantize_dequantize_stacked(
+                stacked_new, rk, comm.qbits)
+            wire_oh = _wire_overhead(masks, stacked_new, comm,
+                                     sel_cfg.channel_axis, dense)
             new_global = aggregation.aggregate_sparse_stacked(
-                stacked_new, masks, weights * part, prev_global=gparams,
+                stacked_agg, masks, weights * part, prev_global=gparams,
                 use_kernel=sel_cfg.use_kernel)
             if dense:
                 new_clients = _adopt_global(new_global, stacked_new)
@@ -416,21 +484,29 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
                 d_next = jnp.clip(d_next, 0.0, d_max)
                 d_time = d_used
             # Eq. (12) round clock over participating clients, using the
-            # dropout the uploads actually used (device f32 axis).
+            # dropout the uploads actually used (device f32 axis).  A
+            # non-dense codec charges its analytic byte model on the
+            # uplink leg — the same model the host-side driver charges —
+            # while the downlink broadcast stays on the idealized mass.
             u_eff = tel.model_bytes * (1.0 - d_time)
-            t_all = (tel.compute_latency + u_eff / tel.uplink_rate
+            if comm.is_default or wire_spec is None:
+                up_bytes = u_eff
+            else:
+                up_bytes = analytic_wire_bytes(wire_spec, d_time, comm,
+                                               xp=jnp)
+            t_all = (tel.compute_latency + up_bytes / tel.uplink_rate
                      + u_eff / tel.downlink_rate)
             round_t = jnp.max(jnp.where(part, t_all, -jnp.inf))
             sim_time = sim_time + round_t
             st2 = ScanState(new_clients, new_global, loss_dev, d_next,
                             rng, sim_time)
             return st2, ScanTrace(loss_dev, density, d_next, part,
-                                  round_t, sim_time)
+                                  round_t, sim_time, wire_oh)
 
         ts = t_start + jnp.arange(num_rounds, dtype=jnp.int32)
         return jax.lax.scan(body, state, ts)
 
-    return jax.jit(run_rounds, donate_argnums=(0,) if donate else ())
+    return jax.jit(run_rounds, donate_argnums=(0, 1) if donate else ())
 
 
 # --------------------------------------------------- shape-grouped engine
@@ -449,15 +525,19 @@ def slice_pytree(global_params, local_template):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sel_cfg", "full_round", "dense_masks"))
+                   static_argnames=("sel_cfg", "full_round", "dense_masks",
+                                    "comm"))
 def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
                         weights, rng, *,
                         sel_cfg: selection.SelectionConfig,
                         full_round: bool,
-                        dense_masks: bool = False) -> GroupedRoundOutputs:
+                        dense_masks: bool = False,
+                        comm: CommConfig = CommConfig()
+                        ) -> GroupedRoundOutputs:
     n = weights.shape[0]
-    group_masks, group_new, group_idx = [], [], []
+    group_masks, group_agg, group_idx = [], [], []
     densities = jnp.zeros((n,), jnp.float32)
+    wire_oh = None if comm.is_default else jnp.zeros((n,), jnp.int32)
     for g in groups:
         if dense_masks:
             ng = g.indices.shape[0]
@@ -471,11 +551,19 @@ def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
                 jnp.asarray(g.dropout, jnp.float32), config=sel_cfg,
                 rng=rng, coverage=g.coverage, client_indices=g.indices)
         group_masks.append(masks)
-        group_new.append(g.stacked_new)
+        # wire format: the aggregate consumes the decoded (possibly
+        # quantized) uploads; per-member keys fold the FLEET positions,
+        # matching the per-client loop (see repro.comm.quantize)
+        group_agg.append(wire_quant.quantize_dequantize_stacked(
+            g.stacked_new, rng, comm.qbits, client_indices=g.indices))
         group_idx.append(g.indices)
         densities = densities.at[g.indices].set(dens)
+        if wire_oh is not None:
+            wire_oh = wire_oh.at[g.indices].set(_wire_overhead(
+                masks, g.stacked_new, comm, sel_cfg.channel_axis,
+                dense_masks))
     new_global = aggregation.aggregate_sparse_grouped(
-        group_new, group_masks, group_idx, weights, global_params,
+        group_agg, group_masks, group_idx, weights, global_params,
         prev_global=global_params, use_kernel=sel_cfg.use_kernel)
     new_group_params = []
     for g, masks in zip(groups, group_masks):
@@ -491,7 +579,7 @@ def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
                                                    masks)
         new_group_params.append(upd)
     return GroupedRoundOutputs(tuple(new_group_params), new_global,
-                               densities)
+                               densities, wire_oh)
 
 
 @dataclasses.dataclass
@@ -520,6 +608,7 @@ class GroupedRoundEngine:
 
     selection_cfg: selection.SelectionConfig = dataclasses.field(
         default_factory=selection.SelectionConfig)
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
 
     def step(self, groups: Sequence[GroupBatch], global_params,
              weights, rng, *, full_round: bool,
@@ -542,7 +631,7 @@ class GroupedRoundEngine:
             tuple(groups), global_params,
             jnp.asarray(weights, jnp.float32), rng,
             sel_cfg=self.selection_cfg, full_round=bool(full_round),
-            dense_masks=bool(dense_masks))
+            dense_masks=bool(dense_masks), comm=self.comm)
 
 
 def train_grouped(groups, group_stacked, group_coverage, local_train_fn,
@@ -599,8 +688,8 @@ class GroupedFleetState:
 
     def __init__(self, groups, group_coverage, client_params,
                  selection_cfg: selection.SelectionConfig,
-                 num_clients: int):
-        self.engine = GroupedRoundEngine(selection_cfg)
+                 num_clients: int, comm: CommConfig = CommConfig()):
+        self.engine = GroupedRoundEngine(selection_cfg, comm)
         self.groups = groups
         self.coverage = group_coverage
         self.num_clients = num_clients
@@ -623,11 +712,12 @@ class GroupedFleetState:
     def step(self, global_params, weights, rk, *, full_round: bool,
              dense: bool):
         """One grouped engine step over the staged batches; returns
-        ``(new_global, densities)`` and rebinds the stacked client state."""
+        ``(new_global, densities, wire_overhead)`` and rebinds the stacked
+        client state (``wire_overhead`` is None with the default comm)."""
         out = self.engine.step(self._batches, global_params, weights, rk,
                                full_round=full_round, dense_masks=dense)
         self.group_stacked = list(out.group_client_params)
-        return out.global_params, out.densities
+        return out.global_params, out.densities, out.wire_overhead
 
     def export(self) -> List:
         """Per-client pytree list in fleet order (host-side sync point)."""

@@ -51,8 +51,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.comm.payload import (WireSpec, account_uplink,
+                                analytic_uplink_vector)
 from repro.core import baselines, coverage as cov_mod, round_engine
 from repro.core.allocation import (ClientTelemetry,
+                                   solve_dropout_rates_overhead_aware,
                                    solve_dropout_rates_with)
 from repro.core.protocol import (ProtocolConfig, RoundRecord, RunResult,
                                  _tree_bytes)
@@ -141,7 +144,8 @@ class _StackedWaveFleet:
 
     def __init__(self, runner: "SimRunner"):
         self.runner = runner
-        self.engine = round_engine.BatchedRoundEngine(runner.cfg.selection)
+        self.engine = round_engine.BatchedRoundEngine(runner.cfg.selection,
+                                                      runner.cfg.comm)
         self.stacked = round_engine.stack_pytrees(runner.client_params)
         self._new = None
 
@@ -166,7 +170,7 @@ class _StackedWaveFleet:
                                full_round=full_round, dense_masks=dense)
         r.global_params = out.global_params
         self.stacked = out.client_params
-        return out.densities
+        return out.densities, out.wire_overhead
 
     def export(self) -> List:
         n = self.runner.tel.num_clients
@@ -185,7 +189,7 @@ class _GroupedWaveFleet:
         self.runner = runner
         self.state = round_engine.GroupedFleetState(
             runner.groups, runner.group_coverage, runner.client_params,
-            runner.cfg.selection, runner.tel.num_clients)
+            runner.cfg.selection, runner.tel.num_clients, runner.cfg.comm)
 
     def train(self, local_train_fn, rk, part, losses, d_used) -> List:
         return self.state.train(local_train_fn, rk, part, losses, d_used,
@@ -194,10 +198,10 @@ class _GroupedWaveFleet:
     def step(self, d_used, weights, rk, *, full_round, dense):
         del d_used      # already baked into the batches by train()
         r = self.runner
-        r.global_params, densities = self.state.step(
+        r.global_params, densities, wire_oh = self.state.step(
             r.global_params, weights, rk, full_round=full_round,
             dense=dense)
-        return densities
+        return densities, wire_oh
 
     def export(self) -> List:
         return self.state.export()
@@ -250,8 +254,16 @@ class SimRunner:
         for g, cov in zip(self.groups, self.group_coverage):
             for i in g.indices:
                 self._client_coverage[i] = cov
-        self.engine = round_engine.BatchedRoundEngine(cfg.selection)
-        self.grouped_engine = round_engine.GroupedRoundEngine(cfg.selection)
+        self.engine = round_engine.BatchedRoundEngine(cfg.selection,
+                                                      cfg.comm)
+        self.grouped_engine = round_engine.GroupedRoundEngine(cfg.selection,
+                                                              cfg.comm)
+        # per-client wire specs: the codec byte model the event timeline
+        # charges on the uplink leg (repro.comm)
+        self.wire_specs = [
+            WireSpec.from_params(p, cfg.selection.channel_axis)
+            for p in self.client_params
+        ]
         self.observed = ObservedTelemetry(telemetry, simcfg.observation_ewma)
         self.dropout = np.zeros(n)            # D_n^1 = 0 (Algorithm 1)
         self.weights = np.asarray(telemetry.num_samples, float)
@@ -269,12 +281,24 @@ class SimRunner:
         """Re-solve the dropout LP from OBSERVED telemetry (never the
         network model's ground truth)."""
         tel = self.observed.telemetry(np.maximum(losses, 1e-6))
-        alloc = solve_dropout_rates_with(
-            self.cfg.allocator, tel,
-            a_server=self.cfg.a_server, d_max=self.cfg.d_max,
-            delta=self.cfg.delta,
-            global_model_bytes=_tree_bytes(self.global_params))
+        kw = dict(a_server=self.cfg.a_server, d_max=self.cfg.d_max,
+                  delta=self.cfg.delta,
+                  global_model_bytes=_tree_bytes(self.global_params))
+        if self.cfg.comm.overhead_aware_allocation:
+            alloc = solve_dropout_rates_overhead_aware(
+                tel, self.wire_specs, comm=self.cfg.comm, **kw)
+        else:
+            alloc = solve_dropout_rates_with(self.cfg.allocator, tel, **kw)
         self.dropout = alloc.dropout_rates
+
+    def _uplink_wire_vec(self, dropout_vec: np.ndarray
+                         ) -> Optional[np.ndarray]:
+        """Per-client analytic on-wire uplink bytes (None = idealized
+        ``U(1-D)``, the default comm config)."""
+        if self.cfg.comm.is_default:
+            return None
+        return analytic_uplink_vector(self.wire_specs, dropout_vec,
+                                      self.cfg.comm)
 
     def _participants(self, losses: np.ndarray) -> np.ndarray:
         """Baseline client selection, fed the server's observed view."""
@@ -294,6 +318,12 @@ class SimRunner:
         ``total``, when given, pins the upload arrival to ``t0 + total``
         (the vectorised Eq. (12) row) so the sync policy's round end is
         bit-identical to protocol.py's closed form.
+
+        The upload leg moves the CODEC's bytes (repro.comm): with a
+        non-default wire format the in-flight transfer a deadline may cut
+        is the real payload — values at the codec's precision plus the
+        mask encoding — not the idealized kept mass.  The download
+        broadcast stays idealized.
         """
         u_eff = float(self.tel.model_bytes[i]) * (1.0 - d_i)
         r_d = float(cond.downlink_rate[i])
@@ -301,7 +331,14 @@ class SimRunner:
         t_cmp = float(cond.compute_latency[i])
         dl = t0 + u_eff / r_d
         cp = dl + t_cmp
-        up = t0 + total if total is not None else cp + u_eff / r_u
+        if total is not None:        # wave paths: arrival pinned by caller
+            up = t0 + total
+        else:                        # async path computes its own leg
+            u_up = (u_eff if self.cfg.comm.is_default else
+                    float(analytic_uplink_vector([self.wire_specs[i]],
+                                                 np.asarray([d_i]),
+                                                 self.cfg.comm)[0]))
+            up = cp + u_up / r_u
         self.sim.schedule_at(dl, DOWNLOAD_DONE, i, ("downlink", r_d))
         self.sim.schedule_at(cp, COMPUTE_DONE, i, ("compute", t_cmp))
         self.sim.schedule_at(up, UPLOAD_DONE, i, ("uplink", r_u))
@@ -340,7 +377,8 @@ class SimRunner:
                               round_engine.unstack_pytree(stacked,
                                                           grp.size)):
                 self.client_params[buffer[pos]] = p
-        return np.asarray(jax.device_get(out.densities), float)
+        dens, oh = jax.device_get((out.densities, out.wire_overhead))
+        return np.asarray(dens, float), oh
 
     def _result(self, history: List[RoundRecord]) -> SimResult:
         return SimResult(history=history, global_params=self.global_params,
@@ -371,18 +409,25 @@ class SimRunner:
             # --- device math: local training (participants)
             loss_dev = fleet.train(local_train_fn, rk, part, losses, d_used)
 
-            # --- event timeline with TRUE conditions of this epoch
+            # --- event timeline with TRUE conditions of this epoch; the
+            # uplink leg moves the codec's bytes (repro.comm)
             cond = self.network.conditions(t - 1)
             true_tel = telemetry_with_conditions(self.tel, cond)
-            ti = baselines.round_times(true_tel, d_time)   # Eq. (12) rows
+            up_wire = self._uplink_wire_vec(d_time)
+            ti = baselines.round_times(true_tel, d_time,
+                                       uplink_bytes=up_wire)
             dispatch = sim.now
             for i in np.flatnonzero(part):
                 self._schedule_round_trip(int(i), dispatch, float(d_time[i]),
                                           cond, total=float(ti[i]))
 
-            # --- the server listens until the policy's horizon
+            # --- the server listens until the policy's horizon: deadlines
+            # bind on the EXPECTED real payloads (codec bytes over the
+            # observed links), so a codec that inflates uploads tightens
+            # who makes the cut
             expected = baselines.round_times(
-                self.observed.telemetry(losses), d_time)[part]
+                self.observed.telemetry(losses), d_time,
+                uplink_bytes=up_wire)[part]
             deadline = dispatch + self.policy.horizon(expected)
             arrived = np.zeros(n, bool)
             arr_time = np.full(n, np.inf)
@@ -410,16 +455,18 @@ class SimRunner:
             sim.advance_to(round_end)
 
             # --- fused engine step: exclusion == 0 aggregation weight
-            densities = fleet.step(
+            densities, wire_oh = fleet.step(
                 d_used, self.weights * arrived, rk,
                 full_round=(t % cfg.h == 0) or self._dense,
                 dense=self._dense)
-            dens, loss_host = jax.device_get((densities, loss_dev))
+            dens, oh, loss_host = jax.device_get(
+                (densities, wire_oh, loss_dev))
             # the loss report ships WITH the upload: a straggler whose
             # transfer was abandoned keeps its stale loss server-side
             losses = np.where(arrived, np.asarray(loss_host, float), losses)
-            uploaded = float(np.dot(np.asarray(dens, float) * arrived,
-                                    self.tel.model_bytes))
+            uploaded, wire = account_uplink(dens, arrived,
+                                            self.tel.model_bytes, oh,
+                                            cfg.comm)
 
             # --- allocation for round t+1, from what the server observed
             if cfg.scheme == "feddd":
@@ -435,6 +482,7 @@ class SimRunner:
                 mean_loss=float(np.mean(losses)),
                 dropout_rates=self.dropout.copy(),
                 uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
+                uploaded_bytes=uploaded, wire_bytes=wire,
                 participants=int(np.sum(arrived)),
                 metrics=metrics))
 
@@ -504,8 +552,8 @@ class SimRunner:
             merge_key = jax.random.fold_in(agg_key, merges)
             full_round = (merges % cfg.h == 0) or self._dense
             if self.heterogeneous:
-                dens = self._merge_grouped(buffer, pending, w, merge_key,
-                                           full_round)
+                dens, oh = self._merge_grouped(buffer, pending, w,
+                                               merge_key, full_round)
             else:
                 olds = round_engine.stack_pytrees(
                     [pending[i][0] for i in buffer])
@@ -516,12 +564,16 @@ class SimRunner:
                     olds, news, self.global_params, d_vec, w, merge_key,
                     full_round=full_round, dense_masks=self._dense)
                 self.global_params = out.global_params
-                dens = np.asarray(jax.device_get(out.densities), float)
+                dens, oh = jax.device_get((out.densities,
+                                           out.wire_overhead))
+                dens = np.asarray(dens, float)
                 for j, i in enumerate(buffer):
                     self.client_params[i] = jax.tree_util.tree_map(
                         lambda l, j=j: l[j], out.client_params)
             version += 1
-            uploaded = float(np.dot(dens, self.tel.model_bytes[buffer]))
+            uploaded, wire = account_uplink(
+                dens, np.ones(len(buffer), bool),
+                self.tel.model_bytes[buffer], oh, cfg.comm)
 
             if cfg.scheme == "feddd":
                 self._allocate(losses)
@@ -535,6 +587,7 @@ class SimRunner:
                 mean_loss=float(np.mean(losses)),
                 dropout_rates=self.dropout.copy(),
                 uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
+                uploaded_bytes=uploaded, wire_bytes=wire,
                 participants=len(buffer),
                 metrics=metrics))
             prev_time = ev.time

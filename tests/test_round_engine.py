@@ -450,35 +450,42 @@ def test_scanned_engine_run_trace_and_device_clock():
 
 
 def test_scanned_run_donates_stacked_carry():
-    """donate_argnums targets ONLY the stacked params carry: the global
-    params the caller passed in must stay alive, while the stacked input
-    buffer is consumed in place (no per-dispatch copy).  XLA implements
+    """donate_argnums targets BOTH model-buffer carries: the stacked
+    client params AND the global params update in place (no per-dispatch
+    copy of either); the tiny losses/rng/clock entries stay un-donated.
+    The protocol executor copies the user-provided global pytree once
+    before its first chunk, so caller arrays are never invalidated
+    (test_rounds_per_dispatch_* cover that side).  XLA implements
     donation on CPU/GPU/TPU for the pinned jax version; if a backend ever
     declines it, it falls back to a copy and jax warns at compile — this
-    test would catch the regression by the carry staying live."""
+    test would catch the regression by the carries staying live."""
     from repro.core.round_engine import (BatchedRoundEngine, ScanState,
                                          ScanTelemetry, stack_pytrees)
 
     n = 4
     params, tel, batched = _make_scan_fixture(n=n, seed=2)
     stacked = stack_pytrees([params] * n)
+    gparams = jax.tree_util.tree_map(jnp.array, params)
     donated_leaf = jax.tree_util.tree_leaves(stacked)[0]
-    global_leaf = jax.tree_util.tree_leaves(params)[0]
+    global_leaf = jax.tree_util.tree_leaves(gparams)[0]
+    losses_in = jnp.ones((n,), jnp.float32)
     engine = BatchedRoundEngine(SelectionConfig())
-    state = ScanState(stacked, params, jnp.ones((n,), jnp.float32),
+    state = ScanState(stacked, gparams, losses_in,
                       jnp.zeros((n,), jnp.float32), jax.random.PRNGKey(1),
                       jnp.zeros((), jnp.float32))
     kw = dict(num_rounds=3, batched_train_fn=batched,
               weights=tel.num_samples, h=3, a_server=0.6, d_max=0.8,
               delta=1.0, global_model_bytes=float(np.max(tel.model_bytes)))
     out, _ = engine.run(state, ScanTelemetry.from_host(tel), **kw)
-    assert not global_leaf.is_deleted()      # never donated
-    assert donated_leaf.is_deleted()         # carry consumed in place
+    assert donated_leaf.is_deleted()         # stacked carry consumed
+    assert global_leaf.is_deleted()          # global carry consumed too
+    assert not losses_in.is_deleted()        # small carries never donated
     # chaining chunks off the returned carry works (each chunk donates
     # the previous chunk's output, which only the caller holds)
     out2, _ = engine.run(out, ScanTelemetry.from_host(tel), **kw)
     jax.block_until_ready(jax.tree_util.tree_leaves(out2.client_params))
     assert jax.tree_util.tree_leaves(out.client_params)[0].is_deleted()
+    assert jax.tree_util.tree_leaves(out.global_params)[0].is_deleted()
 
 
 def test_rounds_per_dispatch_validation():
