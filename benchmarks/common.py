@@ -155,12 +155,15 @@ def run_sim_experiment(
     policy_kw: Optional[Dict] = None,
     eval_every: int = 1,
     hetero_specs: Optional[List] = None,
+    faults=None,
 ):
     """The same experiment, time axis owned by the event-driven simulator
-    (repro/sim): ``policy`` in {sync, deadline, async}, ``network`` in
-    {static, markov} (see repro.sim.network for trace-driven models).
-    ``hetero_specs`` builds a ragged-width fleet — the sim drives the
-    shape-grouped engine, so stragglers x ragged models compose."""
+    (repro/sim): ``policy`` in {sync, deadline, retry, async}, ``network``
+    in {static, markov, straggler} (see repro.sim.network for trace-driven
+    models).  ``hetero_specs`` builds a ragged-width fleet — the sim
+    drives the shape-grouped engine, so stragglers x ragged models
+    compose.  ``faults`` attaches a :class:`repro.sim.faults.FaultModel`
+    (churn / lossy uplinks / corruption / quorum degradation)."""
     from repro.sim import SimConfig, make_network, run_sim
 
     global_params, tel, ltf, ef, clients = setup_experiment(
@@ -172,7 +175,7 @@ def run_sim_experiment(
     return run_sim(scheme, global_params, tel, ltf, ef, sim=sim,
                    network=net, client_params=clients, rounds=rounds,
                    a_server=a_server, d_max=d_max, delta=delta, h=h,
-                   seed=seed)
+                   seed=seed, faults=faults)
 
 
 def csv_row(name: str, wall_s: float, derived: str) -> str:

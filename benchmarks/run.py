@@ -20,9 +20,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (accuracy_homogeneous, class_imbalance,  # noqa: E402
-                        convergence_bound, heterogeneous, kernels_bench,
-                        perf_federated, roofline, selection_variants,
-                        sensitivity, straggler_policies, t2a, wire_formats)
+                        convergence_bound, fault_tolerance, heterogeneous,
+                        kernels_bench, perf_federated, roofline,
+                        selection_variants, sensitivity,
+                        straggler_policies, t2a, wire_formats)
 
 MODULES = [
     ("fig4-6 accuracy (model-homogeneous)", accuracy_homogeneous),
@@ -33,6 +34,7 @@ MODULES = [
     ("fig21 class imbalance", class_imbalance),
     ("thm2 convergence bound", convergence_bound),
     ("straggler policies (event-driven sim)", straggler_policies),
+    ("fault tolerance (t2a vs fault rate)", fault_tolerance),
     ("wire formats (accuracy vs on-wire bytes)", wire_formats),
     ("round-engine perf (loop/batched/fused/scanned)", perf_federated),
     ("pallas kernels", kernels_bench),

@@ -43,6 +43,16 @@ uploaded values (int8 stochastic rounding) for ~4x fewer wire bytes at
 a small accuracy cost; ``RoundRecord.wire_bytes`` then reports what
 actually crossed the uplink next to the raw ``uploaded_bytes``
 (``benchmarks/wire_formats.py`` maps the full frontier).
+
+Fault injection (``--fault-rate`` / ``--quorum``, repro.sim.faults): a
+non-zero fault rate routes the run through the event-driven simulator
+and makes clients crash mid-round (rate/2), lose uplink chunks (rate,
+retransmitted with exponential backoff and charged real bytes), and
+occasionally ship corrupted payloads (rate/4) that the server's
+validation screen quarantines.  ``--quorum`` sets the minimum number of
+surviving contributors below which the server skips the round and holds
+the global model (``benchmarks/fault_tolerance.py`` maps accuracy vs
+fault rate).
 """
 
 import argparse
@@ -77,6 +87,13 @@ def main():
     ap.add_argument("--qbits", type=int, default=32, choices=(32, 16, 8),
                     help="uploaded-value precision (8 = int8 stochastic "
                          "rounding)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject faults at this rate (crashes at rate/2, "
+                         "lossy uplink chunks at rate, corrupted payloads "
+                         "at rate/4); 0 keeps the closed-form driver")
+    ap.add_argument("--quorum", type=int, default=1,
+                    help="minimum surviving contributors per round; below "
+                         "it the server skips the round (fault runs only)")
     args = ap.parse_args()
 
     train, test = make_dataset("mnist", num_train=6000, num_test=1500)
@@ -91,16 +108,29 @@ def main():
 
     engine = "per-client loop" if args.loop else "batched round engine"
     comm = CommConfig(codec=args.codec, qbits=args.qbits)
-    print(f"== FedDD (A_server={args.a_server}, {engine}, "
-          f"codec={args.codec}/q{args.qbits}) ==")
+    faults = None
+    if args.fault_rate > 0.0:
+        from repro.sim import FaultConfig, RandomFaults
+        faults = RandomFaults(FaultConfig(
+            crash_rate=args.fault_rate / 2, loss_rate=args.fault_rate,
+            corrupt_rate=args.fault_rate / 4, quorum=args.quorum, seed=0))
+        print(f"== FedDD + faults (rate={args.fault_rate}, "
+              f"quorum={args.quorum}) ==")
+    else:
+        print(f"== FedDD (A_server={args.a_server}, {engine}, "
+              f"codec={args.codec}/q{args.qbits}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
                        a_server=args.a_server, h=5, batched=not args.loop,
-                       comm=comm)
+                       comm=comm, faults=faults)
     for r in feddd.history:
+        fault_col = ""
+        if faults is not None:
+            fault_col = (" SKIPPED" if r.skipped else
+                         f"  surv={r.survivors}/{args.clients}")
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
               f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}  "
               f"wire={r.wire_bytes / 1e3:.0f}kB  "
-              f"host={r.host_wall_time:.2f}s")
+              f"host={r.host_wall_time:.2f}s{fault_col}")
 
     print("== FedAvg (full uploads) ==")
     fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds)

@@ -3,12 +3,18 @@
 Sharded arrays are gathered to host before writing (dry-run-scale models are
 never materialised, so this path only runs for real trainings).  Structure
 round-trips exactly: tree paths are serialised into the npz keys.
+
+Writes are ATOMIC (write-temp + fsync + rename): a process killed mid-write
+— the crash-mid-round scenario the fault layer (repro.sim.faults) injects
+on the simulated side — leaves either the previous checkpoint intact or the
+new one complete, never a torn file (tests/test_optim_checkpoint.py).
 """
 
 from __future__ import annotations
 
 import io
 import json
+import os
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
@@ -36,18 +42,33 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _atomic_write_bytes(path: Path, data: bytes) -> None:
+    """Durably replace ``path``: temp file + fsync + atomic rename.
+
+    ``os.replace`` is atomic on POSIX, so a reader (or a crash) can only
+    ever observe the old complete file or the new complete file.
+    """
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save_checkpoint(path: str | Path, tree: Any,
                     metadata: Optional[Dict] = None) -> None:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    with open(path, "wb") as f:
-        np.savez(f, **{k: v for k, v in flat.items()})
+    buf = io.BytesIO()
+    np.savez(buf, **{k: v for k, v in flat.items()})
+    _atomic_write_bytes(path, buf.getvalue())
     meta = dict(metadata or {})
     meta["_keys"] = sorted(flat.keys())
     meta_bytes = (msgpack.packb(meta) if _HAVE_MSGPACK
                   else json.dumps(meta).encode())
-    Path(str(path) + ".meta").write_bytes(meta_bytes)
+    _atomic_write_bytes(Path(str(path) + ".meta"), meta_bytes)
 
 
 def load_checkpoint(path: str | Path, like: Any) -> Tuple[Any, Dict]:

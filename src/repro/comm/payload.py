@@ -308,6 +308,62 @@ def analytic_wire_bytes(spec: WireSpec, dropout, comm: CommConfig, xp=np):
     return values + overhead
 
 
+def delivered_prefix_counts(spec: WireSpec, dropout: float,
+                            comm: CommConfig,
+                            delivered_bytes: float) -> np.ndarray:
+    """Per-leaf kept-channel counts a truncated upload actually delivered.
+
+    The serialized upload walks leaves in flatten order, each leaf's mask
+    framing first and then its kept channels in ascending channel index
+    (:func:`encode_upload`), so a byte cut maps exactly to a per-leaf
+    prefix of kept channels: the partial-aggregation feature of the
+    deadline policy (sim/faults.py) feeds these counts to
+    :func:`repro.core.aggregation.truncate_masks_to_prefix`.
+
+    The per-leaf kept counts and framing mirror
+    :func:`analytic_wire_bytes` (and therefore the mask builder's
+    ``kept = clip(ceil(C*(1-D)), 0, C)``) bit for bit: a cut at the
+    analytic total delivers every kept channel, a cut at 0 delivers none.
+    Returns an (L,) int32 array, one entry per spec leaf.
+    """
+    remaining = float(delivered_bytes)
+    vbytes = float(quantize.value_bytes(comm.qbits))
+    counts = np.zeros(len(spec.leaves), np.int32)
+    for li, (c, e) in enumerate(spec.leaves):
+        kept = int(np.clip(np.ceil(c * (1.0 - float(dropout))), 0.0,
+                           float(c)))
+        per_kept = (e / c) * vbytes
+        frame = 0.0
+        if comm.qbits == 8 and kept > 0:
+            frame += 4.0
+        if comm.codec != "dense":
+            bm = float(codecs.HEADER_BYTES + codecs.bitmask_bytes(c))
+            if comm.codec in ("index", "auto"):
+                gap = max(c / max(kept, 1.0) - 1.0, 0.0)
+                gap_b = float(varint_bytes_f(gap))
+                ix = codecs.HEADER_BYTES + kept * gap_b
+                if comm.codec == "index":
+                    per_kept += gap_b
+                    frame += codecs.HEADER_BYTES
+                elif ix < bm:
+                    per_kept += gap_b
+                    frame += codecs.AUTO_TAG_BYTES + codecs.HEADER_BYTES
+                else:
+                    frame += codecs.AUTO_TAG_BYTES + bm
+            else:
+                frame += bm
+        if remaining < frame or kept == 0:
+            break
+        remaining -= frame
+        got = (kept if per_kept <= 0.0
+               else min(kept, int(np.floor(remaining / per_kept + 1e-9))))
+        counts[li] = got
+        remaining -= got * per_kept
+        if got < kept:
+            break
+    return counts
+
+
 def varint_bytes_f(v, xp=np):
     """Float rendering of codecs.varint_bytes for the analytic model
     (expected gaps are fractional)."""

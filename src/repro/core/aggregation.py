@@ -205,6 +205,36 @@ def aggregate_sparse(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def truncate_masks_to_prefix(stacked_masks, delivered):
+    """Keep only each client's first ``delivered[leaf][n]`` kept channels.
+
+    Partial aggregation for deadline-cut uploads (sim/faults.py): kept
+    channels serialize in ascending channel index
+    (repro.comm.payload.encode_upload), so the bytes that landed before
+    the cut correspond per leaf to the PREFIX of the mask's kept set.
+    ``stacked_masks`` leaves are channel-shaped (N, 1, ..., C, ..., 1);
+    ``delivered`` is one (N,) int32 array per mask leaf (flatten order).
+    A count >= the leaf's kept total leaves that client's mask untouched,
+    so fully-arrived clients ride through unchanged.
+    """
+    mleaves, treedef = jax.tree_util.tree_flatten(stacked_masks)
+    if len(delivered) != len(mleaves):
+        raise ValueError("delivered counts / mask leaves mismatch")
+    out = []
+    for m, k in zip(mleaves, delivered):
+        k = jnp.asarray(k, jnp.float32)
+        if m.ndim <= 1:                      # scalar leaf: one channel
+            keep = (k >= 1.0).astype(m.dtype)
+            out.append(m * keep.reshape(m.shape))
+            continue
+        ax = next((a for a in range(1, m.ndim) if m.shape[a] > 1),
+                  m.ndim - 1)
+        rank = jnp.cumsum(m, axis=ax)        # kept channels rank 1..kept
+        kb = k.reshape((-1,) + (1,) * (m.ndim - 1))
+        out.append(m * (rank <= kb).astype(m.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def client_update_sparse(global_params, local_params, mask):
     """Eq. (5): W_n^{t+1} = W^t ⊙ M_n + What_n ⊙ (1 - M_n)."""
     return jax.tree_util.tree_map(

@@ -54,6 +54,17 @@ stragglers / deadline or    ``sim=``/``network=`` to :func:`run_scheme`;
 async serving               event-driven clock, observed-telemetry LP
                             re-solve, sync / deadline / async policies;
                             ragged fleets ride the grouped engine there too
+faults: churn, lossy or     **sim runner + fault layer** (repro/sim/
+corrupted uplinks, retry/   faults.py): pass ``faults=`` to
+timeout serving, quorum     :func:`run_scheme` (with ``sim=``); crash /
+degradation                 packet-loss / corruption injection, payload
+                            validation + quarantine (0-weight on the same
+                            stacked Eq. (4) step), the ``retry`` timeout
+                            policy, deadline partial aggregation of
+                            delivered mask-channel prefixes, and the
+                            minimum-quorum round skip with survivor-only
+                            LP re-solves.  All fault rates 0 == no fault
+                            model, bit for bit (tests/test_faults.py)
 wire formats (sparse        **every executor** via ``ProtocolConfig(comm=
 codecs, quantization,       CommConfig(codec=..., qbits=...))`` (repro.comm):
 on-wire byte accounting)    masks ship as packed-bitmask / delta+varint
@@ -199,6 +210,18 @@ class RoundRecord:
                                      # CommConfig, bit for bit.
     epsilon: Optional[float] = None
     metrics: Optional[Dict] = None
+    # --- failure-model fields (repro.sim.faults); the defaults describe
+    # a fault-free round, so pre-fault histories are unchanged.
+    survivors: int = -1              # clients alive on the round clock
+                                     # (scheduled minus crashed; -1 when
+                                     # the driver does not track it)
+    retries: int = 0                 # uplink chunk retransmits this round
+    abandoned_bytes: float = 0.0     # wire bytes sent but never used:
+                                     # crashed/aborted/cut transfers,
+                                     # quorum-discarded arrivals
+    quarantined_bytes: float = 0.0   # wire bytes of arrivals the payload
+                                     # validation screened out of Eq. (4)
+    skipped: bool = False            # quorum miss: global held, no step
 
 
 @dataclasses.dataclass
@@ -776,7 +799,8 @@ class FedDDServer:
                     dropout_rates=self.dropout.copy(),
                     uploaded_fraction=uploaded / max(full_bytes, 1e-9),
                     uploaded_bytes=uploaded, wire_bytes=wire,
-                    participants=int(np.sum(part))))
+                    participants=int(np.sum(part)),
+                    survivors=int(np.sum(part))))
             t += k
 
     def _record(self, t: int, t0: float, sim_time: float,
@@ -792,6 +816,7 @@ class FedDDServer:
             uploaded_fraction=uploaded_bytes / max(full_bytes, 1e-9),
             uploaded_bytes=uploaded_bytes, wire_bytes=wire_bytes,
             participants=int(np.sum(active)),
+            survivors=int(np.sum(active)),
             epsilon=eps_val, metrics=metrics)
 
     def _finish_round(self, active: np.ndarray, sim_time: float, eval_fn,
@@ -853,7 +878,7 @@ class FedDDServer:
 
 def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
                eval_fn=None, client_params=None, *, sim=None, network=None,
-               **cfg_kw) -> RunResult:
+               faults=None, **cfg_kw) -> RunResult:
     """One-call convenience wrapper used by benchmarks and examples.
 
     Passing ``sim`` (a :class:`repro.sim.runner.SimConfig`, or ``True``
@@ -861,17 +886,20 @@ def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
     .NetworkModel`) routes the run through the event-driven simulator
     instead of the closed-form Eq. (12) clock: dynamic per-round network
     conditions, observed-telemetry LP re-solves, and sync / deadline /
-    async aggregation policies.  Ragged ``client_params`` fleets run the
-    grouped engine on either path (see the routing table in the module
-    docstring).
+    async aggregation policies.  ``faults`` (a
+    :class:`repro.sim.faults.FaultModel`) additionally injects client
+    crashes, lossy uplinks, and corrupted payloads, and enables the
+    server's quarantine/quorum degradation (wave policies only).  Ragged
+    ``client_params`` fleets run the grouped engine on either path (see
+    the routing table in the module docstring).
     """
-    if sim is not None or network is not None:
+    if sim is not None or network is not None or faults is not None:
         from repro.sim import runner as sim_runner   # local: sim -> core
         if sim is None or sim is True:
             sim = sim_runner.SimConfig()
         return sim_runner.run_sim(scheme, global_params, telemetry,
                                   local_train_fn, eval_fn, sim=sim,
-                                  network=network,
+                                  network=network, faults=faults,
                                   client_params=client_params, **cfg_kw)
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     server = FedDDServer(global_params, cfg, telemetry, client_params)

@@ -213,7 +213,8 @@ def _wire_overhead(masks, stacked_new, comm: CommConfig, channel_axis: int,
                    static_argnames=("sel_cfg", "full_round", "dense_masks",
                                     "comm"))
 def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
-                weights, rng, *, sel_cfg: selection.SelectionConfig,
+                weights, rng, stacked_upload=None, delivered=None, *,
+                sel_cfg: selection.SelectionConfig,
                 full_round: bool, dense_masks: bool = False,
                 comm: CommConfig = CommConfig()) -> RoundOutputs:
     if dense_masks:
@@ -235,12 +236,22 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
     # masks carry a collapsed channel dim, so their overhead is the
     # closed-form full-upload constant at TRUE widths, not an encoding of
     # the collapsed shape.
+    # Fault injection (repro.sim.faults): ``stacked_upload`` is what the
+    # server DECODED off the wire — corrupted rows differ from the
+    # client's own ``stacked_new``, which stays clean for Eq. (5);
+    # ``delivered`` truncates deadline-cut uploads to the per-leaf prefix
+    # of mask channels whose bytes landed (partial aggregation).  Both
+    # default to None and then trace the exact pre-fault graph.
+    upload_src = stacked_new if stacked_upload is None else stacked_upload
     stacked_agg = wire_quant.quantize_dequantize_stacked(
-        stacked_new, rng, comm.qbits)
+        upload_src, rng, comm.qbits)
     wire_oh = _wire_overhead(masks, stacked_new, comm,
                              sel_cfg.channel_axis, dense_masks)
+    agg_masks = (masks if delivered is None
+                 else aggregation.truncate_masks_to_prefix(masks,
+                                                           delivered))
     new_global = aggregation.aggregate_sparse_stacked(
-        stacked_agg, masks, weights, prev_global=global_params,
+        stacked_agg, agg_masks, weights, prev_global=global_params,
         use_kernel=sel_cfg.use_kernel)
     if full_round:
         new_clients = _adopt_global(new_global, stacked_new)
@@ -272,7 +283,8 @@ class BatchedRoundEngine:
 
     def step(self, stacked_old, stacked_new, global_params,
              dropout_rates, weights, rng, *, full_round: bool,
-             dense_masks: bool = False) -> RoundOutputs:
+             dense_masks: bool = False, stacked_upload=None,
+             delivered=None) -> RoundOutputs:
         """Run one round's server side.
 
         Args:
@@ -290,12 +302,20 @@ class BatchedRoundEngine:
             variants compile once each).
           dense_masks: all-ones masks / full uploads (the fedavg / fedcs /
             oort baselines); skips importance scoring entirely (static).
+          stacked_upload: optional stacked pytree the AGGREGATION consumes
+            instead of ``stacked_new`` — the on-wire rendering when fault
+            injection corrupts uploads (clients' own Eq. (5) state stays
+            ``stacked_new``).
+          delivered: optional per-mask-leaf (N,) int32 delivered-channel
+            counts; truncates each client's aggregation mask to its
+            delivered prefix (deadline partial aggregation).
         """
         return _round_step(
             stacked_old, stacked_new, global_params,
             jnp.asarray(dropout_rates, jnp.float32),
-            jnp.asarray(weights, jnp.float32), rng,
-            sel_cfg=self.selection_cfg, full_round=bool(full_round),
+            jnp.asarray(weights, jnp.float32), rng, stacked_upload,
+            delivered, sel_cfg=self.selection_cfg,
+            full_round=bool(full_round),
             dense_masks=bool(dense_masks), comm=self.comm)
 
     def run(self, state: ScanState, telemetry: ScanTelemetry, *,
@@ -718,6 +738,17 @@ class GroupedFleetState:
                                full_round=full_round, dense_masks=dense)
         self.group_stacked = list(out.group_client_params)
         return out.global_params, out.densities, out.wire_overhead
+
+    def discard(self) -> None:
+        """Drop a staged round without stepping: client params stay at
+        their pre-training state (quorum-skipped rounds, sim/faults.py)."""
+        self._batches = None
+
+    @property
+    def staged_batches(self):
+        """The GroupBatches ``train()`` staged for the next ``step()``
+        (read-only view for the sim runner's payload-validation screen)."""
+        return self._batches
 
     def export(self) -> List:
         """Per-client pytree list in fleet order (host-side sync point)."""

@@ -5,22 +5,28 @@ Modules
   network   true per-epoch client conditions: static Table-4, two-state
             Markov fading, trace-driven
   policies  server aggregation disciplines: sync wait-for-all, deadline
-            semi-sync (drops late uploads), buffered async with
-            staleness-decayed weights
+            semi-sync (drops late uploads), retry/timeout serving,
+            buffered async with staleness-decayed weights
+  faults    deterministic fault injection: client churn, lossy uplinks
+            with retransmit/backoff, corrupted payloads, server-side
+            validation + quorum-gated degradation
   runner    the driver: composes the above with the batched round engine
             and re-solves the dropout LP from OBSERVED telemetry
 
-Entry points: :func:`run_sim`, or ``run_scheme(..., sim=..., network=...)``
-in repro.core.protocol.  See the routing table in core/protocol.py for
-which execution path serves which scenario.
+Entry points: :func:`run_sim`, or ``run_scheme(..., sim=..., network=...,
+faults=...)`` in repro.core.protocol.  See the routing table in
+core/protocol.py for which execution path serves which scenario.
 """
 
 from repro.sim.engine import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_DONE,
                               Event, EventQueue, Simulator)
+from repro.sim.faults import (CORRUPT_KINDS, FaultConfig, FaultModel,
+                              RandomFaults, RoundFaults, ScriptedFaults,
+                              ValidationConfig)
 from repro.sim.network import (MarkovFadingNetwork, NetworkConditions,
                                NetworkModel, StaticNetwork, TraceNetwork,
                                make_network, telemetry_with_conditions)
 from repro.sim.policies import (POLICIES, AsyncPolicy, DeadlinePolicy,
-                                SyncPolicy, make_policy)
+                                RetryPolicy, SyncPolicy, make_policy)
 from repro.sim.runner import (ObservedTelemetry, SimConfig, SimResult,
                               SimRunner, run_sim)

@@ -146,6 +146,25 @@ class TraceNetwork(NetworkModel):
         r = epoch % self._up.shape[0]
         return NetworkConditions(self._up[r], self._down[r], self._cmp[r])
 
+    @classmethod
+    def straggler_collapse(cls, tel: ClientTelemetry, *, epochs: int = 12,
+                           clients: Sequence[int] = (0,),
+                           factor: float = 50.0,
+                           from_epoch: int = 1) -> "TraceNetwork":
+        """Canonical adversarial trace: ``clients``' uplinks collapse by
+        ``factor`` from ``from_epoch`` on (everything else held at the
+        base telemetry).  The scenario the deadline/partial-aggregation
+        and fault-injection tests drive (tests/test_faults.py,
+        benchmarks/fault_tolerance.py)."""
+        up = np.tile(np.asarray(tel.uplink_rate, float), (epochs, 1))
+        for c in clients:
+            up[from_epoch:, int(c)] /= factor
+        return cls(up,
+                   np.tile(np.asarray(tel.downlink_rate, float),
+                           (epochs, 1)),
+                   np.tile(np.asarray(tel.compute_latency, float),
+                           (epochs, 1)))
+
 
 def make_network(name: str, tel: ClientTelemetry, *,
                  seed: int = 0, **kw) -> NetworkModel:
@@ -154,5 +173,7 @@ def make_network(name: str, tel: ClientTelemetry, *,
         return StaticNetwork(tel)
     if name == "markov":
         return MarkovFadingNetwork(tel, seed=seed, **kw)
+    if name == "straggler":
+        return TraceNetwork.straggler_collapse(tel, **kw)
     raise ValueError(f"unknown network model {name!r} "
-                     "(trace models are constructed directly)")
+                     "(other trace models are constructed directly)")

@@ -15,6 +15,12 @@ FedDD under three serving disciplines:
   not finished uploading by then is cut off — its in-flight transfer is
   abandoned, its update is excluded from Eq. (4) (a 0 aggregation weight
   in the stacked engine step), and it rejoins the next wave.
+* :class:`RetryPolicy` — sync with a hard timeout, the serving discipline
+  for LOSSY uplinks (sim/faults.py): the server waits for every expected
+  upload (retransmits and their backoff included) but never longer than
+  ``slack`` x the slowest expected round trip — a client that silently
+  died cannot stall the round forever, yet a retransmitting one gets the
+  headroom a plain deadline would deny it.
 * :class:`AsyncPolicy` — buffered fully-asynchronous serving (FedBuff /
   FedAsync style): the server merges as soon as ``buffer_size`` uploads
   are in, weighting each by a staleness decay ``(1 + s)^(-alpha)`` where
@@ -34,7 +40,7 @@ import dataclasses
 
 import numpy as np
 
-POLICIES = ("sync", "deadline", "async")
+POLICIES = ("sync", "deadline", "retry", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,17 +63,49 @@ class DeadlinePolicy:
     observed telemetry — the server budgets for the fleet it *believes*
     it has, and a client whose link faded since the last estimate simply
     misses the cut.  The runner always keeps at least one upload (the
-    earliest arrival) so a round is never empty.
+    earliest arrival) so a round is never empty (with a fault model
+    attached, the quorum rule replaces that fallback).
+
+    ``partial=True`` enables partial aggregation of cut uploads
+    (homogeneous fleets): instead of abandoning an in-flight transfer
+    outright, the server aggregates the per-leaf prefix of mask channels
+    whose bytes landed before the deadline — kept channels serialize in
+    ascending channel order (repro.comm.payload), so the delivered byte
+    count maps exactly to a per-leaf kept-channel prefix
+    (:func:`repro.comm.payload.delivered_prefix_counts`).
     """
 
     quantile: float = 0.75
     slack: float = 1.5
+    partial: bool = False
     name: str = dataclasses.field(default="deadline", init=False)
 
     def horizon(self, expected_durations: np.ndarray) -> float:
         return self.slack * float(
             np.quantile(np.asarray(expected_durations, float),
                         self.quantile))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded patience: wait for all expected uploads, up to a timeout.
+
+    The horizon is ``slack`` x the SLOWEST expected round-trip duration.
+    Expectations come from observed telemetry and do not include
+    retransmit delays, so ``slack > 1`` is the headroom granted to lossy
+    uplinks (sim/faults.py): a retransmitting client lands inside the
+    horizon and its retries are waited out, while a crashed or silently
+    dead client can stall the round by at most the timeout.  With no
+    faults and ``slack >= 1`` this reduces to :class:`SyncPolicy` over
+    any network the expectations track.
+    """
+
+    slack: float = 3.0
+    name: str = dataclasses.field(default="retry", init=False)
+
+    def horizon(self, expected_durations: np.ndarray) -> float:
+        return self.slack * float(
+            np.max(np.asarray(expected_durations, float)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +134,8 @@ def make_policy(name: str, **kw):
         return SyncPolicy(**kw)
     if name == "deadline":
         return DeadlinePolicy(**kw)
+    if name == "retry":
+        return RetryPolicy(**kw)
     if name == "async":
         return AsyncPolicy(**kw)
     raise ValueError(f"unknown policy {name!r}; expected one of {POLICIES}")

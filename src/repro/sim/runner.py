@@ -52,7 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.payload import (WireSpec, account_uplink,
-                                analytic_uplink_vector)
+                                analytic_uplink_vector,
+                                delivered_prefix_counts)
 from repro.core import baselines, coverage as cov_mod, round_engine
 from repro.core.allocation import (ClientTelemetry,
                                    solve_dropout_rates_overhead_aware,
@@ -60,11 +61,13 @@ from repro.core.allocation import (ClientTelemetry,
 from repro.core.protocol import (ProtocolConfig, RoundRecord, RunResult,
                                  _tree_bytes)
 from repro.sim import engine as ev_mod
+from repro.sim import faults as faults_mod
 from repro.sim.engine import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_DONE,
                               Simulator)
+from repro.sim.faults import FaultModel
 from repro.sim.network import (NetworkModel, StaticNetwork,
                                telemetry_with_conditions)
-from repro.sim.policies import AsyncPolicy, make_policy
+from repro.sim.policies import AsyncPolicy, DeadlinePolicy, make_policy
 
 
 @dataclasses.dataclass
@@ -113,7 +116,13 @@ class ObservedTelemetry:
         self.compute = np.asarray(prior.compute_latency, float).copy()
 
     def _update(self, arr: np.ndarray, i: int, measured: float) -> None:
-        if measured != arr[i]:
+        # estimates update ONLY from measurements that actually landed;
+        # a client whose upload never arrived (crash, abort, deadline
+        # cut — sim/faults.py) produces no event and its estimate stays
+        # stale rather than being zero-filled, so one crash cannot
+        # crater its dropout allocation next round.  Non-finite
+        # measurements are discarded outright.
+        if np.isfinite(measured) and measured != arr[i]:
             arr[i] = self.ewma * measured + (1.0 - self.ewma) * arr[i]
 
     def observe(self, event: ev_mod.Event) -> None:
@@ -163,14 +172,40 @@ class _StackedWaveFleet:
         self._new = round_engine.stack_pytrees(new_list)
         return loss_dev
 
-    def step(self, d_used, weights, rk, *, full_round, dense):
+    def step(self, d_used, weights, rk, *, full_round, dense,
+             delivered=None, overrides=None):
         r = self.runner
+        upload = None
+        if overrides:
+            # wire-side corruption the validation screen missed: the
+            # AGGREGATION consumes the corrupted rows, the client's own
+            # Eq. (5) state stays its clean ``_new``
+            upload = self._new
+            for i, row in sorted(overrides.items()):
+                upload = jax.tree_util.tree_map(
+                    lambda l, c, i=i: l.at[i].set(jnp.asarray(c, l.dtype)),
+                    upload, row)
         out = self.engine.step(self.stacked, self._new, r.global_params,
                                d_used, weights, rk,
-                               full_round=full_round, dense_masks=dense)
+                               full_round=full_round, dense_masks=dense,
+                               stacked_upload=upload, delivered=delivered)
         r.global_params = out.global_params
         self.stacked = out.client_params
         return out.densities, out.wire_overhead
+
+    def discard(self) -> None:
+        """Drop the staged round (quorum miss): params stay put."""
+        self._new = None
+
+    def upload_stats(self):
+        """(norms, finite) of the staged updates, fleet order."""
+        return faults_mod.update_stats_stacked(self._new, self.stacked)
+
+    def row_params(self, i: int):
+        """Host (old, new) pytrees of client ``i``'s staged update."""
+        old = jax.tree_util.tree_map(lambda l: l[i], self.stacked)
+        new = jax.tree_util.tree_map(lambda l: l[i], self._new)
+        return jax.device_get(old), jax.device_get(new)
 
     def export(self) -> List:
         n = self.runner.tel.num_clients
@@ -195,13 +230,37 @@ class _GroupedWaveFleet:
         return self.state.train(local_train_fn, rk, part, losses, d_used,
                                 dense=self.runner.cfg.scheme != "feddd")
 
-    def step(self, d_used, weights, rk, *, full_round, dense):
+    def step(self, d_used, weights, rk, *, full_round, dense,
+             delivered=None, overrides=None):
         del d_used      # already baked into the batches by train()
+        if delivered is not None or overrides:
+            # SimRunner.__init__ rejects corruption / partial aggregation
+            # for ragged fleets before a round can reach here
+            raise NotImplementedError(
+                "upload overrides / delivered prefixes are homogeneous-"
+                "engine features")
         r = self.runner
         r.global_params, densities, wire_oh = self.state.step(
             r.global_params, weights, rk, full_round=full_round,
             dense=dense)
         return densities, wire_oh
+
+    def discard(self) -> None:
+        """Drop the staged round (quorum miss): params stay put."""
+        self.state.discard()
+
+    def upload_stats(self):
+        """(norms, finite) of the staged updates, fleet order."""
+        n = self.runner.tel.num_clients
+        norms = np.zeros(n)
+        finite = np.ones(n, bool)
+        for b in self.state.staged_batches:
+            nb, fb = faults_mod.update_stats_stacked(b.stacked_new,
+                                                     b.stacked_old)
+            idx = np.asarray(jax.device_get(b.indices))
+            norms[idx] = nb
+            finite[idx] = fb
+        return norms, finite
 
     def export(self) -> List:
         return self.state.export()
@@ -213,7 +272,8 @@ class SimRunner:
     def __init__(self, global_params, cfg: ProtocolConfig,
                  telemetry: ClientTelemetry, simcfg: SimConfig,
                  network: Optional[NetworkModel] = None,
-                 client_params: Optional[List] = None):
+                 client_params: Optional[List] = None,
+                 faults: Optional[FaultModel] = None):
         if cfg.track_epsilon:
             raise ValueError("track_epsilon is a per-client-loop feature; "
                              "the sim runner does not support it")
@@ -264,6 +324,23 @@ class SimRunner:
             WireSpec.from_params(p, cfg.selection.channel_axis)
             for p in self.client_params
         ]
+        self.faults = faults
+        if faults is not None and isinstance(self.policy, AsyncPolicy):
+            raise ValueError(
+                "fault injection is wave-policy only (sync/deadline/"
+                "retry): the async path has no round to skip and no "
+                "quorum to hold")
+        if self.heterogeneous:
+            if faults is not None and faults.may_corrupt:
+                raise ValueError(
+                    "payload corruption rides the homogeneous stacked "
+                    "engine's upload overrides; ragged fleets support "
+                    "crash / loss / quorum faults only")
+            if isinstance(self.policy, DeadlinePolicy) and \
+                    self.policy.partial:
+                raise ValueError(
+                    "partial aggregation of delivered prefixes requires "
+                    "the homogeneous stacked engine")
         self.observed = ObservedTelemetry(telemetry, simcfg.observation_ewma)
         self.dropout = np.zeros(n)            # D_n^1 = 0 (Algorithm 1)
         self.weights = np.asarray(telemetry.num_samples, float)
@@ -277,13 +354,36 @@ class SimRunner:
     def _dense(self) -> bool:
         return self.cfg.scheme != "feddd"
 
-    def _allocate(self, losses: np.ndarray) -> None:
+    def _allocate(self, losses: np.ndarray,
+                  alive: Optional[np.ndarray] = None) -> None:
         """Re-solve the dropout LP from OBSERVED telemetry (never the
-        network model's ground truth)."""
+        network model's ground truth).
+
+        ``alive`` restricts the solve to survivor-only telemetry (quorum-
+        skipped rounds, sim/faults.py): crashed clients keep their
+        previous rate instead of polluting the budget with stale rows; a
+        fully-dead fleet leaves the allocation untouched.
+        """
         tel = self.observed.telemetry(np.maximum(losses, 1e-6))
         kw = dict(a_server=self.cfg.a_server, d_max=self.cfg.d_max,
                   delta=self.cfg.delta,
                   global_model_bytes=_tree_bytes(self.global_params))
+        if alive is not None and not alive.all():
+            idx = np.flatnonzero(alive)
+            if idx.size == 0:
+                return
+            tel_s = tel.subset(idx)
+            if self.cfg.comm.overhead_aware_allocation:
+                alloc = solve_dropout_rates_overhead_aware(
+                    tel_s, [self.wire_specs[int(i)] for i in idx],
+                    comm=self.cfg.comm, **kw)
+            else:
+                alloc = solve_dropout_rates_with(self.cfg.allocator,
+                                                 tel_s, **kw)
+            d = self.dropout.copy()
+            d[idx] = alloc.dropout_rates
+            self.dropout = d
+            return
         if self.cfg.comm.overhead_aware_allocation:
             alloc = solve_dropout_rates_overhead_aware(
                 tel, self.wire_specs, comm=self.cfg.comm, **kw)
@@ -312,7 +412,11 @@ class SimRunner:
         return baselines.select_oort(tel, a_server=self.cfg.a_server)
 
     def _schedule_round_trip(self, i: int, t0: float, d_i: float,
-                             cond, total: Optional[float] = None) -> None:
+                             cond, total: Optional[float] = None, *,
+                             extra_delay: float = 0.0,
+                             cutoff: Optional[float] = None,
+                             drop_upload: bool = False
+                             ) -> Tuple[float, float, float]:
         """Queue client i's download -> compute -> upload event chain.
 
         ``total``, when given, pins the upload arrival to ``t0 + total``
@@ -324,6 +428,15 @@ class SimRunner:
         is the real payload — values at the codec's precision plus the
         mask encoding — not the idealized kept mass.  The download
         broadcast stays idealized.
+
+        Fault hooks (sim/faults.py; all no-ops by default, leaving the
+        fault-free schedule bit-identical): ``extra_delay`` pushes the
+        upload arrival back (retransmits + backoff), ``cutoff`` is a
+        crash instant — events after it are never scheduled — and
+        ``drop_upload`` suppresses the upload event entirely (crashes,
+        abandoned transfers).  Returns the (download, compute, upload)
+        completion times whether or not the events were scheduled, so
+        the caller can reason about in-flight progress at a cut.
         """
         u_eff = float(self.tel.model_bytes[i]) * (1.0 - d_i)
         r_d = float(cond.downlink_rate[i])
@@ -332,16 +445,20 @@ class SimRunner:
         dl = t0 + u_eff / r_d
         cp = dl + t_cmp
         if total is not None:        # wave paths: arrival pinned by caller
-            up = t0 + total
+            up = t0 + total + extra_delay
         else:                        # async path computes its own leg
             u_up = (u_eff if self.cfg.comm.is_default else
                     float(analytic_uplink_vector([self.wire_specs[i]],
                                                  np.asarray([d_i]),
                                                  self.cfg.comm)[0]))
-            up = cp + u_up / r_u
-        self.sim.schedule_at(dl, DOWNLOAD_DONE, i, ("downlink", r_d))
-        self.sim.schedule_at(cp, COMPUTE_DONE, i, ("compute", t_cmp))
-        self.sim.schedule_at(up, UPLOAD_DONE, i, ("uplink", r_u))
+            up = cp + u_up / r_u + extra_delay
+        if cutoff is None or dl <= cutoff:
+            self.sim.schedule_at(dl, DOWNLOAD_DONE, i, ("downlink", r_d))
+        if cutoff is None or cp <= cutoff:
+            self.sim.schedule_at(cp, COMPUTE_DONE, i, ("compute", t_cmp))
+        if not drop_upload and (cutoff is None or up <= cutoff):
+            self.sim.schedule_at(up, UPLOAD_DONE, i, ("uplink", r_u))
+        return dl, cp, up
 
     def _merge_grouped(self, buffer: List[int], pending: Dict, w: np.ndarray,
                        merge_key, full_round: bool) -> np.ndarray:
@@ -398,6 +515,8 @@ class SimRunner:
         sim = self.sim
         fleet = (_GroupedWaveFleet(self) if self.heterogeneous
                  else _StackedWaveFleet(self))
+        partial_on = (isinstance(self.policy, DeadlinePolicy)
+                      and self.policy.partial)
 
         for t in range(1, rounds + 1):
             host0 = time.perf_counter()
@@ -416,10 +535,42 @@ class SimRunner:
             up_wire = self._uplink_wire_vec(d_time)
             ti = baselines.round_times(true_tel, d_time,
                                        uplink_bytes=up_wire)
+            wire_vec = (np.asarray(up_wire, float)
+                        if up_wire is not None else
+                        np.asarray(self.tel.model_bytes, float)
+                        * (1.0 - d_time))
+            # --- this epoch's fault draw (sim/faults.py), charged real
+            # codec bytes; None leaves the schedule bit-identical
+            fr = (self.faults.round_faults(
+                t - 1, wire_vec, np.asarray(cond.uplink_rate, float))
+                if self.faults is not None else None)
             dispatch = sim.now
+            spans = {}
             for i in np.flatnonzero(part):
-                self._schedule_round_trip(int(i), dispatch, float(d_time[i]),
-                                          cond, total=float(ti[i]))
+                i = int(i)
+                if fr is None:
+                    spans[i] = self._schedule_round_trip(
+                        i, dispatch, float(d_time[i]), cond,
+                        total=float(ti[i]))
+                elif fr.crashed[i]:
+                    # the client dies at crash_frac of its round trip:
+                    # later events are never scheduled, the upload never
+                    # arrives, its telemetry estimates go stale
+                    spans[i] = self._schedule_round_trip(
+                        i, dispatch, float(d_time[i]), cond,
+                        total=float(ti[i]),
+                        cutoff=dispatch + float(fr.crash_frac[i])
+                        * float(ti[i]),
+                        drop_upload=True)
+                else:
+                    # lossy uplink: retransmits + backoff push the
+                    # arrival back on the Eq. (12) clock; an exhausted
+                    # retry budget abandons the upload entirely
+                    spans[i] = self._schedule_round_trip(
+                        i, dispatch, float(d_time[i]), cond,
+                        total=float(ti[i]),
+                        extra_delay=float(fr.extra_delay[i]),
+                        drop_upload=bool(fr.aborted[i]))
 
             # --- the server listens until the policy's horizon: deadlines
             # bind on the EXPECTED real payloads (codec bytes over the
@@ -429,15 +580,26 @@ class SimRunner:
                 self.observed.telemetry(losses), d_time,
                 uplink_bytes=up_wire)[part]
             deadline = dispatch + self.policy.horizon(expected)
+            dead = (part & (fr.crashed | fr.aborted) if fr is not None
+                    else np.zeros(n, bool))
+            n_expected = int(np.sum(part & ~dead))
             arrived = np.zeros(n, bool)
             arr_time = np.full(n, np.inf)
             while sim.queue and sim.queue.peek().time <= deadline:
+                # a fault-aware server stops listening once every upload
+                # that can still arrive has (a sync horizon would
+                # otherwise wait on events of clients that already died)
+                if (fr is not None and n_expected
+                        and int(arrived.sum()) >= n_expected):
+                    break
                 ev = sim.step()
                 self.observed.observe(ev)
                 if ev.kind == UPLOAD_DONE:
                     arrived[ev.client] = True
                     arr_time[ev.client] = ev.time
-            if not arrived.any():     # never aggregate an empty round
+            if fr is None and not arrived.any():
+                # never aggregate an empty fault-free round; with a fault
+                # model attached the quorum rule below owns this case
                 while sim.queue:
                     ev = sim.step()
                     self.observed.observe(ev)
@@ -449,24 +611,147 @@ class SimRunner:
             # uplink estimate stays stale — the server never saw it land)
             sim.queue.clear()
             late = part & ~arrived
-            round_end = (float(np.max(arr_time[arrived])) if not late.any()
-                         else max(float(deadline),
-                                  float(np.max(arr_time[arrived]))))
+            cut = late & ~dead          # alive, just past the horizon
+            if arrived.any():
+                round_end = float(np.max(arr_time[arrived]))
+                if cut.any():
+                    round_end = max(round_end, float(deadline))
+            else:
+                round_end = (float(deadline) if np.isfinite(deadline)
+                             else float(sim.now))
+            round_end = max(round_end, float(sim.now))
             sim.advance_to(round_end)
 
-            # --- fused engine step: exclusion == 0 aggregation weight
+            # --- delivered prefixes of cut uploads (deadline partial
+            # aggregation) and the bytes wasted by transfers that died
+            # in flight; progress over the upload window is modelled
+            # uniform in time
+            partial = np.zeros(n, bool)
+            delivered_rows: Dict[int, np.ndarray] = {}
+            partial_bytes = 0.0
+            abandoned_b = 0.0
+            if cut.any() and np.isfinite(deadline):
+                for i in np.flatnonzero(cut):
+                    i = int(i)
+                    _, cp_t, up_t = spans[i]
+                    if deadline <= cp_t or up_t <= cp_t:
+                        continue              # upload had not started
+                    frac = min((deadline - cp_t) / (up_t - cp_t), 1.0)
+                    db = float(wire_vec[i]) * frac
+                    if partial_on:
+                        counts = delivered_prefix_counts(
+                            self.wire_specs[i], float(d_time[i]),
+                            cfg.comm, db)
+                        if counts.sum() > 0:
+                            partial[i] = True
+                            delivered_rows[i] = counts
+                            partial_bytes += db
+                            continue
+                    abandoned_b += db
+            if fr is not None:
+                abandoned_b += float(np.sum(fr.sent_bytes[part]))
+                for i in np.flatnonzero(part & fr.crashed):
+                    i = int(i)
+                    _, cp_t, up_t = spans[i]
+                    cutoff = dispatch + float(fr.crash_frac[i]) \
+                        * float(ti[i])
+                    if cutoff > cp_t and up_t > cp_t:
+                        abandoned_b += float(wire_vec[i]) * min(
+                            (cutoff - cp_t) / (up_t - cp_t), 1.0)
+
+            # --- payload validation: non-finite / norm-anomalous
+            # arrivals are quarantined (0 weight on the stacked Eq. (4)
+            # step — the baselines' non-participation mechanism)
+            quarantine = np.zeros(n, bool)
+            overrides: Dict[int, object] = {}
+            quarantined_b = 0.0
+            contributors = arrived | partial
+            if fr is not None and contributors.any():
+                norms, finite = fleet.upload_stats()
+                for i in np.flatnonzero(arrived & (fr.corrupt > 0)):
+                    i = int(i)
+                    old_row, new_row = fleet.row_params(i)
+                    kind = faults_mod.CORRUPT_KINDS[int(fr.corrupt[i]) - 1]
+                    crow = faults_mod.corrupt_pytree(
+                        new_row, kind, faults_mod.corruption_rng(
+                            self.faults.config.seed, t - 1, i))
+                    norms[i], finite[i] = faults_mod.host_update_stats(
+                        crow, old_row)
+                    overrides[i] = crow
+                quarantine = faults_mod.screen_quarantine(
+                    norms, finite, contributors,
+                    self.faults.config.validation)
+                # corrupted uploads the screen MISSED reach the canvas;
+                # screened ones never do
+                overrides = {i: p for i, p in overrides.items()
+                             if not quarantine[i]}
+                quarantined_b = float(np.sum(
+                    (wire_vec + fr.extra_bytes)[arrived & quarantine]))
+            valid = arrived & ~quarantine
+            partial &= ~quarantine
+            contributors = valid | partial
+            survivors = int(np.sum(part & ~(
+                fr.crashed if fr is not None else np.zeros(n, bool))))
+            retries_n = int(np.sum(fr.retries[part])) if fr is not None \
+                else 0
+
+            # --- minimum quorum: below the floor the round is SKIPPED —
+            # global and client params held, arrivals discarded, and the
+            # allocation LP re-solved on survivor-only telemetry
+            if fr is not None and int(contributors.sum()) \
+                    < self.faults.quorum_floor(int(part.sum())):
+                fleet.discard()
+                abandoned_b += partial_bytes + float(np.sum(
+                    (wire_vec + fr.extra_bytes)[valid]))
+                if cfg.scheme == "feddd":
+                    self._allocate(losses, alive=~fr.crashed)
+                metrics = (eval_fn(self.global_params)
+                           if eval_fn and t % self.simcfg.eval_every == 0
+                           else None)
+                history.append(RoundRecord(
+                    round=t, sim_time=round_end,
+                    sim_round_time=round_end - dispatch,
+                    host_wall_time=time.perf_counter() - host0,
+                    mean_loss=float(np.mean(losses)),
+                    dropout_rates=self.dropout.copy(),
+                    uploaded_fraction=0.0, uploaded_bytes=0.0,
+                    wire_bytes=0.0, participants=0,
+                    survivors=survivors, retries=retries_n,
+                    abandoned_bytes=abandoned_b,
+                    quarantined_bytes=quarantined_b,
+                    skipped=True, metrics=metrics))
+                continue
+
+            # --- fused engine step: exclusion == 0 aggregation weight;
+            # partial clients keep their weight but only their delivered
+            # mask-channel prefix aggregates
+            delivered_arg = None
+            if partial.any():
+                n_leaves = len(self.wire_specs[0].leaves)
+                mat = np.full((n, n_leaves), np.iinfo(np.int32).max,
+                              np.int32)
+                for i, counts in delivered_rows.items():
+                    if partial[i]:
+                        mat[i] = counts
+                delivered_arg = tuple(jnp.asarray(mat[:, li])
+                                      for li in range(n_leaves))
             densities, wire_oh = fleet.step(
-                d_used, self.weights * arrived, rk,
+                d_used, self.weights * contributors, rk,
                 full_round=(t % cfg.h == 0) or self._dense,
-                dense=self._dense)
+                dense=self._dense, delivered=delivered_arg,
+                overrides=overrides)
             dens, oh, loss_host = jax.device_get(
                 (densities, wire_oh, loss_dev))
             # the loss report ships WITH the upload: a straggler whose
-            # transfer was abandoned keeps its stale loss server-side
-            losses = np.where(arrived, np.asarray(loss_host, float), losses)
-            uploaded, wire = account_uplink(dens, arrived,
+            # transfer was abandoned (or quarantined) keeps its stale
+            # loss server-side
+            losses = np.where(valid, np.asarray(loss_host, float), losses)
+            uploaded, wire = account_uplink(dens, valid,
                                             self.tel.model_bytes, oh,
                                             cfg.comm)
+            wire += partial_bytes
+            if fr is not None:
+                wire += float(np.sum(fr.extra_bytes[valid]))
 
             # --- allocation for round t+1, from what the server observed
             if cfg.scheme == "feddd":
@@ -483,7 +768,10 @@ class SimRunner:
                 dropout_rates=self.dropout.copy(),
                 uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
                 uploaded_bytes=uploaded, wire_bytes=wire,
-                participants=int(np.sum(arrived)),
+                participants=int(np.sum(contributors)),
+                survivors=survivors, retries=retries_n,
+                abandoned_bytes=abandoned_b,
+                quarantined_bytes=quarantined_b,
                 metrics=metrics))
 
         self.client_params = fleet.export()
@@ -588,7 +876,7 @@ class SimRunner:
                 dropout_rates=self.dropout.copy(),
                 uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
                 uploaded_bytes=uploaded, wire_bytes=wire,
-                participants=len(buffer),
+                participants=len(buffer), survivors=len(buffer),
                 metrics=metrics))
             prev_time = ev.time
             host_prev = time.perf_counter()
@@ -605,6 +893,7 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
             sim: Optional[SimConfig] = None,
             network: Optional[NetworkModel] = None,
             client_params: Optional[List] = None,
+            faults: Optional[FaultModel] = None,
             rounds: Optional[int] = None, **cfg_kw) -> SimResult:
     """One-call driver, mirroring :func:`repro.core.protocol.run_scheme`.
 
@@ -621,6 +910,10 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
         HeteroFL-style slices of ``global_params``); the runner partitions
         them by shape and drives the grouped engine — stragglers x ragged
         fleets compose freely with every policy.
+      faults: a :class:`repro.sim.faults.FaultModel` — client churn, lossy
+        uplinks, corrupted payloads, quorum-gated degradation.  ``None``
+        (the default) leaves every run bit-identical to the fault-free
+        simulator.  Wave policies only.
       **cfg_kw: ProtocolConfig fields (rounds, a_server, d_max, delta, h,
         seed, selection, allocator).
     """
@@ -630,7 +923,7 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
     cfg_kw.pop("batched", None)       # the sim runner is always batched
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     runner = SimRunner(global_params, cfg, telemetry, simcfg, network,
-                       client_params=client_params)
+                       client_params=client_params, faults=faults)
     if isinstance(runner.policy, AsyncPolicy):
         if scheme in ("fedcs", "oort"):
             raise ValueError(

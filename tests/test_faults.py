@@ -1,0 +1,612 @@
+"""Fault-injection layer (repro/sim/faults.py): zero-rate bit-exactness,
+hand-computed failure scenarios, server degradation, and determinism.
+
+Pins the failure axis's contracts:
+
+* zero-rate transparency — a fault model with every rate at 0 leaves each
+  scheme x policy run BIT-IDENTICAL to the fault-free simulator (records,
+  event trace, and learning state);
+* scripted faults — a sync+static round with one scripted crash
+  reproduces the hand-computed survivor-renormalized Eq. (4) aggregate
+  and the Eq. (12) clock exactly; scripted retransmits add exactly their
+  bytes and backoff to the wire and the clock;
+* server degradation — corrupted payloads are quarantined (bit-identical
+  global to the same client crashing), quorum misses skip the round and
+  hold the global, 100% loss degenerates to "no round ever commits";
+* determinism — a faulty run is a pure function of (seed, config), with
+  identical digests across processes.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommConfig
+from repro.comm.payload import WireSpec, analytic_wire_bytes, \
+    delivered_prefix_counts
+from repro.core import aggregation, baselines, run_scheme
+from repro.core.allocation import ClientTelemetry
+from repro.sim import (DeadlinePolicy, FaultConfig, RandomFaults,
+                       RetryPolicy, ScriptedFaults, SimConfig, SyncPolicy,
+                       TraceNetwork, make_policy, run_sim)
+from repro.sim.engine import Event, UPLOAD_DONE
+from repro.sim.runner import ObservedTelemetry, SimResult
+
+pytestmark = pytest.mark.flcore
+
+
+# --- shared fixtures ---------------------------------------------------------
+
+def _params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc0": {"w": jax.random.normal(k1, (20, 12)), "b": jnp.zeros(12)},
+        "fc1": {"w": jax.random.normal(k2, (12, 5)), "b": jnp.zeros(5)},
+    }
+
+
+def _tel(n, seed=0):
+    rng = np.random.default_rng(seed)
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(
+                           _params(jax.random.PRNGKey(0)))))
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+
+def _ltf(p, idx, key):
+    """Deterministic pseudo-training (no dataset needed)."""
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# --- config / floor semantics -------------------------------------------------
+
+def test_fault_config_validates_rates():
+    with pytest.raises(ValueError, match="crash_rate"):
+        FaultConfig(crash_rate=1.5)
+    with pytest.raises(ValueError, match="corrupt_kind"):
+        FaultConfig(corrupt_kind="gamma_ray")
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        FaultConfig(chunk_bytes=0)
+    with pytest.raises(ValueError, match="scripted corrupt kind"):
+        ScriptedFaults(corrupt={(0, 0): "zap"})
+
+
+def test_quorum_floor_fraction_and_absolute():
+    frac = RandomFaults(FaultConfig(quorum=0.5))
+    assert frac.quorum_floor(8) == 4
+    assert frac.quorum_floor(5) == 3          # ceil
+    absolute = RandomFaults(FaultConfig(quorum=3))
+    assert absolute.quorum_floor(8) == 3
+    assert absolute.quorum_floor(2) == 2      # capped at scheduled
+    assert RandomFaults(FaultConfig(quorum=0)).quorum_floor(8) == 1
+
+
+# --- zero-rate transparency ---------------------------------------------------
+
+@pytest.mark.parametrize("scheme,policy", [
+    ("feddd", "sync"), ("feddd", "deadline"), ("feddd", "retry"),
+    ("fedavg", "sync"), ("fedcs", "sync"),
+])
+def test_zero_rate_faults_bit_identical_to_fault_free(scheme, policy):
+    """The acceptance contract: all fault rates 0 => the full RoundRecord
+    stream, event trace, and learning state match the fault-free run
+    bit for bit."""
+    n = 6
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(rounds=4, a_server=0.6, h=3, seed=0,
+              sim=SimConfig(policy=policy))
+    ref = run_sim(scheme, params, tel, _ltf, None, **kw)
+    got = run_sim(scheme, params, tel, _ltf, None,
+                  faults=RandomFaults(FaultConfig()), **kw)
+    assert ref.event_trace == got.event_trace
+    for rr, rg in zip(ref.history, got.history):
+        assert rr.sim_time == rg.sim_time
+        assert rr.participants == rg.participants
+        assert rr.mean_loss == rg.mean_loss
+        assert rr.uploaded_bytes == rg.uploaded_bytes
+        assert rr.wire_bytes == rg.wire_bytes
+        np.testing.assert_array_equal(rr.dropout_rates, rg.dropout_rates)
+        # failure-economy fields carry their no-fault values
+        assert not rg.skipped
+        assert rg.retries == 0
+        assert rg.abandoned_bytes == 0.0
+        assert rg.quarantined_bytes == 0.0
+        assert rg.survivors == rr.participants or rg.survivors >= \
+            rg.participants
+    assert _trees_equal(ref.global_params, got.global_params)
+
+
+def test_zero_rate_matches_closed_form_protocol():
+    """0% fault rate through the sync+static sim == the closed-form
+    protocol driver (transitively via the sim's own equivalence)."""
+    n = 5
+    params = _params(jax.random.PRNGKey(1))
+    tel = _tel(n, seed=2)
+    kw = dict(rounds=3, a_server=0.6, h=2, seed=0)
+    ref = run_scheme("feddd", params, tel, _ltf, None, **kw)
+    got = run_scheme("feddd", params, tel, _ltf, None,
+                     faults=RandomFaults(FaultConfig()), **kw)
+    assert isinstance(got, SimResult)      # faults= routes to the sim
+    for rr, rg in zip(ref.history, got.history):
+        assert rr.sim_time == rg.sim_time
+        np.testing.assert_array_equal(rr.dropout_rates, rg.dropout_rates)
+    assert _trees_equal(ref.global_params, got.global_params)
+
+
+# --- scripted crash: hand-computed Eq. (4) + Eq. (12) -------------------------
+
+def test_scripted_crash_hand_computed_survivor_aggregate_and_clock():
+    """One scripted crash in a sync+static round 1 (D^1 = 0, masks all
+    ones): the global must equal the survivor-renormalized Eq. (4)
+    weighted mean recomputed by hand, and the round clock must equal
+    max over SURVIVORS of the Eq. (12) row — both exactly."""
+    n = 3
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=ScriptedFaults(crashes={(0, 2): 0.5}),
+                  rounds=1, a_server=0.6, h=5, seed=0)
+    rec = res.history[0]
+    assert rec.participants == 2
+    assert rec.survivors == 2
+    assert not rec.skipped
+
+    # replicate the round's local training exactly (same key schedule)
+    rng = jax.random.PRNGKey(0)
+    _, rk = jax.random.split(rng)
+    news = [_ltf(params, i, jax.random.fold_in(rk, i))[0]
+            for i in range(n)]
+    # Eq. (4) with the crashed client at weight 0 (all-ones masks, D=0),
+    # mirroring _leaf_masked_mean's arithmetic order exactly
+    w = np.asarray(tel.num_samples, np.float32).copy()
+    w[2] = 0.0
+    expected = []
+    for leaves in zip(*[jax.tree_util.tree_leaves(p) for p in news]):
+        stack = jnp.stack(leaves).astype(jnp.float32)
+        wts = jnp.asarray(w, jnp.float32).reshape(
+            (n,) + (1,) * (stack.ndim - 1))
+        num = jnp.sum(stack * wts, axis=0)
+        den = jnp.sum(jnp.ones_like(stack) * wts, axis=0)
+        expected.append((num / jnp.maximum(den, 1e-12)
+                         ).astype(leaves[0].dtype))
+    got = jax.tree_util.tree_leaves(res.global_params)
+    for e, g in zip(expected, got):
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(g))
+
+    # Eq. (12): the dead client never uploads; the round ends at the
+    # latest surviving arrival
+    ti = baselines.round_times(tel, np.zeros(n))
+    assert rec.sim_time == float(max(ti[0], ti[1]))
+
+
+def test_scripted_retransmits_exact_bytes_and_delay():
+    """k scripted chunk retransmits charge exactly k*chunk_bytes on the
+    wire and k*chunk/r_u + backoff_base*(2^k - 1) on the Eq. (12)
+    clock."""
+    n = 3
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    cfgkw = dict(rounds=1, a_server=0.6, h=5, seed=0)
+    base = run_sim("feddd", params, tel, _ltf, None,
+                   sim=SimConfig(policy="sync"), **cfgkw)
+    k = 3
+    fc = FaultConfig()
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=ScriptedFaults(chunk_retries={(0, 0): k},
+                                        config=fc), **cfgkw)
+    rec, ref = res.history[0], base.history[0]
+    assert rec.retries == k
+    assert rec.wire_bytes == ref.wire_bytes + k * fc.chunk_bytes
+    ti = baselines.round_times(tel, np.zeros(n))
+    delay = (k * fc.chunk_bytes / float(tel.uplink_rate[0])
+             + fc.backoff_base * (2.0 ** k - 1.0))
+    assert rec.sim_time == float(max(ti[0] + delay, ti[1], ti[2]))
+    # the retransmitted upload still aggregates: same learning state
+    assert _trees_equal(base.global_params, res.global_params)
+
+
+# --- corruption + validation screen -------------------------------------------
+
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+def test_corrupted_payload_quarantined_equals_crash(kind):
+    """A non-finite corrupted upload is quarantined: 0 weight on Eq. (4),
+    so the GLOBAL is bit-identical to the same client crashing outright
+    (both are non-participation); the bytes are accounted as quarantined."""
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(rounds=1, a_server=0.6, h=5, seed=0,
+              sim=SimConfig(policy="sync"))
+    corrupted = run_sim("feddd", params, tel, _ltf, None,
+                        faults=ScriptedFaults(corrupt={(0, 0): kind}), **kw)
+    crashed = run_sim("feddd", params, tel, _ltf, None,
+                      faults=ScriptedFaults(crashes={(0, 0): 0.5}), **kw)
+    rec = corrupted.history[0]
+    assert rec.participants == n - 1
+    assert rec.quarantined_bytes == float(tel.model_bytes[0])
+    assert crashed.history[0].quarantined_bytes == 0.0
+    assert _trees_equal(corrupted.global_params, crashed.global_params)
+
+
+def test_norm_anomaly_screen_quarantines_blown_up_update():
+    """An arrived-but-insane update (huge finite norm) is quarantined by
+    the median-norm screen even though it is finite."""
+    n = 6
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+
+    def spiky_ltf(p, idx, key):
+        if idx == 0:     # client 0 diverges: update norm >> the fleet's
+            return jax.tree_util.tree_map(lambda x: x + 500.0, p), 1.0
+        return _ltf(p, idx, key)
+
+    kw = dict(rounds=1, a_server=0.6, h=5, seed=0,
+              sim=SimConfig(policy="sync"))
+    clean = run_sim("feddd", params, tel, spiky_ltf, None, **kw)
+    screened = run_sim("feddd", params, tel, spiky_ltf, None,
+                       faults=RandomFaults(FaultConfig()), **kw)
+    # without the fault layer the insane update poisons the global ...
+    assert float(np.max(np.abs(np.asarray(
+        clean.global_params["fc0"]["w"])))) > 50.0
+    # ... with it attached the screen quarantines client 0
+    assert screened.history[0].participants == n - 1
+    assert screened.history[0].quarantined_bytes > 0.0
+    assert float(np.max(np.abs(np.asarray(
+        screened.global_params["fc0"]["w"])))) < 50.0
+
+
+# --- quorum + degenerate configs ----------------------------------------------
+
+def test_quorum_miss_skips_round_and_holds_global():
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    crashes = {(0, i): 0.3 for i in range(3)}    # round 1: one survivor
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=ScriptedFaults(crashes=crashes,
+                                        config=FaultConfig(quorum=2)),
+                  rounds=1, a_server=0.6, h=5, seed=0)
+    rec = res.history[0]
+    assert rec.skipped
+    assert rec.participants == 0
+    assert rec.survivors == 1
+    assert rec.uploaded_bytes == 0.0
+    assert rec.abandoned_bytes > 0.0     # the survivor's upload is wasted
+    # global held: bit-identical to the initial model
+    assert _trees_equal(params, res.global_params)
+
+
+def test_full_loss_every_round_skipped_global_never_moves():
+    """100% packet loss: every upload aborts, every round misses quorum,
+    the global stays bit-identical to round 0 for the whole run."""
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=RandomFaults(FaultConfig(loss_rate=1.0,
+                                                  max_retries=2)),
+                  rounds=3, a_server=0.6, h=2, seed=0)
+    assert all(r.skipped for r in res.history)
+    assert all(r.participants == 0 for r in res.history)
+    assert all(r.abandoned_bytes > 0.0 for r in res.history)
+    times = [r.sim_time for r in res.history]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert _trees_equal(params, res.global_params)
+
+
+def test_crashed_clients_excluded_from_allocation_resolve():
+    """A quorum-skipped round re-solves the LP on survivor telemetry only:
+    crashed clients keep their previous dropout rate."""
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    crashes = {(0, i): 0.2 for i in range(4)}    # round 1: quorum miss
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=ScriptedFaults(crashes=crashes,
+                                        config=FaultConfig(quorum=2)),
+                  rounds=2, a_server=0.6, h=5, seed=0)
+    assert res.history[0].skipped
+    # records carry the POST-round re-solve (the D for round t+1); the
+    # skipped round's solve ran on survivor telemetry only, so crashed
+    # clients hold their round-1 rate (D^1 = 0) instead of consuming
+    # budget from stale rows
+    d_after_skip = res.history[0].dropout_rates
+    np.testing.assert_array_equal(d_after_skip[:4], np.zeros(4))
+    assert d_after_skip[4] >= 0.0
+    # round 2 completes normally => its end-of-round solve is full-fleet
+    assert not res.history[1].skipped
+    assert float(np.sum(res.history[1].dropout_rates[:4])) > 0.0
+
+
+# --- telemetry EWMA under missing/insane measurements -------------------------
+
+def test_ewma_skips_missing_and_nonfinite_measurements():
+    n = 3
+    tel = _tel(n)
+    obs = ObservedTelemetry(tel, ewma=0.5)
+    before = obs.uplink.copy()
+    # a non-finite measurement is discarded outright
+    obs.observe(Event(time=1.0, seq=1, kind=UPLOAD_DONE, client=0,
+                      payload=("uplink", float("nan"))))
+    np.testing.assert_array_equal(obs.uplink, before)
+    # a real measurement EWMA-updates; equal-value stays bit-identical
+    obs.observe(Event(time=2.0, seq=2, kind=UPLOAD_DONE, client=0,
+                      payload=("uplink", before[0])))
+    assert obs.uplink[0] == before[0]
+    obs.observe(Event(time=3.0, seq=3, kind=UPLOAD_DONE, client=0,
+                      payload=("uplink", 3.0 * before[0])))
+    assert obs.uplink[0] == 0.5 * 3.0 * before[0] + 0.5 * before[0]
+
+
+def test_crashed_client_telemetry_stays_stale_not_zero():
+    """A client that crashes every round produces NO events, so its
+    uplink estimate must remain the prior exactly — not decay toward 0 —
+    even while its true rate collapses 50x."""
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    net = TraceNetwork.straggler_collapse(tel, clients=(0,), factor=50.0)
+    crashes = {(e, 0): 0.01 for e in range(6)}   # dies before any event
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"), network=net,
+                  faults=ScriptedFaults(crashes=crashes),
+                  rounds=5, a_server=0.6, h=3, seed=0)
+    obs = res.observed_telemetry
+    assert obs.uplink_rate[0] == tel.uplink_rate[0]     # exact, stale
+    assert all(r.survivors == n - 1 for r in res.history)
+
+
+# --- deadline partial aggregation ---------------------------------------------
+
+def test_delivered_prefix_counts_endpoints_and_monotonicity():
+    params = _params(jax.random.PRNGKey(0))
+    spec = WireSpec.from_params(params, channel_axis=-1)
+    comm = CommConfig(codec="index", qbits=8)
+    d = 0.4
+    total = float(analytic_wire_bytes(spec, d, comm))
+    full = delivered_prefix_counts(spec, d, comm, total)
+    kept = [int(np.clip(np.ceil(c * (1 - d)), 0, c))
+            for c, _ in spec.leaves]
+    np.testing.assert_array_equal(full, kept)     # cut at total = all
+    np.testing.assert_array_equal(
+        delivered_prefix_counts(spec, d, comm, 0.0),
+        np.zeros(len(spec.leaves), np.int32))     # cut at 0 = none
+    prev = -1
+    for frac in (0.1, 0.3, 0.5, 0.7, 0.9):
+        got = int(delivered_prefix_counts(spec, d, comm,
+                                          frac * total).sum())
+        assert got >= prev
+        prev = got
+
+
+def test_truncate_masks_to_prefix_semantics():
+    m = jnp.asarray([[[1.0, 0.0, 1.0, 1.0]],
+                     [[1.0, 1.0, 0.0, 1.0]]])      # (N=2, 1, C=4)
+    masks = {"w": m}
+    sentinel = np.iinfo(np.int32).max
+    # client 0 delivered 2 kept channels, client 1 everything
+    out = aggregation.truncate_masks_to_prefix(
+        masks, (jnp.asarray([2, sentinel], jnp.int32),))
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]),
+        [[[1.0, 0.0, 1.0, 0.0]], [[1.0, 1.0, 0.0, 1.0]]])
+    # scalar-ish leaf: count >= 1 keeps it, 0 drops it
+    out2 = aggregation.truncate_masks_to_prefix(
+        {"b": jnp.asarray([1.0, 1.0])}, (jnp.asarray([0, 1], jnp.int32),))
+    np.testing.assert_array_equal(np.asarray(out2["b"]), [0.0, 1.0])
+    with pytest.raises(ValueError, match="mismatch"):
+        aggregation.truncate_masks_to_prefix(masks, ())
+
+
+def test_deadline_partial_rescues_straggler_prefix():
+    """partial=True turns a cut straggler into a partial contributor:
+    its delivered mask-channel prefix aggregates, the delivered bytes are
+    charged to the wire, and the learning state genuinely moves."""
+    n = 6
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(rounds=3, a_server=0.6, h=5, seed=0, d_max=0.3,
+              comm=CommConfig(codec="index", qbits=8))
+
+    def _run(partial):
+        return run_sim(
+            "feddd", params, tel, _ltf, None,
+            sim=SimConfig(policy=DeadlinePolicy(quantile=1.0, slack=1.0,
+                                                partial=partial)),
+            network=TraceNetwork.straggler_collapse(tel, clients=(0,),
+                                                    factor=8.0),
+            faults=RandomFaults(FaultConfig()), **kw)
+
+    cut, rescued = _run(False), _run(True)
+    cut_rounds = [i for i, r in enumerate(cut.history)
+                  if r.participants < n]
+    assert cut_rounds, "straggler never cut — scenario broken"
+    for i in cut_rounds:
+        assert rescued.history[i].participants == n     # prefix counted
+        assert rescued.history[i].wire_bytes > \
+            cut.history[i].wire_bytes                   # bytes charged
+        assert cut.history[i].abandoned_bytes > 0.0
+        assert rescued.history[i].abandoned_bytes == 0.0
+    assert not _trees_equal(cut.global_params, rescued.global_params)
+
+
+# --- retry policy --------------------------------------------------------------
+
+def test_retry_policy_horizon_and_factory():
+    exp = np.array([1.0, 2.0, 4.0])
+    assert RetryPolicy().horizon(exp) == pytest.approx(12.0)
+    assert RetryPolicy(slack=2.0).horizon(exp) == pytest.approx(8.0)
+    assert isinstance(make_policy("retry"), RetryPolicy)
+    from repro.sim.policies import POLICIES
+    assert "retry" in POLICIES
+
+
+def test_retry_policy_bounds_lossy_straggler():
+    """Under heavy loss the retry horizon cuts a retransmit-delayed
+    straggler that plain sync would wait out."""
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    faults = ScriptedFaults(
+        chunk_retries={(t, 0): 5 for t in range(4)},
+        config=FaultConfig(chunk_bytes=8 * float(tel.model_bytes[0])))
+    kw = dict(rounds=3, a_server=0.6, h=2, seed=0)
+    sync = run_sim("feddd", params, tel, _ltf, None,
+                   sim=SimConfig(policy="sync"), faults=faults, **kw)
+    retry = run_sim("feddd", params, tel, _ltf, None,
+                    sim=SimConfig(policy="retry",
+                                  policy_kw={"slack": 2.0}),
+                    faults=faults, **kw)
+    assert all(r.participants == n for r in sync.history)
+    assert any(r.participants < n for r in retry.history)
+    assert retry.history[-1].sim_time < sync.history[-1].sim_time
+
+
+# --- fleets / guards -----------------------------------------------------------
+
+def _sub_params(key, w):
+    k1, k2 = jax.random.split(key)
+    return {"fc0": {"w": jax.random.normal(k1, (20, w)), "b": jnp.zeros(w)},
+            "fc1": {"w": jax.random.normal(k2, (w, 5)), "b": jnp.zeros(5)}}
+
+
+def test_ragged_fleet_supports_crash_faults():
+    n = 3
+    widths = (12, 8, 6)
+    gp = _sub_params(jax.random.PRNGKey(0), max(widths))
+    clients = [_sub_params(jax.random.PRNGKey(100 + i), widths[i])
+               for i in range(n)]
+    tel = _tel(n)
+    res = run_sim("feddd", gp, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  client_params=clients,
+                  faults=ScriptedFaults(crashes={(0, 1): 0.5}),
+                  rounds=2, a_server=0.6, h=2, seed=0)
+    assert res.history[0].participants == n - 1
+    assert res.history[0].survivors == n - 1
+    assert res.history[1].participants == n
+
+
+def test_fault_guards_reject_unsupported_combinations():
+    n = 3
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    clients = [_sub_params(jax.random.PRNGKey(100 + i), w)
+               for i, w in enumerate((12, 8, 6))]
+    kw = dict(rounds=1, a_server=0.6, seed=0)
+    with pytest.raises(ValueError, match="wave-policy only"):
+        run_sim("feddd", params, tel, _ltf, None,
+                sim=SimConfig(policy="async"),
+                faults=RandomFaults(FaultConfig()), **kw)
+    with pytest.raises(ValueError, match="corruption"):
+        run_sim("feddd", params, tel, _ltf, None,
+                sim=SimConfig(policy="sync"), client_params=clients,
+                faults=ScriptedFaults(corrupt={(0, 0): "nan"}), **kw)
+    with pytest.raises(ValueError, match="partial"):
+        run_sim("feddd", params, tel, _ltf, None,
+                sim=SimConfig(policy=DeadlinePolicy(partial=True)),
+                client_params=clients,
+                faults=RandomFaults(FaultConfig()), **kw)
+
+
+# --- determinism across processes ---------------------------------------------
+
+_FAULT_DIGEST_SNIPPET = r"""
+import hashlib
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.allocation import ClientTelemetry
+from repro.sim import (FaultConfig, MarkovFadingNetwork, RandomFaults,
+                       SimConfig, run_sim)
+
+def params():
+    return {"fc0": {"w": jax.random.normal(jax.random.PRNGKey(0), (20, 12)),
+                    "b": jnp.zeros(12)},
+            "fc1": {"w": jax.random.normal(jax.random.PRNGKey(9), (12, 5)),
+                    "b": jnp.zeros(5)}}
+
+def tel(n):
+    rng = np.random.default_rng(0)
+    p = params()
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(p)))
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+def ltf(p, idx, key):
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+h = hashlib.sha256()
+for policy in ("sync", "deadline", "retry"):
+    t = tel(5)
+    net = MarkovFadingNetwork(t, p_fade=0.3, p_recover=0.4,
+                              fade_factor=0.05, seed=7)
+    faults = RandomFaults(FaultConfig(crash_rate=0.2, loss_rate=0.15,
+                                      corrupt_rate=0.15, quorum=1,
+                                      seed=5))
+    res = run_sim("feddd", params(), t, ltf, None,
+                  sim=SimConfig(policy=policy), network=net,
+                  faults=faults, rounds=4, a_server=0.6, h=2, seed=0)
+    times = np.asarray([e[0] for e in res.event_trace])
+    h.update(times.tobytes())
+    h.update(",".join(f"{e[1]}:{e[2]}" for e in res.event_trace).encode())
+    rec = np.asarray([[r.sim_time, r.participants, r.survivors,
+                       r.retries, r.abandoned_bytes, r.quarantined_bytes,
+                       float(r.skipped)] for r in res.history])
+    h.update(rec.tobytes())
+    for leaf in jax.tree_util.tree_leaves(res.global_params):
+        h.update(np.asarray(leaf).tobytes())
+print(h.hexdigest())
+"""
+
+
+def test_faulty_run_deterministic_across_processes():
+    """Same (seed, fault config) => identical event trace, failure
+    accounting, and final params in independent processes."""
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    digests = []
+    for _ in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c", _FAULT_DIGEST_SNIPPET],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin",
+                 "JAX_PLATFORMS": "cpu", "HOME": "/tmp"},
+            check=False)
+        assert out.returncode == 0, out.stderr[-2000:]
+        digests.append(out.stdout.strip())
+    assert digests[0] == digests[1]
+    assert len(digests[0]) == 64

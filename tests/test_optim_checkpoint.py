@@ -65,6 +65,31 @@ def test_checkpoint_roundtrip(tmp_path):
         assert a.dtype == b.dtype
 
 
+def test_checkpoint_survives_kill_mid_write(tmp_path, monkeypatch):
+    """A process dying mid-save must leave the PREVIOUS checkpoint fully
+    intact: the atomic temp+fsync+rename path never tears the live file."""
+    from repro.checkpoint import io as ckpt_io
+
+    tree_v1 = {"w": jnp.arange(12.0).reshape(3, 4)}
+    path = tmp_path / "ckpt.npz"
+    save_checkpoint(path, tree_v1, metadata={"round": 1})
+
+    def _die(fd):
+        raise OSError("simulated power loss mid-write")
+
+    monkeypatch.setattr(ckpt_io.os, "fsync", _die)
+    with pytest.raises(OSError, match="power loss"):
+        save_checkpoint(path, {"w": jnp.full((3, 4), 9.0)},
+                        metadata={"round": 2})
+    monkeypatch.undo()
+
+    like = {"w": jax.ShapeDtypeStruct((3, 4), jnp.float32)}
+    restored, meta = load_checkpoint(path, like)
+    assert meta["round"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree_v1["w"]))
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     tree = {"w": jnp.zeros((2, 2))}
     path = tmp_path / "c.npz"
