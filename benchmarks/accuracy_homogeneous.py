@@ -8,10 +8,9 @@ client-selection baselines lose accuracy vs FedDD; under IID everyone ties.
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 
 SCHEMES = ("feddd", "fedavg", "fedcs", "oort")
 
@@ -34,8 +33,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                     f"fig4-6_{ds}_{part}_{scheme}", wall,
                     f"final_acc={accs[-1]:.4f}"))
     if out_dir:
-        (out_dir / "accuracy_homogeneous.json").write_text(
-            json.dumps(results, indent=1))
+        write_json(out_dir, "accuracy_homogeneous.json", results)
     return rows
 
 

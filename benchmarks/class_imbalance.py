@@ -7,12 +7,11 @@ them close to FedAvg."""
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 
 SCHEMES = ("feddd", "fedavg", "fedcs", "oort")
 RARE = (0, 1, 2)
@@ -37,8 +36,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                             f"rare_acc={rare_acc:.4f};"
                             f"common_acc={common_acc:.4f}"))
     if out_dir:
-        (out_dir / "class_imbalance.json").write_text(
-            json.dumps(results, indent=1))
+        write_json(out_dir, "class_imbalance.json", results)
     return rows
 
 

@@ -20,6 +20,7 @@ Two time axes appear in results — never mix them:
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
@@ -29,6 +30,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
+
+from repro.obs import MetricsRegistry  # noqa: E402
 
 from repro.core import run_scheme  # noqa: E402
 from repro.core.selection import SelectionConfig  # noqa: E402
@@ -178,9 +181,16 @@ def run_sim_experiment(
                    seed=seed, faults=faults)
 
 
+# One registry per benchmark process: every csv_row feeds it, and
+# ``benchmarks/run.py`` exports the whole sweep as Prometheus text
+# (results/benchmarks.prom) after the module loop.
+REGISTRY = MetricsRegistry()
+
+
 def csv_row(name: str, wall_s: float, derived: str) -> str:
     """``us_per_call`` is HOST time (from :func:`timed`) — simulated-clock
     quantities belong in the ``derived`` column."""
+    REGISTRY.set("benchmark_us_per_call", wall_s * 1e6, name=name)
     return f"{name},{wall_s * 1e6:.0f},{derived}"
 
 
@@ -188,3 +198,32 @@ def timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return out, time.perf_counter() - t0
+
+
+# -- artifact writers (shared by all benchmarks/*.py modules) -------------
+
+def write_json(out_dir: Path, filename: str, payload) -> Path:
+    """Write a JSON artifact under ``out_dir`` (mkdir'd), newline-terminated."""
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / filename
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return path
+
+
+def write_table(out_dir: Path, filename: str, lines: List[str]) -> Path:
+    """Write a line-oriented artifact (CSV/markdown table) under ``out_dir``."""
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / filename
+    path.write_text("\n".join(lines) + "\n")
+    return path
+
+
+def export_registry(out_dir: Path, filename: str = "benchmarks.prom") -> Path:
+    """Dump the process-wide :data:`REGISTRY` as Prometheus text."""
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / filename
+    path.write_text(REGISTRY.prometheus_text())
+    return path

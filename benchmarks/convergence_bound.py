@@ -11,12 +11,11 @@ Checks, numerically, the three §5 claims:
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 from repro.core.convergence import BoundInputs, eta_max, residual_error
 
 
@@ -62,8 +61,7 @@ def run(full: bool = False, out_dir: Path | None = None):
     results["residual_by_h"] = res_h
     results["uploaded_by_budget"] = eps_by_budget
     if out_dir:
-        (out_dir / "convergence_bound.json").write_text(
-            json.dumps(results, indent=1))
+        write_json(out_dir, "convergence_bound.json", results)
     return rows
 
 

@@ -35,7 +35,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import csv_row, run_sim_experiment, timed  # noqa: E402
+from benchmarks.common import (csv_row, run_sim_experiment,  # noqa: E402
+                               timed, write_table)
 from repro.sim import FaultConfig, RandomFaults  # noqa: E402
 
 TARGET_ACC = 0.75
@@ -93,9 +94,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                     f"{final.sim_time:.1f},{surv:.2f},{skipped},"
                     f"{retries},{ab_kb:.1f},{q_kb:.1f}")
     if out_dir:
-        out_dir.mkdir(exist_ok=True)
-        (out_dir / "fault_tolerance.csv").write_text(
-            "\n".join(table) + "\n")
+        write_table(out_dir, "fault_tolerance.csv", table)
     return rows
 
 

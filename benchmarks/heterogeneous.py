@@ -24,7 +24,6 @@ grid with a loop-vs-grouped A/B row and writes ``results/heterogeneous.csv``
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from pathlib import Path
@@ -37,7 +36,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from benchmarks.common import (HETERO_A_SPECS, HETERO_B_SPECS, csv_row,  # noqa: E402
-                               run_experiment, timed)
+                               run_experiment, timed, write_json,
+                               write_table)
 from repro.core import FedDDServer, ProtocolConfig  # noqa: E402
 from repro.fl import (init_cnn_spec, model_bytes,  # noqa: E402
                       sample_system_telemetry)
@@ -188,10 +188,8 @@ def run(full: bool = False, out_dir: Path | None = None):
     rows += perf_rows
     table += ["", "perf_ab (name,us_per_round,derived)"] + perf_rows
     if out_dir:
-        out_dir.mkdir(exist_ok=True)
-        (out_dir / "heterogeneous.json").write_text(
-            json.dumps(results, indent=1))
-        (out_dir / "heterogeneous.csv").write_text("\n".join(table) + "\n")
+        write_json(out_dir, "heterogeneous.json", results)
+        write_table(out_dir, "heterogeneous.csv", table)
     return rows
 
 

@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import argparse
 import hashlib
-import json
 import sys
 import time
 from pathlib import Path
@@ -52,7 +51,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import csv_row  # noqa: E402
+from benchmarks.common import csv_row, write_json, write_table  # noqa: E402
 from repro.core import FedDDServer, ProtocolConfig  # noqa: E402
 from repro.core.round_engine import make_batched_train_fn  # noqa: E402
 from repro.core.selection import SelectionConfig  # noqa: E402
@@ -245,16 +244,12 @@ def bench_json(out_dir: Path, *, clients=(16, 64), rounds: int = 6,
         "target": 1.5,
         "pass": bool(speedup >= 1.5),
     }
-    out_dir.mkdir(exist_ok=True)
-    out = out_dir / "BENCH_round_engine.json"
-    out.write_text(json.dumps(payload, indent=1) + "\n")
-    return out
+    return write_json(out_dir, "BENCH_round_engine.json", payload)
 
 
 def _write_csv(out_dir: Path, rows) -> None:
-    out_dir.mkdir(exist_ok=True)
-    (out_dir / "perf_federated.csv").write_text(
-        "name,us_per_round,derived\n" + "\n".join(rows) + "\n")
+    write_table(out_dir, "perf_federated.csv",
+                ["name,us_per_round,derived"] + list(rows))
 
 
 def run(full: bool = False, out_dir: Path | None = None):

@@ -42,14 +42,47 @@ MODULES = [
 ]
 
 
+def check_bench(out_dir: Path) -> None:
+    """Fail LOUDLY if the committed round-engine baseline is absent or
+    malformed — the CI regression gate calls this so a silently-missing
+    ``results/BENCH_round_engine.json`` can't pass as green."""
+    import json
+
+    path = out_dir / "BENCH_round_engine.json"
+    if not path.exists():
+        print(f"# FAIL: {path} is missing — regenerate with "
+              "`python benchmarks/run.py --json` and commit it",
+              file=sys.stderr)
+        sys.exit(1)
+    try:
+        payload = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        print(f"# FAIL: {path} is not valid JSON: {e}", file=sys.stderr)
+        sys.exit(1)
+    missing = [k for k in ("clients", "acceptance") if k not in payload]
+    if missing or not payload.get("clients"):
+        print(f"# FAIL: {path} lacks required keys {missing or ['clients']}",
+              file=sys.stderr)
+        sys.exit(1)
+    print(f"# OK: {path} present "
+          f"(clients={sorted(payload['clients'])}, "
+          f"acceptance_pass={payload['acceptance'].get('pass')})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="only run the round-engine A/B and write "
                          "results/BENCH_round_engine.json")
+    ap.add_argument("--check-bench", action="store_true",
+                    help="verify results/BENCH_round_engine.json exists "
+                         "and is well-formed; exit non-zero otherwise")
     args = ap.parse_args()
     out_dir = Path(__file__).resolve().parents[1] / "results"
     out_dir.mkdir(exist_ok=True)
+    if args.check_bench:
+        check_bench(out_dir)
+        return
     if args.json:
         import json
 
@@ -70,6 +103,10 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{mod.__name__},0,ERROR:{type(e).__name__}:{e}",
                   flush=True)
+    from benchmarks.common import export_registry
+
+    prom = export_registry(out_dir)
+    print(f"# metrics registry exported to {prom}", flush=True)
 
 
 if __name__ == "__main__":

@@ -5,10 +5,9 @@ the most robust across distributions; max/ordered collapse under Non-IID-b."""
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 
 VARIANTS = ("feddd", "random", "max", "delta", "ordered")
 
@@ -30,8 +29,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                 rows.append(csv_row(f"fig11-15_{ds}_{part}_{var}", wall,
                                     f"final_acc={accs[-1]:.4f}"))
     if out_dir:
-        (out_dir / "selection_variants.json").write_text(
-            json.dumps(results, indent=1))
+        write_json(out_dir, "selection_variants.json", results)
     return rows
 
 

@@ -10,10 +10,9 @@
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 
 
 def run(full: bool = False, out_dir: Path | None = None):
@@ -53,8 +52,7 @@ def run(full: bool = False, out_dir: Path | None = None):
         rows.append(csv_row(f"fig19_h{h}", wall, f"final_acc={acc:.4f}"))
 
     if out_dir:
-        (out_dir / "sensitivity.json").write_text(
-            json.dumps(results, indent=1))
+        write_json(out_dir, "sensitivity.json", results)
     return rows
 
 

@@ -31,7 +31,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import csv_row, run_sim_experiment, timed  # noqa: E402
+from benchmarks.common import (csv_row, run_sim_experiment,  # noqa: E402
+                               timed, write_table)
 from repro.sim import AsyncPolicy  # noqa: E402
 
 TARGET_ACC = 0.80
@@ -85,9 +86,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                     f"{scheme},{policy},{network},{_fmt(t2a)},{acc:.4f},"
                     f"{final.sim_time:.1f},{parts:.2f},{upfrac:.3f}")
     if out_dir:
-        out_dir.mkdir(exist_ok=True)
-        (out_dir / "straggler_policies.csv").write_text(
-            "\n".join(table) + "\n")
+        write_table(out_dir, "straggler_policies.csv", table)
     return rows
 
 

@@ -4,10 +4,9 @@ FedAvg = 1.  Headline claim: FedDD reduces training time >75% vs FedAvg."""
 from __future__ import annotations
 
 import argparse
-import json
 from pathlib import Path
 
-from benchmarks.common import csv_row, run_experiment, timed
+from benchmarks.common import csv_row, run_experiment, timed, write_json
 
 SCHEMES = ("fedavg", "feddd", "fedcs", "oort")
 
@@ -36,7 +35,7 @@ def run(full: bool = False, out_dir: Path | None = None):
                 f"fig7_t2a{int(tgt * 100)}_{scheme}", 0.0,
                 f"normalized_t2a={'fail' if norm is None else f'{norm:.3f}'}"))
     if out_dir:
-        (out_dir / "t2a.json").write_text(json.dumps(results, indent=1))
+        write_json(out_dir, "t2a.json", results)
     return rows
 
 

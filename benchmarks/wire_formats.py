@@ -33,7 +33,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import csv_row, run_experiment, timed  # noqa: E402
+from benchmarks.common import (csv_row, run_experiment,  # noqa: E402
+                               timed, write_table)
 from repro.comm.payload import (CommConfig, WireSpec,  # noqa: E402
                                 analytic_wire_bytes)
 
@@ -91,8 +92,7 @@ def run(full: bool = False, out_dir: Path | None = None):
     rows.append(csv_row("wire_crossover_density", 0.0,
                         f"density={cross:.4f}"))
     if out_dir:
-        out_dir.mkdir(exist_ok=True)
-        (out_dir / "wire_formats.csv").write_text("\n".join(table) + "\n")
+        write_table(out_dir, "wire_formats.csv", table)
     return rows
 
 

@@ -53,6 +53,23 @@ validation screen quarantines.  ``--quorum`` sets the minimum number of
 surviving contributors below which the server skips the round and holds
 the global model (``benchmarks/fault_tolerance.py`` maps accuracy vs
 fault rate).
+
+Observability (``--log-jsonl`` / ``--trace``, repro.obs): pass a path to
+write a structured JSONL run log — one schema-versioned event per round,
+pipeline span, and fault incident, derived entirely from host data the
+run already pulls (no extra device syncs; with observability off the
+learning state is bit-identical).  Inspect it afterwards with the
+run-inspection CLI::
+
+    PYTHONPATH=src python examples/quickstart.py --rounds 5 \\
+        --fault-rate 0.2 --log-jsonl results/quickstart_run.jsonl
+    PYTHONPATH=src python -m repro.obs.report results/quickstart_run.jsonl
+
+which prints per-phase time breakdowns, the byte/failure economy, and
+per-client straggler timelines, and exports CSV (``--csv``) or
+Prometheus text (``--prom``).  ``--trace`` additionally wraps the host
+spans in ``jax.profiler`` trace annotations so they line up with device
+activity under a profiler.
 """
 
 import argparse
@@ -94,6 +111,13 @@ def main():
     ap.add_argument("--quorum", type=int, default=1,
                     help="minimum surviving contributors per round; below "
                          "it the server skips the round (fault runs only)")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="write a structured JSONL run log here "
+                         "(repro.obs); inspect with "
+                         "`python -m repro.obs.report PATH`")
+    ap.add_argument("--trace", action="store_true",
+                    help="wrap host spans in jax.profiler trace "
+                         "annotations (implies observability on)")
     args = ap.parse_args()
 
     train, test = make_dataset("mnist", num_train=6000, num_test=1500)
@@ -108,6 +132,13 @@ def main():
 
     engine = "per-client loop" if args.loop else "batched round engine"
     comm = CommConfig(codec=args.codec, qbits=args.qbits)
+    obs_kw = {}
+    if args.log_jsonl or args.trace:
+        from repro.obs import ObsConfig
+        if args.log_jsonl:
+            Path(args.log_jsonl).parent.mkdir(parents=True, exist_ok=True)
+        obs_kw["obs"] = ObsConfig(enabled=True, jsonl_path=args.log_jsonl,
+                                  trace=args.trace)
     faults = None
     if args.fault_rate > 0.0:
         from repro.sim import FaultConfig, RandomFaults
@@ -121,7 +152,10 @@ def main():
               f"codec={args.codec}/q{args.qbits}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
                        a_server=args.a_server, h=5, batched=not args.loop,
-                       comm=comm, faults=faults)
+                       comm=comm, faults=faults, **obs_kw)
+    if args.log_jsonl:
+        print(f"  run log -> {args.log_jsonl}  (inspect: python -m "
+              f"repro.obs.report {args.log_jsonl})")
     for r in feddd.history:
         fault_col = ""
         if faults is not None:

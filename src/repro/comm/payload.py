@@ -250,7 +250,7 @@ def uplink_bytes_raw(densities, participants, model_bytes) -> float:
 
 
 def account_uplink(densities, participants, model_bytes, wire_overhead,
-                   comm: CommConfig) -> Tuple[float, float]:
+                   comm: CommConfig, obs=None) -> Tuple[float, float]:
     """(uploaded_bytes, wire_bytes) for one round.
 
     ``uploaded_bytes`` is the raw kept-parameter mass (density x U_n, the
@@ -259,14 +259,22 @@ def account_uplink(densities, participants, model_bytes, wire_overhead,
     (``wire_overhead``, from codecs.mask_overhead_bytes_stacked; None for
     the dense codec).  With the default CommConfig the two are the same
     float, bitwise.
+
+    ``obs`` (a ``repro.obs`` recorder) hooks the byte counters here — the
+    one shared reduction — so ``feddd_uploaded_bytes_total`` /
+    ``feddd_wire_bytes_total`` always agree with the RoundRecord stream
+    regardless of which executor charged the round.
     """
     raw = uplink_bytes_raw(densities, participants, model_bytes)
     if comm.is_default:
-        return raw, raw
-    wire = raw * (comm.qbits / 32.0)
-    if wire_overhead is not None:
-        wire += float(np.dot(np.asarray(wire_overhead, np.float64),
-                             np.asarray(participants, np.float64)))
+        wire = raw
+    else:
+        wire = raw * (comm.qbits / 32.0)
+        if wire_overhead is not None:
+            wire += float(np.dot(np.asarray(wire_overhead, np.float64),
+                                 np.asarray(participants, np.float64)))
+    if obs is not None and obs.active:
+        obs.uplink(raw, wire)
     return raw, wire
 
 

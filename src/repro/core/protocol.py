@@ -65,6 +65,27 @@ degradation                 packet-loss / corruption injection, payload
                             minimum-quorum round skip with survivor-only
                             LP re-solves.  All fault rates 0 == no fault
                             model, bit for bit (tests/test_faults.py)
+observability (metrics,     **every executor** via ``ProtocolConfig(obs=
+span tracing, JSONL run     ObsConfig(...))`` (repro.obs): the driver builds
+logs, run-inspection CLI)   one recorder per run; host spans wrap each
+                            pipeline phase (allocate / local_train /
+                            engine_step / encode / aggregate /
+                            client_update / host_transfer / eval —
+                            ``Recorder.span`` in the executors below), a
+                            metrics registry accumulates round / byte /
+                            failure totals, and every RoundRecord lands in
+                            the JSONL log as a ``round`` event (inspect
+                            with ``python -m repro.obs.report``).  Byte
+                            counters hook the ONE shared reduction
+                            (``account_uplink(obs=...)``); everything else
+                            reads the round's existing host transfer — no
+                            new device->host syncs.  The default
+                            ``ObsConfig()`` is inert (NULL_RECORDER): runs
+                            are bit-identical with observability off, and
+                            the engines' ``jax.named_scope`` phase
+                            annotations are compile-time metadata, so
+                            enabling it never changes compiled programs
+                            (tests/test_obs.py)
 wire formats (sparse        **every executor** via ``ProtocolConfig(comm=
 codecs, quantization,       CommConfig(codec=..., qbits=...))`` (repro.comm):
 on-wire byte accounting)    masks ship as packed-bitmask / delta+varint
@@ -106,6 +127,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.comm import codecs as wire_codecs
 from repro.comm import quantize as wire_quant
 from repro.comm.payload import (CommConfig, WireSpec, account_uplink,
@@ -151,6 +173,12 @@ class ProtocolConfig:
                                      # allocation.  The default (dense, 32)
                                      # is the pre-comm analytic accounting,
                                      # bit for bit.
+    obs: obs_mod.ObsConfig = dataclasses.field(
+        default_factory=obs_mod.ObsConfig)
+                                     # observability (repro.obs): metrics
+                                     # registry + host spans + JSONL run
+                                     # log.  The default is INERT — runs
+                                     # are bit-identical with it off.
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -302,52 +330,58 @@ class _EngineExecutor(_RoundExecutor):
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
+        obs = srv.obs
         n = srv.tel.num_clients
         dense = cfg.scheme != "feddd"
         part = (np.ones(n, bool) if not dense
                 else srv._participants(losses))
-        if self.batched_train_fn is not None:
-            stacked_new, loss_dev = self.batched_train_fn(self.stacked, rk)
-            if dense:
-                # Non-participants must not train this round: keep their
-                # stale params out of the aggregate and their stale losses
-                # in the server's view (the vmapped trainer computed every
-                # row; participation masks the results).
-                pvec = jnp.asarray(part)
-                stacked_new = jax.tree_util.tree_map(
-                    lambda new, old: jnp.where(
-                        pvec.reshape((-1,) + (1,) * (new.ndim - 1)),
-                        new, old),
-                    stacked_new, self.stacked)
-                loss_dev = jnp.where(pvec, jnp.asarray(loss_dev),
-                                     jnp.asarray(losses))
-        else:
-            per_client = round_engine.unstack_pytree(self.stacked, n)
-            new_list: List[Params] = [None] * n
-            loss_dev: List = [None] * n
-            for i, p_i in enumerate(per_client):
-                if part[i]:
-                    p, l = self.local_train_fn(p_i, i,
-                                               jax.random.fold_in(rk, i))
-                else:           # baseline non-participant: stale state
-                    p, l = p_i, losses[i]
-                new_list[i] = p
-                loss_dev[i] = l
-            stacked_new = round_engine.stack_pytrees(new_list)
-        out = self.engine.step(self.stacked, stacked_new,
-                               srv.global_params, d_used,
-                               self.weights * part, rk,
-                               full_round=(t % cfg.h == 0) or dense,
-                               dense_masks=dense)
+        with obs.span("local_train", round=t):
+            if self.batched_train_fn is not None:
+                stacked_new, loss_dev = self.batched_train_fn(self.stacked,
+                                                              rk)
+                if dense:
+                    # Non-participants must not train this round: keep
+                    # their stale params out of the aggregate and their
+                    # stale losses in the server's view (the vmapped
+                    # trainer computed every row; participation masks the
+                    # results).
+                    pvec = jnp.asarray(part)
+                    stacked_new = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(
+                            pvec.reshape((-1,) + (1,) * (new.ndim - 1)),
+                            new, old),
+                        stacked_new, self.stacked)
+                    loss_dev = jnp.where(pvec, jnp.asarray(loss_dev),
+                                         jnp.asarray(losses))
+            else:
+                per_client = round_engine.unstack_pytree(self.stacked, n)
+                new_list: List[Params] = [None] * n
+                loss_dev: List = [None] * n
+                for i, p_i in enumerate(per_client):
+                    if part[i]:
+                        p, l = self.local_train_fn(
+                            p_i, i, jax.random.fold_in(rk, i))
+                    else:       # baseline non-participant: stale state
+                        p, l = p_i, losses[i]
+                    new_list[i] = p
+                    loss_dev[i] = l
+                stacked_new = round_engine.stack_pytrees(new_list)
+        with obs.span("engine_step", round=t):
+            out = self.engine.step(self.stacked, stacked_new,
+                                   srv.global_params, d_used,
+                                   self.weights * part, rk,
+                                   full_round=(t % cfg.h == 0) or dense,
+                                   dense_masks=dense)
         srv.global_params = out.global_params
         self.stacked = out.client_params
         # the ONE device->host transfer of the round (wire_overhead is
         # None with the default comm config — no extra sync either way)
-        dens, oh, loss_host = jax.device_get(
-            (out.densities, out.wire_overhead, loss_dev))
+        with obs.span("host_transfer", round=t):
+            dens, oh, loss_host = jax.device_get(
+                (out.densities, out.wire_overhead, loss_dev))
         new_losses = np.asarray(loss_host, float)
         uploaded, wire = account_uplink(dens, part, srv.tel.model_bytes,
-                                        oh, cfg.comm)
+                                        oh, cfg.comm, obs=obs)
         return _RoundData(new_losses, uploaded, part, None, wire)
 
     def finalize(self) -> None:
@@ -408,7 +442,8 @@ class _EngineExecutor(_RoundExecutor):
         self.stacked = out.client_params
         srv.global_params = out.global_params
         srv.rng = out.rng
-        return jax.device_get(trace)
+        with srv.obs.span("host_transfer", round=t_start):
+            return jax.device_get(trace)
 
 
 class _GroupedEngineExecutor(_RoundExecutor):
@@ -441,19 +476,24 @@ class _GroupedEngineExecutor(_RoundExecutor):
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
+        obs = srv.obs
         n = srv.tel.num_clients
         dense = cfg.scheme != "feddd"
         part = (np.ones(n, bool) if not dense
                 else srv._participants(losses))
-        loss_dev = self.fleet.train(self.local_train_fn, rk, part, losses,
-                                    d_used, dense=dense)
-        srv.global_params, densities, wire_oh = self.fleet.step(
-            srv.global_params, self.weights * part, rk,
-            full_round=(t % cfg.h == 0) or dense, dense=dense)
-        dens, oh, loss_host = jax.device_get((densities, wire_oh, loss_dev))
+        with obs.span("local_train", round=t):
+            loss_dev = self.fleet.train(self.local_train_fn, rk, part,
+                                        losses, d_used, dense=dense)
+        with obs.span("engine_step", round=t):
+            srv.global_params, densities, wire_oh = self.fleet.step(
+                srv.global_params, self.weights * part, rk,
+                full_round=(t % cfg.h == 0) or dense, dense=dense)
+        with obs.span("host_transfer", round=t):
+            dens, oh, loss_host = jax.device_get(
+                (densities, wire_oh, loss_dev))
         new_losses = np.asarray(loss_host, float)
         uploaded, wire = account_uplink(dens, part, srv.tel.model_bytes,
-                                        oh, cfg.comm)
+                                        oh, cfg.comm, obs=obs)
         return _RoundData(new_losses, uploaded, part, None, wire)
 
     def finalize(self) -> None:
@@ -472,6 +512,7 @@ class _ReferenceLoopExecutor(_RoundExecutor):
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
+        obs = srv.obs
         n = srv.tel.num_clients
         losses = losses.copy()
         part = srv._participants(losses)
@@ -480,12 +521,13 @@ class _ReferenceLoopExecutor(_RoundExecutor):
         # --- Step 1: local training (participants only for baselines;
         # in FedDD everyone trains — that is the paper's key point).
         new_params: List[Params] = [None] * n
-        for i, cs in enumerate(srv.clients):
-            if cfg.scheme == "feddd" or part[i]:
-                p, l = self.local_train_fn(cs.params, i,
-                                           jax.random.fold_in(rk, i))
-                new_params[i] = p
-                losses[i] = float(l)
+        with obs.span("local_train", round=t):
+            for i, cs in enumerate(srv.clients):
+                if cfg.scheme == "feddd" or part[i]:
+                    p, l = self.local_train_fn(cs.params, i,
+                                               jax.random.fold_in(rk, i))
+                    new_params[i] = p
+                    losses[i] = float(l)
 
         # --- Steps 2-3: mask building + (simulated) upload.  Per-client
         # densities / wire overheads collect into vectors so the byte
@@ -494,38 +536,41 @@ class _ReferenceLoopExecutor(_RoundExecutor):
         densities = np.zeros(n)
         wire_oh = (None if cfg.comm.is_default else np.zeros(n))
         client_masks: List[Params] = [None] * n
-        if cfg.scheme == "feddd":
-            for i, cs in enumerate(srv.clients):
-                cov = (cov_mod.coverage_pytree(cs.params, srv.cr,
-                                               cfg.selection.channel_axis)
-                       if srv.heterogeneous else None)
-                m = selection.build_masks(
-                    cs.params, new_params[i],
-                    jnp.asarray(d_used[i], jnp.float32),
-                    config=cfg.selection, coverage=cov,
-                    rng=jax.random.fold_in(rk, 10_000 + i))
-                client_masks[i] = m
-                densities[i] = float(selection.mask_density(new_params[i],
-                                                            m))
-        else:
-            for i in range(n):
-                if part[i]:
-                    client_masks[i] = jax.tree_util.tree_map(
-                        lambda w: jnp.ones((1,) * w.ndim, w.dtype),
-                        new_params[i])
-                    densities[i] = 1.0
-        uploads = np.asarray([m is not None for m in client_masks])
-        if wire_oh is not None:
-            for i in np.flatnonzero(uploads):
-                # baseline full uploads carry collapsed all-ones masks;
-                # their overhead is the closed-form full-upload constant
-                # at true widths (the engines charge the same)
-                wire_oh[i] = (
-                    wire_codecs.mask_overhead_bytes(
-                        client_masks[i], new_params[i], cfg.comm)
-                    if cfg.scheme == "feddd" else
-                    wire_codecs.full_upload_overhead_bytes(
-                        srv.wire_specs[i], cfg.comm))
+        with obs.span("encode", round=t):
+            if cfg.scheme == "feddd":
+                for i, cs in enumerate(srv.clients):
+                    cov = (cov_mod.coverage_pytree(
+                               cs.params, srv.cr,
+                               cfg.selection.channel_axis)
+                           if srv.heterogeneous else None)
+                    m = selection.build_masks(
+                        cs.params, new_params[i],
+                        jnp.asarray(d_used[i], jnp.float32),
+                        config=cfg.selection, coverage=cov,
+                        rng=jax.random.fold_in(rk, 10_000 + i))
+                    client_masks[i] = m
+                    densities[i] = float(
+                        selection.mask_density(new_params[i], m))
+            else:
+                for i in range(n):
+                    if part[i]:
+                        client_masks[i] = jax.tree_util.tree_map(
+                            lambda w: jnp.ones((1,) * w.ndim, w.dtype),
+                            new_params[i])
+                        densities[i] = 1.0
+            uploads = np.asarray([m is not None for m in client_masks])
+            if wire_oh is not None:
+                for i in np.flatnonzero(uploads):
+                    # baseline full uploads carry collapsed all-ones
+                    # masks; their overhead is the closed-form full-upload
+                    # constant at true widths (the engines charge the
+                    # same)
+                    wire_oh[i] = (
+                        wire_codecs.mask_overhead_bytes(
+                            client_masks[i], new_params[i], cfg.comm)
+                        if cfg.scheme == "feddd" else
+                        wire_codecs.full_upload_overhead_bytes(
+                            srv.wire_specs[i], cfg.comm))
 
         # --- Step 4: aggregation (over uploaded clients only).  The
         # server aggregates what it DECODED: with qbits < 32 the uploads
@@ -533,41 +578,45 @@ class _ReferenceLoopExecutor(_RoundExecutor):
         # engines — repro.comm.quantize); Eq. (5)/(6) below keep each
         # client's own full-precision params.
         idxs = [i for i in range(n) if client_masks[i] is not None]
-        agg_src = {
-            i: (new_params[i] if cfg.comm.qbits == 32 else
-                wire_quant.quantize_dequantize(
-                    new_params[i], wire_quant.client_quant_key(rk, i),
-                    cfg.comm.qbits))
-            for i in idxs
-        }
-        agg_params = [srv._pad_to_global(agg_src[i], i) for i in idxs]
-        agg_masks = [srv._pad_mask_to_global(client_masks[i],
-                                             new_params[i]) for i in idxs]
-        agg_weights = [srv.clients[i].num_samples for i in idxs]
-        if cfg.track_epsilon:
-            eps_val = float(estimate_epsilon(agg_params, agg_masks))
-        srv.global_params = aggregation.aggregate_sparse(
-            agg_params, agg_masks, agg_weights,
-            prev_global=srv.global_params)
+        with obs.span("aggregate", round=t):
+            agg_src = {
+                i: (new_params[i] if cfg.comm.qbits == 32 else
+                    wire_quant.quantize_dequantize(
+                        new_params[i], wire_quant.client_quant_key(rk, i),
+                        cfg.comm.qbits))
+                for i in idxs
+            }
+            agg_params = [srv._pad_to_global(agg_src[i], i) for i in idxs]
+            agg_masks = [srv._pad_mask_to_global(client_masks[i],
+                                                 new_params[i])
+                         for i in idxs]
+            agg_weights = [srv.clients[i].num_samples for i in idxs]
+            if cfg.track_epsilon:
+                eps_val = float(estimate_epsilon(agg_params, agg_masks))
+            srv.global_params = aggregation.aggregate_sparse(
+                agg_params, agg_masks, agg_weights,
+                prev_global=srv.global_params)
 
         # --- Steps 6-7: download + local model update
         full_round = (t % cfg.h == 0) or cfg.scheme != "feddd"
-        for i, cs in enumerate(srv.clients):
-            if new_params[i] is None:      # non-participant (baselines)
-                if full_round:
-                    cs.params = srv._slice_to_local(cs.params)
-                continue
-            if full_round or client_masks[i] is None:
-                cs.params = srv._slice_to_local(new_params[i],
-                                                use_global=True)
-            else:
-                g_local = srv._slice_like(srv.global_params, new_params[i])
-                cs.params = aggregation.client_update_sparse(
-                    g_local, new_params[i], client_masks[i])
+        with obs.span("client_update", round=t):
+            for i, cs in enumerate(srv.clients):
+                if new_params[i] is None:  # non-participant (baselines)
+                    if full_round:
+                        cs.params = srv._slice_to_local(cs.params)
+                    continue
+                if full_round or client_masks[i] is None:
+                    cs.params = srv._slice_to_local(new_params[i],
+                                                    use_global=True)
+                else:
+                    g_local = srv._slice_like(srv.global_params,
+                                              new_params[i])
+                    cs.params = aggregation.client_update_sparse(
+                        g_local, new_params[i], client_masks[i])
 
         uploaded, wire = account_uplink(densities, uploads,
                                         srv.tel.model_bytes, wire_oh,
-                                        cfg.comm)
+                                        cfg.comm, obs=obs)
         active = (np.ones(n, bool) if cfg.scheme == "feddd" else part)
         return _RoundData(losses, uploaded, active, eps_val, wire)
 
@@ -606,6 +655,9 @@ class FedDDServer:
         ]
         self.dropout = np.zeros(n)           # D_n^1 = 0 (Algorithm 1)
         self.rng = jax.random.PRNGKey(cfg.seed)
+        # observability hook: inert singleton until run() builds a live
+        # recorder for an active cfg.obs (repro.obs)
+        self.obs = obs_mod.NULL_RECORDER
 
     # -- per-round server logic ---------------------------------------------
 
@@ -719,33 +771,49 @@ class FedDDServer:
                     "rounds_per_dispatch > 1 params only reach the host "
                     "at dispatch boundaries; use rounds_per_dispatch=1 "
                     "for per-round eval")
-            self._run_scanned(executor, rounds, history, full_bytes)
+
+        self.obs = obs_mod.make_recorder(
+            cfg.obs, driver="protocol", scheme=cfg.scheme, executor=kind
+            if cfg.rounds_per_dispatch == 1 else "scanned",
+            clients=n, rounds=rounds)
+        try:
+            if cfg.rounds_per_dispatch > 1:
+                self._run_scanned(executor, rounds, history, full_bytes)
+                executor.finalize()
+                return RunResult(history, self.global_params)
+
+            for t in range(1, rounds + 1):
+                t0 = time.perf_counter()
+                self.rng, rk = jax.random.split(self.rng)
+                d_used = self.dropout.copy()  # D_t: what uploads use
+
+                rd = executor.run_round(t, rk, losses, d_used)
+                losses = rd.losses
+
+                # --- Step 5: dropout-rate allocation for round t+1
+                if cfg.scheme == "feddd":
+                    with self.obs.span("allocate", round=t):
+                        alloc = self.allocate(np.maximum(losses, 1e-6))
+                    self.dropout = alloc.dropout_rates
+
+                # --- simulated wall clock (paper Eq. (12))
+                sim_time, round_t, metrics, t_all = self._finish_round(
+                    rd.active, sim_time, eval_fn, d_used)
+                history.append(self._record(t, t0, sim_time, round_t,
+                                            losses, rd.uploaded_bytes,
+                                            rd.wire_bytes, full_bytes,
+                                            rd.active, rd.epsilon,
+                                            metrics))
+                if self.obs.active:
+                    self.obs.round(
+                        history[-1], path=kind, scheme=cfg.scheme,
+                        client_times=np.where(rd.active, t_all, np.nan))
+
             executor.finalize()
             return RunResult(history, self.global_params)
-
-        for t in range(1, rounds + 1):
-            t0 = time.perf_counter()
-            self.rng, rk = jax.random.split(self.rng)
-            d_used = self.dropout.copy()      # D_t: what uploads use
-
-            rd = executor.run_round(t, rk, losses, d_used)
-            losses = rd.losses
-
-            # --- Step 5: dropout-rate allocation for round t+1
-            if cfg.scheme == "feddd":
-                alloc = self.allocate(np.maximum(losses, 1e-6))
-                self.dropout = alloc.dropout_rates
-
-            # --- simulated wall clock (paper Eq. (12))
-            sim_time, round_t, metrics = self._finish_round(
-                rd.active, sim_time, eval_fn, d_used)
-            history.append(self._record(t, t0, sim_time, round_t, losses,
-                                        rd.uploaded_bytes, rd.wire_bytes,
-                                        full_bytes, rd.active, rd.epsilon,
-                                        metrics))
-
-        executor.finalize()
-        return RunResult(history, self.global_params)
+        finally:
+            self.obs.close()
+            self.obs = obs_mod.NULL_RECORDER
 
     def _run_scanned(self, executor: "_EngineExecutor", rounds: int,
                      history: List[RoundRecord], full_bytes: float) -> None:
@@ -770,7 +838,8 @@ class FedDDServer:
         while t <= rounds:
             k = min(cfg.rounds_per_dispatch, rounds - t + 1)
             t0 = time.perf_counter()
-            trace = executor.run_chunk(t, k, losses)
+            with self.obs.span("chunk_dispatch", round=t):
+                trace = executor.run_chunk(t, k, losses)
             wall = (time.perf_counter() - t0) / k
             tr_losses = np.asarray(trace.losses, float)
             tr_dens = np.asarray(trace.densities, float)
@@ -789,8 +858,9 @@ class FedDDServer:
                     self.dropout = np.clip(tr_dnext[j], 0.0, cfg.d_max)
                 uploaded, wire = account_uplink(
                     tr_dens[j], part, self.tel.model_bytes,
-                    None if tr_oh is None else tr_oh[j], cfg.comm)
-                sim_time, round_t, _ = self._finish_round(
+                    None if tr_oh is None else tr_oh[j], cfg.comm,
+                    obs=self.obs)
+                sim_time, round_t, _, t_all = self._finish_round(
                     part, sim_time, None, d_used)
                 history.append(RoundRecord(
                     round=t + j, sim_time=sim_time,
@@ -801,6 +871,10 @@ class FedDDServer:
                     uploaded_bytes=uploaded, wire_bytes=wire,
                     participants=int(np.sum(part)),
                     survivors=int(np.sum(part))))
+                if self.obs.active:
+                    self.obs.round(
+                        history[-1], path="scanned", scheme=cfg.scheme,
+                        client_times=np.where(part, t_all, np.nan))
             t += k
 
     def _record(self, t: int, t0: float, sim_time: float,
@@ -821,7 +895,7 @@ class FedDDServer:
 
     def _finish_round(self, active: np.ndarray, sim_time: float, eval_fn,
                       dropout_used: np.ndarray
-                      ) -> "tuple[float, float, Optional[Dict]]":
+                      ) -> "tuple[float, float, Optional[Dict], np.ndarray]":
         """Simulated wall clock (paper Eq. (12)) + optional eval.
 
         ``dropout_used`` is D_t — the rates this round's uploads actually
@@ -832,6 +906,10 @@ class FedDDServer:
         analytic byte model (mask overhead + value precision,
         repro.comm.payload.analytic_wire_bytes) instead of the idealized
         ``U(1-D)``; the downlink broadcast stays idealized.
+
+        Also returns ``t_all`` — the per-client Eq. (12) round times the
+        max ran over; the recorder logs them (masked to active clients)
+        as the straggler timeline.
         """
         d_for_time = (dropout_used if self.cfg.scheme == "feddd"
                       else np.zeros(self.tel.num_clients))
@@ -842,8 +920,12 @@ class FedDDServer:
                                       uplink_bytes=up)
         round_t = float(np.max(t_all[active]))
         sim_time += round_t
-        metrics = eval_fn(self.global_params) if eval_fn else None
-        return sim_time, round_t, metrics
+        if eval_fn:
+            with self.obs.span("eval"):
+                metrics = eval_fn(self.global_params)
+        else:
+            metrics = None
+        return sim_time, round_t, metrics, t_all
 
     # -- heterogeneous-model plumbing  (HeteroFL-style width slicing) --------
 

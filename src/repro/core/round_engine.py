@@ -217,17 +217,23 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
                 sel_cfg: selection.SelectionConfig,
                 full_round: bool, dense_masks: bool = False,
                 comm: CommConfig = CommConfig()) -> RoundOutputs:
-    if dense_masks:
-        # Baseline rounds (fedavg/fedcs/oort): participants upload FULL
-        # models, so masks are all-ones and no importance scoring runs.
-        # Non-participation is a 0 in ``weights`` — a zero-weight client
-        # contributes nothing to either Eq. (4) sum, exactly like being
-        # left out of the aggregation list.
-        n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
-        masks, density = _dense_masks(stacked_new, n)
-    else:
-        masks, density = selection.build_masks_batched(
-            stacked_old, stacked_new, dropout_rates, config=sel_cfg, rng=rng)
+    # jax.named_scope blocks are compile-time metadata (operator name
+    # prefixes in the HLO / profiler traces — repro.obs vocabulary); they
+    # are UNCONDITIONAL, so the compiled program never depends on whether
+    # observability is enabled.
+    with jax.named_scope("feddd_encode_masks"):
+        if dense_masks:
+            # Baseline rounds (fedavg/fedcs/oort): participants upload
+            # FULL models, so masks are all-ones and no importance
+            # scoring runs.  Non-participation is a 0 in ``weights`` — a
+            # zero-weight client contributes nothing to either Eq. (4)
+            # sum, exactly like being left out of the aggregation list.
+            n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
+            masks, density = _dense_masks(stacked_new, n)
+        else:
+            masks, density = selection.build_masks_batched(
+                stacked_old, stacked_new, dropout_rates, config=sel_cfg,
+                rng=rng)
     # Wire format (repro.comm): the server aggregates what it DECODED —
     # with qbits < 32 that is the quantize->dequantize rendering of the
     # uploads (the clients' own Eq. (5) updates keep local full precision,
@@ -243,23 +249,27 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
     # of mask channels whose bytes landed (partial aggregation).  Both
     # default to None and then trace the exact pre-fault graph.
     upload_src = stacked_new if stacked_upload is None else stacked_upload
-    stacked_agg = wire_quant.quantize_dequantize_stacked(
-        upload_src, rng, comm.qbits)
-    wire_oh = _wire_overhead(masks, stacked_new, comm,
-                             sel_cfg.channel_axis, dense_masks)
-    agg_masks = (masks if delivered is None
-                 else aggregation.truncate_masks_to_prefix(masks,
-                                                           delivered))
-    new_global = aggregation.aggregate_sparse_stacked(
-        stacked_agg, agg_masks, weights, prev_global=global_params,
-        use_kernel=sel_cfg.use_kernel)
-    if full_round:
-        new_clients = _adopt_global(new_global, stacked_new)
-    else:
-        # Eq. (5): the un-stacked global broadcasts against the (N, ...)
-        # stacked leaves, so the per-client rule applies verbatim.
-        new_clients = aggregation.client_update_sparse(
-            new_global, stacked_new, masks)
+    with jax.named_scope("feddd_encode_wire"):
+        stacked_agg = wire_quant.quantize_dequantize_stacked(
+            upload_src, rng, comm.qbits)
+        wire_oh = _wire_overhead(masks, stacked_new, comm,
+                                 sel_cfg.channel_axis, dense_masks)
+        agg_masks = (masks if delivered is None
+                     else aggregation.truncate_masks_to_prefix(masks,
+                                                               delivered))
+    with jax.named_scope("feddd_aggregate"):
+        new_global = aggregation.aggregate_sparse_stacked(
+            stacked_agg, agg_masks, weights, prev_global=global_params,
+            use_kernel=sel_cfg.use_kernel)
+    with jax.named_scope("feddd_client_update"):
+        if full_round:
+            new_clients = _adopt_global(new_global, stacked_new)
+        else:
+            # Eq. (5): the un-stacked global broadcasts against the
+            # (N, ...) stacked leaves, so the per-client rule applies
+            # verbatim.
+            new_clients = aggregation.client_update_sparse(
+                new_global, stacked_new, masks)
     return RoundOutputs(new_clients, new_global, density, wire_oh)
 
 
@@ -438,86 +448,99 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
             d_used = dropout
             # participation — the only scheme whose selection is both
             # dynamic and loss-dependent (oort) re-ranks in-trace
-            if scheme == "fedcs":
-                part = static_part
-            elif scheme == "oort":
-                part = baselines.select_oort_traced(
-                    losses, num_samples=tel.num_samples,
-                    system_penalty=oort_penalty,
-                    model_bytes=tel.model_bytes, budget=oort_budget)
-            else:                        # feddd / fedavg: everyone
-                part = jnp.ones((n,), bool)
-            stacked_new, loss_dev = train_fn(params, rk)
-            loss_dev = jnp.asarray(loss_dev, jnp.float32)
-            if dense:
-                # Non-participants must not train this round: the vmapped
-                # trainer computed every row, participation masks the
-                # results back to stale params/losses (exactly the
-                # per-round executor's rule).
-                pexp = part.reshape
-                stacked_new = jax.tree_util.tree_map(
-                    lambda new, old: jnp.where(
-                        pexp((-1,) + (1,) * (new.ndim - 1)), new, old),
-                    stacked_new, params)
-                loss_dev = jnp.where(part, loss_dev, losses)
-                masks, density = _dense_masks(stacked_new, n)
-            else:
-                masks, density = selection.build_masks_batched(
-                    params, stacked_new, d_used, config=sel_cfg, rng=rk)
+            with jax.named_scope("feddd_select"):
+                if scheme == "fedcs":
+                    part = static_part
+                elif scheme == "oort":
+                    part = baselines.select_oort_traced(
+                        losses, num_samples=tel.num_samples,
+                        system_penalty=oort_penalty,
+                        model_bytes=tel.model_bytes, budget=oort_budget)
+                else:                    # feddd / fedavg: everyone
+                    part = jnp.ones((n,), bool)
+            # jax.named_scope: compile-time operator-name metadata only
+            # (repro.obs phase vocabulary in HLO / profiler traces); the
+            # compiled program is independent of observability settings.
+            with jax.named_scope("feddd_local_train"):
+                stacked_new, loss_dev = train_fn(params, rk)
+                loss_dev = jnp.asarray(loss_dev, jnp.float32)
+            with jax.named_scope("feddd_encode_masks"):
+                if dense:
+                    # Non-participants must not train this round: the
+                    # vmapped trainer computed every row, participation
+                    # masks the results back to stale params/losses
+                    # (exactly the per-round executor's rule).
+                    pexp = part.reshape
+                    stacked_new = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(
+                            pexp((-1,) + (1,) * (new.ndim - 1)), new, old),
+                        stacked_new, params)
+                    loss_dev = jnp.where(part, loss_dev, losses)
+                    masks, density = _dense_masks(stacked_new, n)
+                else:
+                    masks, density = selection.build_masks_batched(
+                        params, stacked_new, d_used, config=sel_cfg,
+                        rng=rk)
             # wire format: same static branches as _round_step — the
             # server aggregates the decoded (possibly quantized) uploads
             # and the measured mask/scale overhead rides the trace
-            stacked_agg = wire_quant.quantize_dequantize_stacked(
-                stacked_new, rk, comm.qbits)
-            wire_oh = _wire_overhead(masks, stacked_new, comm,
-                                     sel_cfg.channel_axis, dense)
-            new_global = aggregation.aggregate_sparse_stacked(
-                stacked_agg, masks, weights * part, prev_global=gparams,
-                use_kernel=sel_cfg.use_kernel)
-            if dense:
-                new_clients = _adopt_global(new_global, stacked_new)
-            else:
-                # t is traced inside the scan, so the Eq. (5)/(6) choice
-                # is a select over both updates rather than the sequential
-                # step's two static compiles.
-                full = (t % h) == 0
-                eq6 = _adopt_global(new_global, stacked_new)
-                eq5 = aggregation.client_update_sparse(new_global,
-                                                       stacked_new, masks)
-                new_clients = jax.tree_util.tree_map(
-                    lambda a, b: jnp.where(full, a, b), eq6, eq5)
+            with jax.named_scope("feddd_encode_wire"):
+                stacked_agg = wire_quant.quantize_dequantize_stacked(
+                    stacked_new, rk, comm.qbits)
+                wire_oh = _wire_overhead(masks, stacked_new, comm,
+                                         sel_cfg.channel_axis, dense)
+            with jax.named_scope("feddd_aggregate"):
+                new_global = aggregation.aggregate_sparse_stacked(
+                    stacked_agg, masks, weights * part,
+                    prev_global=gparams, use_kernel=sel_cfg.use_kernel)
+            with jax.named_scope("feddd_client_update"):
+                if dense:
+                    new_clients = _adopt_global(new_global, stacked_new)
+                else:
+                    # t is traced inside the scan, so the Eq. (5)/(6)
+                    # choice is a select over both updates rather than
+                    # the sequential step's two static compiles.
+                    full = (t % h) == 0
+                    eq6 = _adopt_global(new_global, stacked_new)
+                    eq5 = aggregation.client_update_sparse(
+                        new_global, stacked_new, masks)
+                    new_clients = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(full, a, b), eq6, eq5)
             # Step 5: dropout-rate re-allocation for round t+1 (feddd).
             # The f32 clip mirrors the host dispatcher's float64 clip —
             # both feed the next round the same f32 rates.
-            if dense:
-                d_next = jnp.zeros_like(dropout)
-                d_time = jnp.zeros_like(dropout)
-            else:
-                # The solver self-fences with optimization_barrier (see
-                # its docstring), so inlining it here returns the same
-                # bits as the per-round host dispatch.
-                d_next, _ = allocation.solve_dropout_rates_jax(
-                    *tel, jnp.maximum(loss_dev, 1e-6),
-                    a_server=a_server, d_max=d_max, delta=delta,
-                    global_model_bytes=global_model_bytes,
-                    num_iters=alloc_iters)
-                d_next = jnp.clip(d_next, 0.0, d_max)
-                d_time = d_used
+            with jax.named_scope("feddd_allocate"):
+                if dense:
+                    d_next = jnp.zeros_like(dropout)
+                    d_time = jnp.zeros_like(dropout)
+                else:
+                    # The solver self-fences with optimization_barrier
+                    # (see its docstring), so inlining it here returns
+                    # the same bits as the per-round host dispatch.
+                    d_next, _ = allocation.solve_dropout_rates_jax(
+                        *tel, jnp.maximum(loss_dev, 1e-6),
+                        a_server=a_server, d_max=d_max, delta=delta,
+                        global_model_bytes=global_model_bytes,
+                        num_iters=alloc_iters)
+                    d_next = jnp.clip(d_next, 0.0, d_max)
+                    d_time = d_used
             # Eq. (12) round clock over participating clients, using the
             # dropout the uploads actually used (device f32 axis).  A
             # non-dense codec charges its analytic byte model on the
             # uplink leg — the same model the host-side driver charges —
             # while the downlink broadcast stays on the idealized mass.
-            u_eff = tel.model_bytes * (1.0 - d_time)
-            if comm.is_default or wire_spec is None:
-                up_bytes = u_eff
-            else:
-                up_bytes = analytic_wire_bytes(wire_spec, d_time, comm,
-                                               xp=jnp)
-            t_all = (tel.compute_latency + up_bytes / tel.uplink_rate
-                     + u_eff / tel.downlink_rate)
-            round_t = jnp.max(jnp.where(part, t_all, -jnp.inf))
-            sim_time = sim_time + round_t
+            with jax.named_scope("feddd_clock"):
+                u_eff = tel.model_bytes * (1.0 - d_time)
+                if comm.is_default or wire_spec is None:
+                    up_bytes = u_eff
+                else:
+                    up_bytes = analytic_wire_bytes(wire_spec, d_time,
+                                                   comm, xp=jnp)
+                t_all = (tel.compute_latency
+                         + up_bytes / tel.uplink_rate
+                         + u_eff / tel.downlink_rate)
+                round_t = jnp.max(jnp.where(part, t_all, -jnp.inf))
+                sim_time = sim_time + round_t
             st2 = ScanState(new_clients, new_global, loss_dev, d_next,
                             rng, sim_time)
             return st2, ScanTrace(loss_dev, density, d_next, part,
@@ -558,46 +581,60 @@ def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
     group_masks, group_agg, group_idx = [], [], []
     densities = jnp.zeros((n,), jnp.float32)
     wire_oh = None if comm.is_default else jnp.zeros((n,), jnp.int32)
-    for g in groups:
-        if dense_masks:
-            ng = g.indices.shape[0]
-            masks = jax.tree_util.tree_map(
-                lambda l: jnp.ones((ng,) + (1,) * (l.ndim - 1), l.dtype),
-                g.stacked_new)
-            dens = jnp.ones((ng,), jnp.float32)
-        else:
-            masks, dens = selection.build_masks_batched(
-                g.stacked_old, g.stacked_new,
-                jnp.asarray(g.dropout, jnp.float32), config=sel_cfg,
-                rng=rng, coverage=g.coverage, client_indices=g.indices)
-        group_masks.append(masks)
-        # wire format: the aggregate consumes the decoded (possibly
-        # quantized) uploads; per-member keys fold the FLEET positions,
-        # matching the per-client loop (see repro.comm.quantize)
-        group_agg.append(wire_quant.quantize_dequantize_stacked(
-            g.stacked_new, rng, comm.qbits, client_indices=g.indices))
-        group_idx.append(g.indices)
-        densities = densities.at[g.indices].set(dens)
-        if wire_oh is not None:
-            wire_oh = wire_oh.at[g.indices].set(_wire_overhead(
-                masks, g.stacked_new, comm, sel_cfg.channel_axis,
-                dense_masks))
-    new_global = aggregation.aggregate_sparse_grouped(
-        group_agg, group_masks, group_idx, weights, global_params,
-        prev_global=global_params, use_kernel=sel_cfg.use_kernel)
-    new_group_params = []
-    for g, masks in zip(groups, group_masks):
-        g_local = slice_pytree(new_global, unstack_pytree(g.stacked_new, 1)[0])
-        if full_round:
-            # Eq. (6): every member adopts its slice of the fresh global.
-            upd = jax.tree_util.tree_map(
-                lambda gl, l: jnp.broadcast_to(gl, l.shape).astype(l.dtype),
-                g_local, g.stacked_new)
-        else:
-            # Eq. (5): the local-width global broadcasts over the group axis.
-            upd = aggregation.client_update_sparse(g_local, g.stacked_new,
-                                                   masks)
-        new_group_params.append(upd)
+    # jax.named_scope blocks: compile-time operator-name metadata only
+    # (repro.obs phase vocabulary) — the program is independent of
+    # observability settings.
+    with jax.named_scope("feddd_encode_masks"):
+        for g in groups:
+            if dense_masks:
+                ng = g.indices.shape[0]
+                masks = jax.tree_util.tree_map(
+                    lambda l: jnp.ones((ng,) + (1,) * (l.ndim - 1),
+                                       l.dtype),
+                    g.stacked_new)
+                dens = jnp.ones((ng,), jnp.float32)
+            else:
+                masks, dens = selection.build_masks_batched(
+                    g.stacked_old, g.stacked_new,
+                    jnp.asarray(g.dropout, jnp.float32), config=sel_cfg,
+                    rng=rng, coverage=g.coverage,
+                    client_indices=g.indices)
+            group_masks.append(masks)
+            # wire format: the aggregate consumes the decoded (possibly
+            # quantized) uploads; per-member keys fold the FLEET
+            # positions, matching the per-client loop (repro.comm
+            # .quantize)
+            group_agg.append(wire_quant.quantize_dequantize_stacked(
+                g.stacked_new, rng, comm.qbits,
+                client_indices=g.indices))
+            group_idx.append(g.indices)
+            densities = densities.at[g.indices].set(dens)
+            if wire_oh is not None:
+                wire_oh = wire_oh.at[g.indices].set(_wire_overhead(
+                    masks, g.stacked_new, comm, sel_cfg.channel_axis,
+                    dense_masks))
+    with jax.named_scope("feddd_aggregate"):
+        new_global = aggregation.aggregate_sparse_grouped(
+            group_agg, group_masks, group_idx, weights, global_params,
+            prev_global=global_params, use_kernel=sel_cfg.use_kernel)
+    with jax.named_scope("feddd_client_update"):
+        new_group_params = []
+        for g, masks in zip(groups, group_masks):
+            g_local = slice_pytree(new_global,
+                                   unstack_pytree(g.stacked_new, 1)[0])
+            if full_round:
+                # Eq. (6): every member adopts its slice of the fresh
+                # global.
+                upd = jax.tree_util.tree_map(
+                    lambda gl, l: jnp.broadcast_to(gl, l.shape)
+                    .astype(l.dtype),
+                    g_local, g.stacked_new)
+            else:
+                # Eq. (5): the local-width global broadcasts over the
+                # group axis.
+                upd = aggregation.client_update_sparse(
+                    g_local, g.stacked_new, masks)
+            new_group_params.append(upd)
     return GroupedRoundOutputs(tuple(new_group_params), new_global,
                                densities, wire_oh)
 

@@ -1,0 +1,239 @@
+"""Run-inspection CLI over a JSONL run log.
+
+::
+
+    python -m repro.obs.report results/quickstart_run.jsonl \
+        [--csv report.csv] [--prom metrics.prom] [--top 5]
+
+Renders, from the structured events alone (repro.obs.runlog):
+
+* run header — driver, scheme, fleet, wall/sim seconds, rounds/sec;
+* per-phase time breakdown — host span totals (calls, total s, mean ms,
+  share of spanned time) for the allocate → train → encode → transport →
+  aggregate → eval pipeline;
+* byte economy — uploaded vs on-wire totals, wire overhead/savings,
+  abandoned + quarantined bytes;
+* failure economy — skipped rounds, survivor stats, retries, incident
+  counts by kind;
+* straggler timelines — per-client upload-completion offsets (sim clock)
+  with mean/max and slowest-in-round counts; ``--top N`` worst clients.
+
+``--csv`` writes the per-round stream as CSV; ``--prom`` replays the
+round + fault events through the SAME
+:func:`repro.obs.recorder.update_round_metrics` mapping a live run uses,
+into a fresh registry, and writes its Prometheus text — offline and live
+exports always agree.
+"""
+
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.runlog import _RECORD_SCALARS, read_events
+
+
+def _fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024.0 or unit == "GiB":
+            return f"{n:,.1f} {unit}" if unit != "B" else f"{n:,.0f} B"
+        n /= 1024.0
+    return f"{n:,.1f} GiB"
+
+
+def _section(title: str) -> List[str]:
+    return ["", title, "-" * len(title)]
+
+
+def _header_lines(events: List[Dict]) -> List[str]:
+    head = events[0]
+    tail = next((e for e in reversed(events)
+                 if e.get("event") == "run_end"), None)
+    meta = {k: v for k, v in head.items()
+            if k not in ("event", "schema")}
+    lines = _section("Run")
+    lines.append("  " + "  ".join(f"{k}={v}" for k, v in meta.items()))
+    if tail is not None:
+        lines.append(f"  rounds={tail.get('rounds')}"
+                     f"  wall={tail.get('wall_s', 0.0):.3f}s"
+                     f"  sim={tail.get('sim_s', 0.0):.3f}s"
+                     f"  rounds/sec={tail.get('rounds_per_sec', 0.0):.2f}")
+    else:
+        lines.append("  (no run_end event — run truncated?)")
+    return lines
+
+
+def _phase_lines(events: List[Dict]) -> List[str]:
+    spans = [e for e in events if e.get("event") == "span"]
+    lines = _section("Phase breakdown (host spans)")
+    if not spans:
+        lines.append("  no span events (log written without spans?)")
+        return lines
+    agg: Dict[str, List[float]] = defaultdict(lambda: [0, 0.0])
+    for e in spans:
+        a = agg[e["name"]]
+        a[0] += 1
+        a[1] += float(e["dur_s"])
+    total = sum(a[1] for a in agg.values()) or 1.0
+    lines.append(f"  {'phase':<16}{'calls':>7}{'total_s':>10}"
+                 f"{'mean_ms':>10}{'share':>8}")
+    for name, (calls, tot) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        lines.append(f"  {name:<16}{calls:>7}{tot:>10.4f}"
+                     f"{1e3 * tot / calls:>10.3f}"
+                     f"{100.0 * tot / total:>7.1f}%")
+    return lines
+
+
+def _byte_lines(rounds: List[Dict]) -> List[str]:
+    lines = _section("Byte economy")
+    if not rounds:
+        lines.append("  no round events")
+        return lines
+    up = sum(float(r.get("uploaded_bytes", 0.0)) for r in rounds)
+    wire = sum(float(r.get("wire_bytes", 0.0)) for r in rounds)
+    aband = sum(float(r.get("abandoned_bytes", 0.0)) for r in rounds)
+    quar = sum(float(r.get("quarantined_bytes", 0.0)) for r in rounds)
+    lines.append(f"  uploaded (raw payload): {_fmt_bytes(up)}")
+    lines.append(f"  on-wire:                {_fmt_bytes(wire)}")
+    if up > 0:
+        delta = 100.0 * (wire - up) / up
+        word = "overhead" if delta >= 0 else "savings"
+        lines.append(f"  wire {word}:          {abs(delta):.1f}%")
+    lines.append(f"  abandoned (late/aborted): {_fmt_bytes(aband)}")
+    lines.append(f"  quarantined (screened):   {_fmt_bytes(quar)}")
+    return lines
+
+
+def _failure_lines(events: List[Dict], rounds: List[Dict]) -> List[str]:
+    lines = _section("Failure economy")
+    if not rounds:
+        lines.append("  no round events")
+        return lines
+    skipped = sum(1 for r in rounds if r.get("skipped"))
+    retries = sum(int(r.get("retries", 0)) for r in rounds)
+    surv = [int(r.get("survivors", 0)) for r in rounds]
+    part = [int(r.get("participants", 0)) for r in rounds]
+    lines.append(f"  rounds: {len(rounds)}  skipped (quorum): {skipped}"
+                 f"  retries: {retries}")
+    if surv:
+        lines.append(f"  survivors: min {min(surv)} / mean "
+                     f"{sum(surv) / len(surv):.1f} / of "
+                     f"{max(part) if part else 0} participants")
+    incidents = [e for e in events if e.get("event") == "fault"]
+    if incidents:
+        by_kind: Dict[str, int] = defaultdict(int)
+        for e in incidents:
+            by_kind[e.get("kind", "unknown")] += 1
+        kinds = "  ".join(f"{k}={c}" for k, c in sorted(by_kind.items()))
+        lines.append(f"  incidents: {kinds}")
+    else:
+        lines.append("  incidents: none recorded")
+    return lines
+
+
+def _straggler_lines(rounds: List[Dict], top: int) -> List[str]:
+    lines = _section("Straggler timeline (per-client upload offsets)")
+    tracked = [r for r in rounds if r.get("client_up")]
+    if not tracked:
+        lines.append("  no per-client timing in this log")
+        return lines
+    n = max(len(r["client_up"]) for r in tracked)
+    tot = [0.0] * n
+    cnt = [0] * n
+    mx = [0.0] * n
+    slowest = [0] * n
+    for r in tracked:
+        ups = r["client_up"]
+        seen = [(i, float(t)) for i, t in enumerate(ups) if t is not None]
+        for i, t in seen:
+            tot[i] += t
+            cnt[i] += 1
+            mx[i] = max(mx[i], t)
+        if seen:
+            slowest[max(seen, key=lambda it: it[1])[0]] += 1
+    stats = [(i, tot[i] / cnt[i], mx[i], slowest[i], cnt[i])
+             for i in range(n) if cnt[i]]
+    stats.sort(key=lambda s: -s[1])
+    lines.append(f"  {len(tracked)} rounds tracked, {len(stats)} clients;"
+                 f" slowest {min(top, len(stats))} by mean offset:")
+    lines.append(f"  {'client':>8}{'mean_s':>10}{'max_s':>10}"
+                 f"{'slowest_in':>12}{'uploads':>9}")
+    for i, mean, m, slow, c in stats[:top]:
+        lines.append(f"  {i:>8}{mean:>10.4f}{m:>10.4f}{slow:>12}{c:>9}")
+    return lines
+
+
+def render(events: List[Dict], top: int = 5) -> str:
+    rounds = [e for e in events if e.get("event") == "round"]
+    lines: List[str] = []
+    lines += _header_lines(events)
+    lines += _phase_lines(events)
+    lines += _byte_lines(rounds)
+    lines += _failure_lines(events, rounds)
+    lines += _straggler_lines(rounds, top)
+    return "\n".join(lines).lstrip("\n") + "\n"
+
+
+def rounds_csv(events: List[Dict]) -> str:
+    """Per-round stream as CSV (the scalar RoundRecord fields)."""
+    cols = list(_RECORD_SCALARS)
+    rows = [",".join(cols)]
+    for e in events:
+        if e.get("event") != "round":
+            continue
+        rows.append(",".join(repr(e.get(c, "")) if isinstance(e.get(c), float)
+                             else str(e.get(c, "")) for c in cols))
+    return "\n".join(rows) + "\n"
+
+
+def registry_from_events(events: List[Dict]) -> MetricsRegistry:
+    """Replay round + fault events into a fresh registry via the SAME
+    mapping a live Recorder uses (update_round_metrics)."""
+    from repro.obs.recorder import update_round_metrics
+    from repro.obs.runlog import record_from_event
+    reg = MetricsRegistry()
+    for e in events:
+        if e.get("event") == "round":
+            update_round_metrics(reg, record_from_event(e),
+                                 scheme=e.get("scheme", ""),
+                                 path=e.get("path", ""))
+        elif e.get("event") == "fault":
+            reg.inc("feddd_fault_incidents_total", 1,
+                    kind=e.get("kind", "unknown"))
+    return reg
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Inspect a FedDD JSONL run log: phase timings, "
+                    "byte/failure economies, straggler timelines.")
+    ap.add_argument("jsonl", help="run log written via --log-jsonl / "
+                                  "ObsConfig.jsonl_path")
+    ap.add_argument("--csv", metavar="PATH",
+                    help="also write the per-round stream as CSV")
+    ap.add_argument("--prom", metavar="PATH",
+                    help="also write Prometheus text metrics replayed "
+                         "from the log")
+    ap.add_argument("--top", type=int, default=5,
+                    help="straggler clients to list (default 5)")
+    args = ap.parse_args(argv)
+
+    events = read_events(args.jsonl)
+    print(render(events, top=args.top), end="")
+    if args.csv:
+        with open(args.csv, "w", encoding="utf-8") as fh:
+            fh.write(rounds_csv(events))
+        print(f"\nwrote per-round CSV -> {args.csv}")
+    if args.prom:
+        with open(args.prom, "w", encoding="utf-8") as fh:
+            fh.write(registry_from_events(events).prometheus_text())
+        print(f"wrote Prometheus text -> {args.prom}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

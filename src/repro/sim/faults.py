@@ -302,6 +302,39 @@ class ScriptedFaults(FaultModel):
         return out
 
 
+def incident_events(fr: RoundFaults, scheduled: np.ndarray) -> list:
+    """One observability event dict per fault incident in a round's draw
+    (consumed by ``repro.obs`` — the recorder's ``fault()`` hook turns
+    each into a JSONL ``fault`` event and a
+    ``feddd_fault_incidents_total{kind=}`` increment).
+
+    ``scheduled`` is the (N,) bool mask of clients dispatched this round;
+    incidents of unscheduled clients never happened on the timeline and
+    are not reported.  Kinds: ``crash``, ``abort``, ``retry`` (survived
+    retransmits), ``corrupt``.  Quarantine and quorum-skip incidents are
+    emitted by the runner, which owns those decisions.
+    """
+    sched = np.asarray(scheduled, bool)
+    out = []
+    for i in np.flatnonzero(sched & fr.crashed):
+        out.append({"kind": "crash", "client": int(i),
+                    "crash_frac": float(fr.crash_frac[i])})
+    for i in np.flatnonzero(sched & fr.aborted):
+        out.append({"kind": "abort", "client": int(i),
+                    "retries": int(fr.retries[i]),
+                    "sent_bytes": float(fr.sent_bytes[i])})
+    for i in np.flatnonzero(sched & (fr.retries > 0) & ~fr.aborted
+                            & ~fr.crashed):
+        out.append({"kind": "retry", "client": int(i),
+                    "retries": int(fr.retries[i]),
+                    "extra_bytes": float(fr.extra_bytes[i]),
+                    "extra_delay": float(fr.extra_delay[i])})
+    for i in np.flatnonzero(sched & (fr.corrupt > 0) & ~fr.crashed):
+        out.append({"kind": "corrupt", "client": int(i),
+                    "corrupt_kind": CORRUPT_KINDS[int(fr.corrupt[i]) - 1]})
+    return out
+
+
 # ------------------------------------------------- wire-side corruption
 
 def corrupt_pytree(params, kind: str, rng: np.random.Generator):

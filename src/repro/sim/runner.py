@@ -51,6 +51,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.comm.payload import (WireSpec, account_uplink,
                                 analytic_uplink_vector,
                                 delivered_prefix_counts)
@@ -347,6 +348,9 @@ class SimRunner:
         self.full_bytes = float(np.sum(telemetry.model_bytes))
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.sim = Simulator()
+        # observability hook (repro.obs): inert singleton until a run
+        # entry point builds a live recorder for an active cfg.obs
+        self.obs = obs_mod.NULL_RECORDER
 
     # -- shared server-side helpers -----------------------------------------
 
@@ -507,7 +511,21 @@ class SimRunner:
 
     def run_waves(self, local_train_fn: Callable, eval_fn=None,
                   rounds: Optional[int] = None) -> SimResult:
+        self.obs = obs_mod.make_recorder(
+            self.cfg.obs, driver="sim", scheme=self.cfg.scheme,
+            policy=str(self.simcfg.policy),
+            clients=self.tel.num_clients,
+            rounds=rounds or self.cfg.rounds)
+        try:
+            return self._run_waves_impl(local_train_fn, eval_fn, rounds)
+        finally:
+            self.obs.close()
+            self.obs = obs_mod.NULL_RECORDER
+
+    def _run_waves_impl(self, local_train_fn: Callable, eval_fn=None,
+                        rounds: Optional[int] = None) -> SimResult:
         cfg = self.cfg
+        obs = self.obs
         rounds = rounds or cfg.rounds
         n = self.tel.num_clients
         losses = np.ones(n)
@@ -526,10 +544,13 @@ class SimRunner:
             d_time = d_used if cfg.scheme == "feddd" else np.zeros(n)
 
             # --- device math: local training (participants)
-            loss_dev = fleet.train(local_train_fn, rk, part, losses, d_used)
+            with obs.span("local_train", round=t):
+                loss_dev = fleet.train(local_train_fn, rk, part, losses,
+                                       d_used)
 
             # --- event timeline with TRUE conditions of this epoch; the
             # uplink leg moves the codec's bytes (repro.comm)
+            _transport0 = time.perf_counter()
             cond = self.network.conditions(t - 1)
             true_tel = telemetry_with_conditions(self.tel, cond)
             up_wire = self._uplink_wire_vec(d_time)
@@ -544,6 +565,9 @@ class SimRunner:
             fr = (self.faults.round_faults(
                 t - 1, wire_vec, np.asarray(cond.uplink_rate, float))
                 if self.faults is not None else None)
+            if fr is not None and obs.active:
+                for inc in faults_mod.incident_events(fr, part):
+                    obs.fault(t, inc)
             dispatch = sim.now
             spans = {}
             for i in np.flatnonzero(part):
@@ -621,6 +645,7 @@ class SimRunner:
                              else float(sim.now))
             round_end = max(round_end, float(sim.now))
             sim.advance_to(round_end)
+            obs.span_done("transport", _transport0, round=t)
 
             # --- delivered prefixes of cut uploads (deadline partial
             # aggregation) and the bytes wasted by transfers that died
@@ -687,6 +712,12 @@ class SimRunner:
                              if not quarantine[i]}
                 quarantined_b = float(np.sum(
                     (wire_vec + fr.extra_bytes)[arrived & quarantine]))
+                if obs.active:
+                    for i in np.flatnonzero(arrived & quarantine):
+                        obs.fault(t, {"kind": "quarantine",
+                                      "client": int(i),
+                                      "norm": float(norms[i]),
+                                      "finite": bool(finite[i])})
             valid = arrived & ~quarantine
             partial &= ~quarantine
             contributors = valid | partial
@@ -704,7 +735,8 @@ class SimRunner:
                 abandoned_b += partial_bytes + float(np.sum(
                     (wire_vec + fr.extra_bytes)[valid]))
                 if cfg.scheme == "feddd":
-                    self._allocate(losses, alive=~fr.crashed)
+                    with obs.span("allocate", round=t):
+                        self._allocate(losses, alive=~fr.crashed)
                 metrics = (eval_fn(self.global_params)
                            if eval_fn and t % self.simcfg.eval_every == 0
                            else None)
@@ -720,6 +752,15 @@ class SimRunner:
                     abandoned_bytes=abandoned_b,
                     quarantined_bytes=quarantined_b,
                     skipped=True, metrics=metrics))
+                if obs.active:
+                    obs.fault(t, {
+                        "kind": "quorum_skip",
+                        "contributors": int(contributors.sum()),
+                        "floor": self.faults.quorum_floor(
+                            int(part.sum()))})
+                    obs.round(history[-1], path="sim", scheme=cfg.scheme,
+                              client_times=np.where(
+                                  arrived, arr_time - dispatch, np.nan))
                 continue
 
             # --- fused engine step: exclusion == 0 aggregation weight;
@@ -735,31 +776,36 @@ class SimRunner:
                         mat[i] = counts
                 delivered_arg = tuple(jnp.asarray(mat[:, li])
                                       for li in range(n_leaves))
-            densities, wire_oh = fleet.step(
-                d_used, self.weights * contributors, rk,
-                full_round=(t % cfg.h == 0) or self._dense,
-                dense=self._dense, delivered=delivered_arg,
-                overrides=overrides)
-            dens, oh, loss_host = jax.device_get(
-                (densities, wire_oh, loss_dev))
+            with obs.span("engine_step", round=t):
+                densities, wire_oh = fleet.step(
+                    d_used, self.weights * contributors, rk,
+                    full_round=(t % cfg.h == 0) or self._dense,
+                    dense=self._dense, delivered=delivered_arg,
+                    overrides=overrides)
+            with obs.span("host_transfer", round=t):
+                dens, oh, loss_host = jax.device_get(
+                    (densities, wire_oh, loss_dev))
             # the loss report ships WITH the upload: a straggler whose
             # transfer was abandoned (or quarantined) keeps its stale
             # loss server-side
             losses = np.where(valid, np.asarray(loss_host, float), losses)
             uploaded, wire = account_uplink(dens, valid,
                                             self.tel.model_bytes, oh,
-                                            cfg.comm)
+                                            cfg.comm, obs=obs)
             wire += partial_bytes
             if fr is not None:
                 wire += float(np.sum(fr.extra_bytes[valid]))
 
             # --- allocation for round t+1, from what the server observed
             if cfg.scheme == "feddd":
-                self._allocate(losses)
+                with obs.span("allocate", round=t):
+                    self._allocate(losses)
 
-            metrics = (eval_fn(self.global_params)
-                       if eval_fn and t % self.simcfg.eval_every == 0
-                       else None)
+            if eval_fn and t % self.simcfg.eval_every == 0:
+                with obs.span("eval", round=t):
+                    metrics = eval_fn(self.global_params)
+            else:
+                metrics = None
             history.append(RoundRecord(
                 round=t, sim_time=round_end,
                 sim_round_time=round_end - dispatch,
@@ -773,6 +819,12 @@ class SimRunner:
                 abandoned_bytes=abandoned_b,
                 quarantined_bytes=quarantined_b,
                 metrics=metrics))
+            if obs.active:
+                # per-client upload-completion offsets on the sim clock:
+                # the straggler timeline (NaN = never landed this round)
+                obs.round(history[-1], path="sim", scheme=cfg.scheme,
+                          client_times=np.where(
+                              arrived, arr_time - dispatch, np.nan))
 
         self.client_params = fleet.export()
         return self._result(history)
@@ -788,7 +840,21 @@ class SimRunner:
         the merge's arrival-complete time, so fast clients lap stragglers
         instead of the fleet idling at Eq. (12)'s max.
         """
+        self.obs = obs_mod.make_recorder(
+            self.cfg.obs, driver="sim", scheme=self.cfg.scheme,
+            policy=str(self.simcfg.policy),
+            clients=self.tel.num_clients,
+            rounds=rounds or self.cfg.rounds)
+        try:
+            return self._run_async_impl(local_train_fn, eval_fn, rounds)
+        finally:
+            self.obs.close()
+            self.obs = obs_mod.NULL_RECORDER
+
+    def _run_async_impl(self, local_train_fn: Callable, eval_fn=None,
+                        rounds: Optional[int] = None) -> SimResult:
         cfg = self.cfg
+        obs = self.obs
         rounds = rounds or cfg.rounds
         n = self.tel.num_clients
         k_buf = self.policy.resolved_buffer(n)
@@ -839,32 +905,35 @@ class SimRunner:
             w = self.weights[buffer] * scale
             merge_key = jax.random.fold_in(agg_key, merges)
             full_round = (merges % cfg.h == 0) or self._dense
-            if self.heterogeneous:
-                dens, oh = self._merge_grouped(buffer, pending, w,
-                                               merge_key, full_round)
-            else:
-                olds = round_engine.stack_pytrees(
-                    [pending[i][0] for i in buffer])
-                news = round_engine.stack_pytrees(
-                    [pending[i][1] for i in buffer])
-                d_vec = np.asarray([pending[i][3] for i in buffer])
-                out = self.engine.step(
-                    olds, news, self.global_params, d_vec, w, merge_key,
-                    full_round=full_round, dense_masks=self._dense)
-                self.global_params = out.global_params
-                dens, oh = jax.device_get((out.densities,
-                                           out.wire_overhead))
-                dens = np.asarray(dens, float)
-                for j, i in enumerate(buffer):
-                    self.client_params[i] = jax.tree_util.tree_map(
-                        lambda l, j=j: l[j], out.client_params)
+            with obs.span("engine_step", round=merges):
+                if self.heterogeneous:
+                    dens, oh = self._merge_grouped(buffer, pending, w,
+                                                   merge_key, full_round)
+                else:
+                    olds = round_engine.stack_pytrees(
+                        [pending[i][0] for i in buffer])
+                    news = round_engine.stack_pytrees(
+                        [pending[i][1] for i in buffer])
+                    d_vec = np.asarray([pending[i][3] for i in buffer])
+                    out = self.engine.step(
+                        olds, news, self.global_params, d_vec, w,
+                        merge_key, full_round=full_round,
+                        dense_masks=self._dense)
+                    self.global_params = out.global_params
+                    dens, oh = jax.device_get((out.densities,
+                                               out.wire_overhead))
+                    dens = np.asarray(dens, float)
+                    for j, i in enumerate(buffer):
+                        self.client_params[i] = jax.tree_util.tree_map(
+                            lambda l, j=j: l[j], out.client_params)
             version += 1
             uploaded, wire = account_uplink(
                 dens, np.ones(len(buffer), bool),
-                self.tel.model_bytes[buffer], oh, cfg.comm)
+                self.tel.model_bytes[buffer], oh, cfg.comm, obs=obs)
 
             if cfg.scheme == "feddd":
-                self._allocate(losses)
+                with obs.span("allocate", round=merges):
+                    self._allocate(losses)
             metrics = (eval_fn(self.global_params)
                        if eval_fn and merges % self.simcfg.eval_every == 0
                        else None)
@@ -878,6 +947,9 @@ class SimRunner:
                 uploaded_bytes=uploaded, wire_bytes=wire,
                 participants=len(buffer), survivors=len(buffer),
                 metrics=metrics))
+            if obs.active:
+                obs.round(history[-1], path="sim_async",
+                          scheme=cfg.scheme)
             prev_time = ev.time
             host_prev = time.perf_counter()
 
