@@ -99,12 +99,13 @@ def run_mode(mode: str, params, tel, local_train, batched_train, *,
     cfg = ProtocolConfig(
         scheme="feddd", rounds=rounds, a_server=0.6, h=5, seed=seed,
         batched=(mode != "loop"), allocator="jax",
+        mesh=(True if mode == "sharded" else None),
         rounds_per_dispatch=(rounds_per_dispatch if mode == "scanned"
                              else 1),
         selection=SelectionConfig(use_kernel=use_kernel))
     server = FedDDServer(params, cfg, tel)
     t0 = time.perf_counter()
-    if mode in ("fused", "scanned"):
+    if mode in ("fused", "scanned", "sharded"):
         res = server.run(batched_train_fn=batched_train)
     else:
         res = server.run(local_train)
@@ -213,11 +214,85 @@ def smoke(clients: int = 8, rounds: int = 2, rounds_per_dispatch: int = 2
     return 0
 
 
+def sharded_ab(clients_list=(256, 1024), rounds: int = 6) -> dict:
+    """Sharded-vs-fused scaling curve on the VISIBLE device mesh.
+
+    Runs the same homogeneous FedDD simulation as the per-round ``fused``
+    mode and the client-sharded ``sharded`` mode (ProtocolConfig mesh=True
+    -> ShardedRoundEngine over every visible device) and reports
+    rounds/sec, the sharded speedup, and the scaling efficiency
+    (speedup / devices).  Meant to run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU (or on
+    a real accelerator mesh); on a 1-device process the sharded mode
+    degenerates to shard_map overhead measurement (~2%).
+
+    ``physical_parallelism`` records whether the host can actually run the
+    shard programs concurrently (cpu_count >= devices on the CPU backend);
+    the acceptance gate only binds where it is true — an 8-way virtual
+    mesh round-robining on one core measures dispatch serialization, not
+    the engine's scaling.
+    """
+    import os
+    devices = jax.device_count()
+    cpus = os.cpu_count() or 1
+    physical = (jax.default_backend() != "cpu") or cpus >= devices
+    out = {
+        "devices": devices,
+        "cpu_count": cpus,
+        "physical_parallelism": bool(physical),
+        "clients": {},
+    }
+    for c in clients_list:
+        setup = make_setup(c, 8)
+        kw = dict(rounds=rounds, use_kernel=False, rounds_per_dispatch=8)
+        per = {}
+        for mode in ("fused", "sharded"):
+            run_mode(mode, *setup, **{**kw, "rounds": 2})       # warm-up
+            _, wall = run_mode(mode, *setup, **kw)
+            per[mode] = rounds / wall
+        speedup = per["sharded"] / per["fused"]
+        out["clients"][str(c)] = {
+            "fused_rounds_per_sec": per["fused"],
+            "sharded_rounds_per_sec": per["sharded"],
+            "sharded_speedup": speedup,
+            "scaling_efficiency": speedup / max(devices, 1),
+        }
+    return out
+
+
+def _sharded_subprocess(clients_list, rounds: int, devices: int = 8):
+    """Collect the sharded scaling curve in a child process with
+    ``devices`` virtual CPU devices (XLA fixes the device count at
+    import, so the parent cannot re-mesh itself)."""
+    import json
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    code = (
+        "import json\n"
+        "from benchmarks.perf_federated import sharded_ab\n"
+        f"print(json.dumps(sharded_ab({tuple(clients_list)!r}, "
+        f"rounds={rounds})))\n"
+    )
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = f"{root}/src:{root}"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, cwd=root,
+                         check=True)
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
 def bench_json(out_dir: Path, *, clients=(16, 64), rounds: int = 6,
-               rounds_per_dispatch: int = 8) -> Path:
+               rounds_per_dispatch: int = 8,
+               sharded_clients=(256, 1024), mesh_devices: int = 8) -> Path:
     """Machine-readable perf trajectory: rounds/sec per execution path at
     each fleet size -> results/BENCH_round_engine.json (CI artifact, the
-    regression baseline future PRs compare against)."""
+    regression baseline future PRs compare against).  The ``sharded``
+    section is the client-sharded scaling curve, collected in a child
+    process carrying an ``mesh_devices``-way virtual CPU mesh."""
     rounds_per_dispatch = min(rounds_per_dispatch, rounds)  # effective K
     payload = {
         "bench": "round_engine",
@@ -235,14 +310,29 @@ def bench_json(out_dir: Path, *, clients=(16, 64), rounds: int = 6,
                    "sec_per_round": wall / rounds}
             for mode, (_, wall, rps) in results.items()
         }
+    payload["sharded"] = _sharded_subprocess(sharded_clients, rounds,
+                                             devices=mesh_devices)
     biggest = str(max(clients))
     per = payload["clients"][biggest]
     speedup = (per["scanned"]["rounds_per_sec"]
                / per["batched"]["rounds_per_sec"])
+    scan_ge_fused = all(
+        modes["scanned"]["rounds_per_sec"] >= modes["fused"]["rounds_per_sec"]
+        for modes in payload["clients"].values())
+    sh = payload["sharded"]
+    sh_big = sh["clients"][str(max(sharded_clients))]
+    sharded_ok = (sh_big["sharded_speedup"] >= 3.0
+                  if sh["physical_parallelism"] else None)
     payload["acceptance"] = {
         "scanned_vs_batched_at_max_clients": speedup,
         "target": 1.5,
-        "pass": bool(speedup >= 1.5),
+        "scanned_ge_fused_at_every_client_count": bool(scan_ge_fused),
+        "sharded_speedup_at_max_clients": sh_big["sharded_speedup"],
+        "sharded_target": 3.0,
+        "sharded_gate_binding": sh["physical_parallelism"],
+        "sharded_pass": sharded_ok,
+        "pass": bool(speedup >= 1.5 and scan_ge_fused
+                     and (sharded_ok is not False)),
     }
     return write_json(out_dir, "BENCH_round_engine.json", payload)
 
@@ -278,11 +368,21 @@ def main():
                          "asserts scanned == sequential digests")
     ap.add_argument("--json", action="store_true",
                     help="write results/BENCH_round_engine.json "
-                         "(rounds/sec per path at 16/64 clients)")
+                         "(rounds/sec per path at 16/64 clients + the "
+                         "sharded scaling curve on an 8-way virtual mesh)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="print the sharded-vs-fused scaling curve on the "
+                         "VISIBLE devices (run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     if args.smoke:
         sys.exit(smoke())
+    if args.sharded:
+        import json as _json
+        print(_json.dumps(sharded_ab((args.clients,), rounds=args.rounds),
+                          indent=1))
+        return
     out_dir = Path(__file__).resolve().parents[1] / "results"
     if args.json:
         out = bench_json(out_dir)

@@ -64,9 +64,39 @@ def check_bench(out_dir: Path) -> None:
         print(f"# FAIL: {path} lacks required keys {missing or ['clients']}",
               file=sys.stderr)
         sys.exit(1)
+    # scanned must beat (or match) the per-round fused path at EVERY
+    # recorded client count — the committed baseline may not regress the
+    # multi-round scan anywhere on the curve
+    for c, modes in sorted(payload["clients"].items(), key=lambda kv:
+                           int(kv[0])):
+        if "scanned" not in modes or "fused" not in modes:
+            continue
+        s = modes["scanned"]["rounds_per_sec"]
+        f = modes["fused"]["rounds_per_sec"]
+        if s < f:
+            print(f"# FAIL: scanned ({s:.2f} r/s) below fused ({f:.2f} "
+                  f"r/s) at {c} clients — the committed baseline must "
+                  "have scanned >= fused at every client count",
+                  file=sys.stderr)
+            sys.exit(1)
+    # sharded scaling gate: binds only where the recording host could run
+    # the shard programs concurrently (acceptance.sharded_gate_binding)
+    acc = payload["acceptance"]
+    if acc.get("sharded_gate_binding") and acc.get("sharded_pass") is False:
+        print(f"# FAIL: sharded speedup "
+              f"{acc.get('sharded_speedup_at_max_clients'):.2f}x below "
+              f"the {acc.get('sharded_target')}x target on parallel "
+              "hardware", file=sys.stderr)
+        sys.exit(1)
+    if not acc.get("pass"):
+        print(f"# FAIL: committed baseline records a failing acceptance "
+              f"({acc})", file=sys.stderr)
+        sys.exit(1)
+    sh = payload.get("sharded", {})
     print(f"# OK: {path} present "
           f"(clients={sorted(payload['clients'])}, "
-          f"acceptance_pass={payload['acceptance'].get('pass')})")
+          f"sharded_devices={sh.get('devices')}, "
+          f"acceptance_pass={acc.get('pass')})")
 
 
 def main() -> None:

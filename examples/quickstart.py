@@ -54,6 +54,26 @@ surviving contributors below which the server skips the round and holds
 the global model (``benchmarks/fault_tolerance.py`` maps accuracy vs
 fault rate).
 
+Sharding the client axis (``--mesh N``, repro.launch.mesh): the stacked
+fleet can run over an N-device ``("clients",)`` mesh — per-shard fused
+training and mask building under ``shard_map``, Eq. (4) aggregated
+cross-device (dense ``psum`` by default; ``mesh_collective="sparse"``
+ships only each shard's surviving channels — see
+``core/sparse_collective.py``).  On a 1-device mesh the learning state
+is bit-identical to the batched engine; multi-device is allclose (the
+psum reorders the f32 reduction).  CPUs expose one device by default, so
+to try an 8-way mesh locally split the host first::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/quickstart.py --mesh 8
+
+(virtual CPU devices share the physical cores — this demonstrates the
+SPMD program, real speedups need real parallel hardware;
+``benchmarks/perf_federated.py --sharded`` measures the scaling curve).
+``--mesh`` composes with everything except fault injection with
+corruption and deadline-partial aggregation, which are single-device
+engine features (the runner raises a clear error).
+
 Observability (``--log-jsonl`` / ``--trace``, repro.obs): pass a path to
 write a structured JSONL run log — one schema-versioned event per round,
 pipeline span, and fault incident, derived entirely from host data the
@@ -111,6 +131,11 @@ def main():
     ap.add_argument("--quorum", type=int, default=1,
                     help="minimum surviving contributors per round; below "
                          "it the server skips the round (fault runs only)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="shard the client axis over an N-device mesh "
+                         "(run under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N to split a CPU host); omit for "
+                         "the single-device engines")
     ap.add_argument("--log-jsonl", default=None, metavar="PATH",
                     help="write a structured JSONL run log here "
                          "(repro.obs); inspect with "
@@ -131,6 +156,12 @@ def main():
     ef = make_eval_fn(MLP_SPEC, test, flatten=True)
 
     engine = "per-client loop" if args.loop else "batched round engine"
+    mesh_kw = {}
+    if args.mesh is not None:
+        if args.loop:
+            ap.error("--mesh requires the batched engine (drop --loop)")
+        engine = f"sharded round engine ({args.mesh}-device mesh)"
+        mesh_kw["mesh"] = args.mesh
     comm = CommConfig(codec=args.codec, qbits=args.qbits)
     obs_kw = {}
     if args.log_jsonl or args.trace:
@@ -152,7 +183,7 @@ def main():
               f"codec={args.codec}/q{args.qbits}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
                        a_server=args.a_server, h=5, batched=not args.loop,
-                       comm=comm, faults=faults, **obs_kw)
+                       comm=comm, faults=faults, **mesh_kw, **obs_kw)
     if args.log_jsonl:
         print(f"  run log -> {args.log_jsonl}  (inspect: python -m "
               f"repro.obs.report {args.log_jsonl})")

@@ -278,6 +278,60 @@ def account_uplink(densities, participants, model_bytes, wire_overhead,
     return raw, wire
 
 
+def collective_payload_bytes(spec: WireSpec, *, mode: str = "dense",
+                             k_fraction: float = 1.0) -> float:
+    """Per-shard, per-hop bytes of ONE Eq. (4) cross-device reduction.
+
+    The client-sharded engines (core/round_engine.py ShardedRoundEngine)
+    reduce per-shard (num, den) partials over the mesh's ``clients`` axis.
+    This is the analytic byte model of that exchange, the cross-device
+    sibling of :func:`analytic_wire_bytes`:
+
+    * ``dense``: each shard contributes the full float32 numerator (every
+      leaf element) plus the (C,) denominator channel profile per leaf —
+      what a dense psum moves per hop.
+    * ``sparse``: the compacted top-K exchange of
+      ``core/sparse_collective.py`` — per leaf
+      ``K = max(1, ceil(C * k_fraction))`` rows of ``elements/C`` float32
+      values, plus K int32 channel indices and K float32 den rows.
+
+    The ratio sparse/dense therefore tracks ``k_fraction`` (= 1 - D for a
+    uniform fleet): the (1-D) per-link saving the paper's WAN uplink
+    argument maps onto the cross-device interconnect.
+    """
+    if mode not in ("dense", "sparse"):
+        raise ValueError(f"mode must be 'dense' or 'sparse', got {mode!r}")
+    total = 0.0
+    for c, e in spec.leaves:
+        if mode == "dense":
+            total += e * 4.0 + c * 4.0
+        else:
+            k = max(1, min(c, int(np.ceil(c * k_fraction))))
+            total += k * (e / c) * 4.0 + k * 4.0 + k * 4.0
+    return total
+
+
+def account_collective(spec: WireSpec, num_shards: int, *,
+                       mode: str = "dense", k_fraction: float = 1.0,
+                       obs=None) -> Tuple[float, float]:
+    """(dense_bytes, actual_bytes) of one round's Eq. (4) reduction,
+    summed over the mesh's shards.
+
+    ``dense_bytes`` is what the round WOULD have moved with a dense psum;
+    ``actual_bytes`` is what the configured collective moved (equal for
+    ``mode="dense"``).  ``obs`` (a ``repro.obs`` recorder) hooks the
+    cross-device byte counters here, mirroring :func:`account_uplink` for
+    the uplink leg — ``repro.obs.report`` renders the ratio as the
+    (1-D) per-link saving.
+    """
+    dense = collective_payload_bytes(spec, mode="dense") * num_shards
+    actual = collective_payload_bytes(
+        spec, mode=mode, k_fraction=k_fraction) * num_shards
+    if obs is not None and obs.active:
+        obs.collective(dense, actual)
+    return dense, actual
+
+
 def analytic_wire_bytes(spec: WireSpec, dropout, comm: CommConfig, xp=np):
     """Modelled on-wire upload bytes as a function of the dropout rate.
 

@@ -20,6 +20,35 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
+def leaf_masked_partials(stack_w: jax.Array, stack_m: jax.Array,
+                         w: jax.Array, use_kernel: bool = False):
+    """Eq. (4) numerator/denominator partials for one client-stacked leaf.
+
+    (N, *leaf) -> (num (*leaf,) f32, den (*leaf,) f32).  Split out of
+    :func:`_leaf_masked_mean` so the client-sharded engine can reduce the
+    SAME partial sums across shards (psum / compacted all-gather) before
+    :func:`finish_masked_mean` — on one shard the composition is, by
+    construction, arithmetic-identical to the fused single-device path.
+    """
+    n = stack_w.shape[0]
+    if use_kernel and stack_w.ndim >= 2 and stack_w.size >= 1024:
+        from repro.kernels.sparse_agg import ops as agg_ops
+        return agg_ops.masked_weighted_sum(stack_w, stack_m, w)
+    wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
+    num = jnp.sum(stack_w.astype(jnp.float32) * stack_m * wts, axis=0)
+    den = jnp.sum(stack_m * wts, axis=0)
+    return num, den
+
+
+def finish_masked_mean(num: jax.Array, den: jax.Array, gprev,
+                       dtype) -> jax.Array:
+    """Eq. (4) division + prev-global fill over reduced (num, den)."""
+    agg = num / jnp.maximum(den, _EPS)
+    if gprev is not None:
+        agg = jnp.where(den > _EPS, agg, gprev.astype(jnp.float32))
+    return agg.astype(dtype)
+
+
 def _leaf_masked_mean(stack_w: jax.Array, stack_m: jax.Array, w: jax.Array,
                       gprev, use_kernel: bool) -> jax.Array:
     """Eq. (4) for one client-stacked leaf: (N, *leaf) -> (*leaf).
@@ -28,18 +57,8 @@ def _leaf_masked_mean(stack_w: jax.Array, stack_m: jax.Array, w: jax.Array,
     batched round engine (:func:`aggregate_sparse_stacked`) so the two are
     bit-identical.
     """
-    n = stack_w.shape[0]
-    if use_kernel and stack_w.ndim >= 2 and stack_w.size >= 1024:
-        from repro.kernels.sparse_agg import ops as agg_ops
-        num, den = agg_ops.masked_weighted_sum(stack_w, stack_m, w)
-    else:
-        wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
-        num = jnp.sum(stack_w.astype(jnp.float32) * stack_m * wts, axis=0)
-        den = jnp.sum(stack_m * wts, axis=0)
-    agg = num / jnp.maximum(den, _EPS)
-    if gprev is not None:
-        agg = jnp.where(den > _EPS, agg, gprev.astype(jnp.float32))
-    return agg.astype(stack_w.dtype)
+    num, den = leaf_masked_partials(stack_w, stack_m, w, use_kernel)
+    return finish_masked_mean(num, den, gprev, stack_w.dtype)
 
 
 def aggregate_sparse_stacked(

@@ -44,6 +44,25 @@ widths, any scheme)         GroupedRoundEngine): clients partitioned by
                             batched masks at native widths, one shared
                             scatter into the full-width Eq. (4) canvas,
                             local-width client updates
+homogeneous +               **sharded engine** (core/round_engine.py
+``mesh=``                   ShardedRoundEngine): the fleet's client axis
+                            shards over a 1-D ``clients`` device mesh;
+                            masks, wire encoding, Eq. (4) partials and
+                            Eq. (5)/(6) updates run per shard inside one
+                            ``shard_map`` and only the (num, den)
+                            reduction crosses devices — dense psum
+                            (default; bit-identical to the batched engine
+                            on a 1-device mesh) or the compacted top-K
+                            channel exchange of core/sparse_collective.py
+                            (``mesh_collective="sparse"``: per-link bytes
+                            scale with 1-D).  Ragged fleets with ``mesh=``
+                            ride the grouped engine's sharded step (per
+                            group member-axis shard_map + per-group psum).
+                            The allocation LP and the Eq. (12) clock run
+                            on gathered host telemetry exactly as the
+                            batched row above.  Excludes
+                            ``rounds_per_dispatch>1`` (the scan carries
+                            single-device state)
 track_epsilon, or           **reference loop**: the per-client Python loop,
 ``batched=False``           kept as the bit-exactness oracle (grouped and
                             batched engines are pinned against it) and for
@@ -130,8 +149,8 @@ import jax.numpy as jnp
 from repro import obs as obs_mod
 from repro.comm import codecs as wire_codecs
 from repro.comm import quantize as wire_quant
-from repro.comm.payload import (CommConfig, WireSpec, account_uplink,
-                                analytic_uplink_vector)
+from repro.comm.payload import (CommConfig, WireSpec, account_collective,
+                                account_uplink, analytic_uplink_vector)
 from repro.core import (aggregation, baselines, coverage as cov_mod,
                         round_engine, selection)
 from repro.core.allocation import (ALLOCATORS, AllocationResult,
@@ -179,6 +198,20 @@ class ProtocolConfig:
                                      # registry + host spans + JSONL run
                                      # log.  The default is INERT — runs
                                      # are bit-identical with it off.
+    mesh: object = None              # client-sharded SPMD execution
+                                     # (core/round_engine.py
+                                     # ShardedRoundEngine): an int device
+                                     # count, True (all local devices), or
+                                     # a jax.sharding.Mesh with a
+                                     # "clients" axis.  None = the
+                                     # single-device engines.
+    mesh_collective: str = "dense"   # cross-shard Eq. (4) reduction:
+                                     # "dense" psum (exact) or "sparse"
+                                     # compacted top-K channel exchange
+                                     # (core/sparse_collective.py)
+    mesh_keep_fraction: float = 1.0  # sparse collective buffer size:
+                                     # K = ceil(C * fraction) channels per
+                                     # shard on the wire
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -199,6 +232,17 @@ class ProtocolConfig:
                 "comm.overhead_aware_allocation is a host-side fixed point "
                 "around the numpy LP; it requires allocator='numpy' (and "
                 "therefore cannot ride rounds_per_dispatch > 1)")
+        if self.mesh is not None and self.rounds_per_dispatch > 1:
+            raise ValueError(
+                "mesh (client-sharded SPMD) and rounds_per_dispatch > 1 "
+                "are mutually exclusive: the multi-round lax.scan carries "
+                "single-device state")
+        if self.mesh_collective not in ("dense", "sparse"):
+            raise ValueError(f"mesh_collective must be 'dense' or "
+                             f"'sparse', got {self.mesh_collective!r}")
+        if not 0.0 < self.mesh_keep_fraction <= 1.0:
+            raise ValueError(f"mesh_keep_fraction must be in (0,1], got "
+                             f"{self.mesh_keep_fraction}")
 
 
 @dataclasses.dataclass
@@ -446,6 +490,52 @@ class _EngineExecutor(_RoundExecutor):
             return jax.device_get(trace)
 
 
+class _ShardedEngineExecutor(_EngineExecutor):
+    """Homogeneous fleets over a 1-D ``clients`` device mesh: one
+    ShardedRoundEngine ``shard_map`` step per round.
+
+    Identical driver flow to :class:`_EngineExecutor` (it inherits
+    ``run_round``); only the engine changes — each device owns N/P client
+    rows, and the Eq. (4) reduction is the single cross-device exchange
+    (dense psum, or the compacted top-K collective of
+    core/sparse_collective.py).  The persistent stacked state is placed on
+    its shards once, so per-round dispatches never re-shard host arrays;
+    with ``batched_train_fn`` the jitted trainer picks the sharding up
+    from its inputs and trains shard-local too (GSPMD propagation).
+    """
+
+    def __init__(self, server, local_train_fn, batched_train_fn):
+        super().__init__(server, local_train_fn, batched_train_fn)
+        from repro.launch.mesh import resolve_client_mesh  # launch -> core
+        cfg = server.cfg
+        mesh = resolve_client_mesh(cfg.mesh)
+        self.engine = round_engine.ShardedRoundEngine(
+            cfg.selection, cfg.comm, mesh=mesh,
+            collective=cfg.mesh_collective,
+            keep_fraction=cfg.mesh_keep_fraction)
+        n = server.tel.num_clients
+        if n % self.engine.num_shards == 0:
+            self.stacked = jax.device_put(self.stacked,
+                                          self.engine.shard_spec())
+        self._spec = WireSpec.from_params(server.global_params,
+                                          cfg.selection.channel_axis)
+
+    def run_round(self, t, rk, losses, d_used):
+        data = super().run_round(t, rk, losses, d_used)
+        # cross-device Eq. (4) bytes: the analytic model of this round's
+        # one collective, through the shared accounting hook (host-side
+        # arithmetic only — no extra device syncs)
+        account_collective(
+            self._spec, self.engine.num_shards,
+            mode=self.srv.cfg.mesh_collective,
+            k_fraction=self.srv.cfg.mesh_keep_fraction, obs=self.srv.obs)
+        return data
+
+    def run_chunk(self, t_start, count, losses):
+        raise ValueError("rounds_per_dispatch > 1 does not shard "
+                         "(ProtocolConfig rejects the combination)")
+
+
 class _GroupedEngineExecutor(_RoundExecutor):
     """Ragged fleets: one GroupedRoundEngine jit step per round.
 
@@ -470,9 +560,18 @@ class _GroupedEngineExecutor(_RoundExecutor):
                                     server.cr, cfg.selection.channel_axis)
             for g in groups
         ]
+        mesh = None
+        if cfg.mesh is not None:
+            from repro.launch.mesh import resolve_client_mesh
+            if cfg.mesh_collective != "dense":
+                raise ValueError(
+                    "sparse cross-device compaction rides the homogeneous "
+                    "sharded engine; ragged (grouped) fleets reduce with "
+                    "the dense psum collective")
+            mesh = resolve_client_mesh(cfg.mesh)
         self.fleet = round_engine.GroupedFleetState(
             groups, coverage, client_params, cfg.selection,
-            server.tel.num_clients, cfg.comm)
+            server.tel.num_clients, cfg.comm, mesh=mesh)
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
@@ -704,13 +803,25 @@ class FedDDServer:
             kind = "grouped"
         else:
             kind = "engine"
-        if batched_train_fn is not None and kind != "engine":
+        if self.cfg.mesh is not None:
+            if kind == "loop":
+                raise ValueError(
+                    "mesh (client-sharded SPMD) requires engine-backed "
+                    "execution; track_epsilon / batched=False route to "
+                    "the per-client reference loop, which does not shard")
+            if kind == "engine":
+                kind = "sharded"
+            # grouped: the GroupedRoundEngine itself shards each group's
+            # member axis when cfg.mesh is set (see _GroupedEngineExecutor)
+        if batched_train_fn is not None and kind not in ("engine",
+                                                         "sharded"):
             raise ValueError(
                 "batched_train_fn requires a homogeneous run with "
                 "batched=True and track_epsilon=False")
         return kind
 
     _EXECUTORS = {"engine": _EngineExecutor,
+                  "sharded": _ShardedEngineExecutor,
                   "grouped": _GroupedEngineExecutor,
                   "loop": _ReferenceLoopExecutor}
 

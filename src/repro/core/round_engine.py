@@ -56,15 +56,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Sequence, Tuple
+import math
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
 
 from repro.comm import codecs as wire_codecs
 from repro.comm import quantize as wire_quant
 from repro.comm.payload import CommConfig, WireSpec, analytic_wire_bytes
-from repro.core import aggregation, allocation, baselines, selection
+from repro.core import (aggregation, allocation, baselines, selection,
+                        sparse_collective)
 
 
 class RoundOutputs(NamedTuple):
@@ -76,6 +80,11 @@ class RoundOutputs(NamedTuple):
     wire_overhead: object = None   # (N,) int32 measured mask/scale bytes
                                    # (repro.comm), or None with the default
                                    # CommConfig (dense codec, no overhead)
+    collective_overflow: object = None  # () f32 channels that missed the
+                                        # compacted cross-device buffer
+                                        # (ShardedRoundEngine, sparse
+                                        # collective only; 0 certifies the
+                                        # compaction was lossless)
 
 
 class GroupBatch(NamedTuple):
@@ -498,14 +507,19 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
                     new_clients = _adopt_global(new_global, stacked_new)
                 else:
                     # t is traced inside the scan, so the Eq. (5)/(6)
-                    # choice is a select over both updates rather than
-                    # the sequential step's two static compiles.
+                    # choice is a ``lax.cond`` over the round index — one
+                    # branch executes per round (the sequential step's two
+                    # static compiles become the conditional's two arms).
+                    # A masked select would be wrong-by-ulp anyway: Eq. (5)
+                    # with an all-ones mask computes g*1 + l*0, and
+                    # -0.0 + 0.0 is +0.0, flipping signed zeros vs the
+                    # adopt-global copy.
                     full = (t % h) == 0
-                    eq6 = _adopt_global(new_global, stacked_new)
-                    eq5 = aggregation.client_update_sparse(
+                    new_clients = lax.cond(
+                        full,
+                        lambda g, l, m: _adopt_global(g, l),
+                        aggregation.client_update_sparse,
                         new_global, stacked_new, masks)
-                    new_clients = jax.tree_util.tree_map(
-                        lambda a, b: jnp.where(full, a, b), eq6, eq5)
             # Step 5: dropout-rate re-allocation for round t+1 (feddd).
             # The f32 clip mirrors the host dispatcher's float64 clip —
             # both feed the next round the same f32 rates.
@@ -550,6 +564,235 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
         return jax.lax.scan(body, state, ts)
 
     return jax.jit(run_rounds, donate_argnums=(0, 1) if donate else ())
+
+
+# ------------------------------------------- client-sharded engine (SPMD)
+
+def _leaf_sharded_reduce(num, den, gprev, dtype, *, channel_axis: int,
+                         collective: str, keep_fraction: float,
+                         axis_name: str):
+    """Cross-shard Eq. (4) reduction of one leaf's (num, den) partials.
+
+    ``collective="dense"``: a plain psum — exact, and on a 1-device mesh
+    the identity, which is what makes the sharded engine bit-identical to
+    the fused single-device step there.
+
+    ``collective="sparse"``: the channel axis moves to the front, the
+    denominator collapses to its (C,) channel profile (channel-structured
+    masks make den constant along every other axis), and the partials ride
+    :func:`repro.core.sparse_collective.sparse_numden_allreduce` — each
+    shard ships only its top-``K = ceil(C * keep_fraction)`` channels by
+    den mass plus int32 indices.  A channel with zero den has exactly-zero
+    num rows, so the compaction is lossless whenever a shard's nonzero
+    channel count fits the buffer; the returned overflow counts channels
+    that did not.
+
+    Returns (aggregated leaf, overflow scalar f32).
+    """
+    zero = jnp.float32(0.0)
+    ndim = num.ndim
+    ax = channel_axis % ndim if ndim else 0
+    c = num.shape[ax] if ndim else 1
+    if collective == "sparse" and ndim >= 1 and c > 1:
+        num_cm = jnp.moveaxis(num, ax, 0)
+        den_ch = jnp.moveaxis(den, ax, 0).reshape((c, -1))[:, 0]
+        k = max(1, min(c, int(math.ceil(c * keep_fraction))))
+        nnz = jnp.sum((den_ch > 0).astype(jnp.int32))
+        num_tot_cm, den_ch_tot, ovf = \
+            sparse_collective.sparse_numden_allreduce(
+                num_cm, den_ch, k, axis_name, k_local=nnz)
+        num_tot = jnp.moveaxis(num_tot_cm, 0, ax)
+        dshape = [1] * ndim
+        dshape[ax] = c
+        den_tot = jnp.broadcast_to(den_ch_tot.reshape(dshape), num.shape)
+        return (aggregation.finish_masked_mean(num_tot, den_tot, gprev,
+                                               dtype), ovf)
+    num_tot = jax.lax.psum(num, axis_name)
+    den_tot = jax.lax.psum(den, axis_name)
+    return (aggregation.finish_masked_mean(num_tot, den_tot, gprev, dtype),
+            zero)
+
+
+# One compiled fn per (mesh, selection config, round kind, comm,
+# collective) — module-level cache shared across engine instances, like
+# ``_round_step``'s jit cache.  Mesh objects hash on their device grid +
+# axis names, so re-constructed identical meshes share the entry.
+@functools.lru_cache(maxsize=64)
+def _sharded_step_fn(mesh, sel_cfg: selection.SelectionConfig,
+                     full_round: bool, dense_masks: bool,
+                     comm: CommConfig, collective: str,
+                     keep_fraction: float):
+    p_c = jax.sharding.PartitionSpec("clients")
+    p_r = jax.sharding.PartitionSpec()
+    axis = "clients"
+
+    def body(stacked_old, stacked_new, global_params, dropout, weights,
+             ids, rng):
+        n_s = ids.shape[0]
+        # Shard-local phases are the SAME traced arithmetic as
+        # ``_round_step``: masks + QDQ fold the GLOBAL fleet positions
+        # (``ids``), so every client's RNG stream is independent of how
+        # the fleet is sharded.
+        with jax.named_scope("feddd_encode_masks"):
+            if dense_masks:
+                masks, density = _dense_masks(stacked_new, n_s)
+            else:
+                masks, density = selection.build_masks_batched(
+                    stacked_old, stacked_new, dropout, config=sel_cfg,
+                    rng=rng, client_indices=ids)
+        with jax.named_scope("feddd_encode_wire"):
+            stacked_agg = wire_quant.quantize_dequantize_stacked(
+                stacked_new, rng, comm.qbits, client_indices=ids)
+            wire_oh = _wire_overhead(masks, stacked_new, comm,
+                                     sel_cfg.channel_axis, dense_masks)
+            if wire_oh is None:
+                wire_oh = jnp.zeros((n_s,), jnp.int32)
+        with jax.named_scope("feddd_aggregate"):
+            g_leaves, treedef = jax.tree_util.tree_flatten(global_params)
+            w_leaves = jax.tree_util.tree_leaves(stacked_agg)
+            m_leaves = jax.tree_util.tree_leaves(masks)
+            overflow = jnp.float32(0.0)
+            out_leaves = []
+            for sw, sm, gl in zip(w_leaves, m_leaves, g_leaves):
+                bm = jnp.broadcast_to(sm, sw.shape)
+                num, den = aggregation.leaf_masked_partials(
+                    sw, bm, weights, sel_cfg.use_kernel)
+                agg, ovf = _leaf_sharded_reduce(
+                    num, den, gl, sw.dtype,
+                    channel_axis=sel_cfg.channel_axis,
+                    collective=collective, keep_fraction=keep_fraction,
+                    axis_name=axis)
+                overflow = overflow + ovf
+                out_leaves.append(agg)
+            new_global = jax.tree_util.tree_unflatten(treedef, out_leaves)
+        with jax.named_scope("feddd_client_update"):
+            if full_round:
+                new_clients = _adopt_global(new_global, stacked_new)
+            else:
+                new_clients = aggregation.client_update_sparse(
+                    new_global, stacked_new, masks)
+        return new_clients, new_global, density, wire_oh, overflow
+
+    # check_rep=False: the replicated outputs (new_global, overflow) are
+    # replicated BY CONSTRUCTION — psum / identical all_gather+scatter on
+    # every shard — but the static replication checker cannot prove it
+    # through the scatter-adds of the sparse path.
+    fn = shard_map(body, mesh,
+                   in_specs=(p_c, p_c, p_r, p_c, p_c, p_c, p_r),
+                   out_specs=(p_c, p_r, p_c, p_c, p_r),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def _pad_rows(stacked, pad: int):
+    """Append ``pad`` zero rows along the leading client axis."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.concatenate(
+            [l, jnp.zeros((pad,) + l.shape[1:], l.dtype)]), stacked)
+
+
+@dataclasses.dataclass
+class ShardedRoundEngine:
+    """Client-sharded FedDD round over a 1-D ``clients`` device mesh.
+
+    The fleet's client axis shards over ``mesh``; per-shard mask building,
+    wire encoding, Eq. (4) partials, and Eq. (5)/(6) updates run inside
+    ONE ``shard_map`` so each device only ever touches its ``N/P`` rows.
+    The sole cross-device traffic is the Eq. (4) (num, den) reduction —
+    dense psum by default, or the compacted top-K channel exchange of
+    ``core/sparse_collective.py`` (``collective="sparse"``), whose
+    per-link bytes scale with (1-D).
+
+    Contracts (tests/test_sharded_engine.py):
+      * on a 1-device mesh with ``collective="dense"`` the step is
+        BIT-IDENTICAL to :class:`BatchedRoundEngine` — same RNG folds
+        (global fleet ids), same partial sums, psum = identity;
+      * on multi-device meshes parity is allclose: psum adds per-shard
+        partial sums in a different order than the single flat (N,)
+        reduction, so the last float32 bit is reduction-order dependent
+        (the standard SPMD ulp caveat);
+      * ``collective="sparse"`` additionally reports ``overflow`` — the
+        psum of channels whose den mass did not fit a shard's static
+        buffer; zero overflow certifies the compacted reduction carried
+        exactly the dense psum's mass.
+
+    Clients need not divide the mesh: the trailing shard zero-pads with
+    weight-0 rows (excluded from Eq. (4) by the same rule as
+    non-participants) and the padded outputs are sliced off.
+    """
+
+    selection_cfg: selection.SelectionConfig = dataclasses.field(
+        default_factory=selection.SelectionConfig)
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    mesh: object = None        # jax.sharding.Mesh with a "clients" axis
+    collective: str = "dense"  # dense psum | sparse compacted top-K
+    keep_fraction: float = 1.0  # sparse buffer: K = ceil(C * fraction)
+
+    def __post_init__(self):
+        if self.mesh is None:
+            raise ValueError("ShardedRoundEngine requires a mesh (see "
+                             "repro.launch.mesh.make_client_mesh)")
+        if "clients" not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh must carry a 'clients' axis; got "
+                f"{self.mesh.axis_names}")
+        if self.collective not in ("dense", "sparse"):
+            raise ValueError(f"collective must be 'dense' or 'sparse', "
+                             f"got {self.collective!r}")
+        if not 0.0 < self.keep_fraction <= 1.0:
+            raise ValueError(f"keep_fraction must be in (0,1], got "
+                             f"{self.keep_fraction}")
+
+    @property
+    def num_shards(self) -> int:
+        return self.mesh.devices.size
+
+    def step(self, stacked_old, stacked_new, global_params,
+             dropout_rates, weights, rng, *, full_round: bool,
+             dense_masks: bool = False, stacked_upload=None,
+             delivered=None) -> RoundOutputs:
+        """One sharded round step; same signature and outputs as
+        :meth:`BatchedRoundEngine.step` (wire overhead is None with the
+        default comm, and ``collective_overflow`` reports the sparse
+        collective's missed-channel count)."""
+        if stacked_upload is not None or delivered is not None:
+            raise NotImplementedError(
+                "upload overrides / delivered prefixes are single-device "
+                "engine features (fault corruption and deadline partial "
+                "aggregation do not shard)")
+        n = jax.tree_util.tree_leaves(stacked_new)[0].shape[0]
+        p = self.num_shards
+        pad = (-n) % p
+        d = jnp.asarray(dropout_rates, jnp.float32)
+        w = jnp.asarray(weights, jnp.float32)
+        so, sn = stacked_old, stacked_new
+        if pad:
+            so = _pad_rows(so, pad)
+            sn = _pad_rows(sn, pad)
+            d = jnp.concatenate([d, jnp.zeros((pad,), jnp.float32)])
+            w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)])
+        ids = jnp.arange(n + pad, dtype=jnp.int32)
+        fn = _sharded_step_fn(self.mesh, self.selection_cfg,
+                              bool(full_round), bool(dense_masks),
+                              self.comm, self.collective,
+                              float(self.keep_fraction))
+        new_clients, new_global, density, wire_oh, overflow = fn(
+            so, sn, global_params, d, w, ids, rng)
+        if pad:
+            new_clients = jax.tree_util.tree_map(lambda l: l[:n],
+                                                 new_clients)
+            density = density[:n]
+            wire_oh = wire_oh[:n]
+        return RoundOutputs(new_clients, new_global, density,
+                            None if self.comm.is_default else wire_oh,
+                            overflow)
+
+    def shard_spec(self):
+        """NamedSharding that places a client-stacked pytree's rows on
+        their shards (device_put the persistent stacked state with this so
+        jit dispatches never re-shard host arrays)."""
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec("clients"))
 
 
 # --------------------------------------------------- shape-grouped engine
@@ -639,6 +882,121 @@ def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
                                densities, wire_oh)
 
 
+# One compiled grouped-sharded fn per (mesh, selection config, round kind,
+# comm, shape census) — jit keyed like ``_grouped_round_step`` plus the
+# static mesh.
+@functools.partial(jax.jit,
+                   static_argnames=("sel_cfg", "full_round", "dense_masks",
+                                    "comm", "mesh"))
+def _sharded_grouped_round_step(groups: Tuple[GroupBatch, ...],
+                                global_params, weights_ext, rng, *,
+                                sel_cfg: selection.SelectionConfig,
+                                full_round: bool,
+                                dense_masks: bool = False,
+                                comm: CommConfig = CommConfig(),
+                                mesh=None) -> GroupedRoundOutputs:
+    """Grouped round with every group's MEMBER axis sharded over a 1-D
+    ``clients`` mesh.
+
+    Per group, one ``shard_map`` runs the shard-local phases (masks at
+    native widths, wire encoding, Eq. (4) partials zero-padded to global
+    widths) and psums the group's (num, den); the group partials then add
+    across groups — Eq. (4)'s sums are linear, so group-then-total
+    summation is exact up to float reduction order — before one shared
+    :func:`repro.core.aggregation.finish_masked_mean`.  Eq. (5)/(6)
+    updates stay row-parallel GSPMD ops over the sharded member stacks.
+
+    ``weights_ext`` is the (N+1,) fleet weight vector with a ZERO sentinel
+    at row N: callers pad each group's member axis to a mesh multiple with
+    zero rows carrying canvas id N, so padded rows weigh nothing and their
+    densities land on the sliced-off sentinel row.  Returns canvases of
+    width N (the sentinel row is sliced before returning).
+    """
+    p_c = jax.sharding.PartitionSpec("clients")
+    p_r = jax.sharding.PartitionSpec()
+    n1 = weights_ext.shape[0]                # N + 1 (sentinel)
+    g_leaves, treedef = jax.tree_util.tree_flatten(global_params)
+    global_shapes = tuple(l.shape for l in g_leaves)     # static
+    num_tot = [jnp.zeros(s, jnp.float32) for s in global_shapes]
+    den_tot = [jnp.zeros(s, jnp.float32) for s in global_shapes]
+    densities = jnp.zeros((n1,), jnp.float32)
+    wire_oh = None if comm.is_default else jnp.zeros((n1,), jnp.int32)
+    staged = []                              # (group, masks, dens, oh)
+
+    for g in groups:
+        def body(old, new, dropout, w_rows, ids, cov, rng):
+            m = ids.shape[0]
+            with jax.named_scope("feddd_encode_masks"):
+                if dense_masks:
+                    masks = jax.tree_util.tree_map(
+                        lambda l: jnp.ones((m,) + (1,) * (l.ndim - 1),
+                                           l.dtype), new)
+                    dens = jnp.ones((m,), jnp.float32)
+                else:
+                    masks, dens = selection.build_masks_batched(
+                        old, new, dropout, config=sel_cfg, rng=rng,
+                        coverage=cov, client_indices=ids)
+            with jax.named_scope("feddd_encode_wire"):
+                agg = wire_quant.quantize_dequantize_stacked(
+                    new, rng, comm.qbits, client_indices=ids)
+                oh = _wire_overhead(masks, new, comm,
+                                    sel_cfg.channel_axis, dense_masks)
+                if oh is None:
+                    oh = jnp.zeros((m,), jnp.int32)
+            with jax.named_scope("feddd_aggregate"):
+                nums, dens_l = [], []
+                for sw, sm, gshape in zip(
+                        jax.tree_util.tree_leaves(agg),
+                        jax.tree_util.tree_leaves(masks), global_shapes):
+                    bm = jnp.broadcast_to(sm, sw.shape)
+                    num, den = aggregation.leaf_masked_partials(
+                        sw, bm, w_rows, sel_cfg.use_kernel)
+                    pads = [(0, gs - ls)
+                            for gs, ls in zip(gshape, num.shape)]
+                    num = jnp.pad(num, pads)
+                    den = jnp.pad(den, pads)
+                    nums.append(jax.lax.psum(num, "clients"))
+                    dens_l.append(jax.lax.psum(den, "clients"))
+            return masks, dens, oh, tuple(nums), tuple(dens_l)
+
+        w_rows = weights_ext[g.indices]
+        masks, dens, oh, nums, dens_l = shard_map(
+            body, mesh,
+            in_specs=(p_c, p_c, p_c, p_c, p_c, p_r, p_r),
+            out_specs=(p_c, p_c, p_c, p_r, p_r),
+            check_rep=False)(g.stacked_old, g.stacked_new,
+                             g.dropout, w_rows, g.indices, g.coverage,
+                             rng)
+        num_tot = [a + b for a, b in zip(num_tot, nums)]
+        den_tot = [a + b for a, b in zip(den_tot, dens_l)]
+        staged.append((g, masks, dens, oh))
+
+    out_leaves = [aggregation.finish_masked_mean(num, den, gl, gl.dtype)
+                  for num, den, gl in zip(num_tot, den_tot, g_leaves)]
+    new_global = jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    with jax.named_scope("feddd_client_update"):
+        new_group_params = []
+        for g, masks, dens, oh in staged:
+            densities = densities.at[g.indices].set(dens)
+            if wire_oh is not None:
+                wire_oh = wire_oh.at[g.indices].set(oh)
+            g_local = slice_pytree(new_global,
+                                   unstack_pytree(g.stacked_new, 1)[0])
+            if full_round:
+                upd = jax.tree_util.tree_map(
+                    lambda gl, l: jnp.broadcast_to(gl, l.shape)
+                    .astype(l.dtype),
+                    g_local, g.stacked_new)
+            else:
+                upd = aggregation.client_update_sparse(
+                    g_local, g.stacked_new, masks)
+            new_group_params.append(upd)
+    return GroupedRoundOutputs(tuple(new_group_params), new_global,
+                               densities[:-1],
+                               None if wire_oh is None else wire_oh[:-1])
+
+
 @dataclasses.dataclass
 class GroupedRoundEngine:
     """One-jit-call FedDD round over a shape-grouped ragged fleet.
@@ -661,11 +1019,27 @@ class GroupedRoundEngine:
     once.  Exclusion and staleness enter exactly as in the homogeneous
     engine: per-client weights on the stacked Eq. (4) aggregation, indexed
     by canvas row.
+
+    With ``mesh`` (a 1-D ``clients`` device mesh) each group's MEMBER axis
+    shards over the devices: shard-local masks/partials per group inside
+    ``shard_map``, per-group psum of the Eq. (4) (num, den), group partials
+    summed before one shared division (see
+    :func:`_sharded_grouped_round_step`).  Parity with the single-device
+    grouped step is allclose (per-group-then-total summation reorders the
+    float reduction); clients need not divide the mesh — padded member
+    rows carry weight 0 via the sentinel canvas row.
     """
 
     selection_cfg: selection.SelectionConfig = dataclasses.field(
         default_factory=selection.SelectionConfig)
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    mesh: object = None        # optional jax.sharding.Mesh ("clients")
+
+    def __post_init__(self):
+        if self.mesh is not None and "clients" not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh must carry a 'clients' axis; got "
+                f"{self.mesh.axis_names}")
 
     def step(self, groups: Sequence[GroupBatch], global_params,
              weights, rng, *, full_round: bool,
@@ -684,11 +1058,53 @@ class GroupedRoundEngine:
           rng: the ROUND key (the per-client loop's split).
           full_round / dense_masks: as in :meth:`BatchedRoundEngine.step`.
         """
-        return _grouped_round_step(
-            tuple(groups), global_params,
-            jnp.asarray(weights, jnp.float32), rng,
+        if self.mesh is None:
+            return _grouped_round_step(
+                tuple(groups), global_params,
+                jnp.asarray(weights, jnp.float32), rng,
+                sel_cfg=self.selection_cfg, full_round=bool(full_round),
+                dense_masks=bool(dense_masks), comm=self.comm)
+        return self._step_sharded(groups, global_params, weights, rng,
+                                  full_round=full_round,
+                                  dense_masks=dense_masks)
+
+    def _step_sharded(self, groups, global_params, weights, rng, *,
+                      full_round: bool, dense_masks: bool
+                      ) -> GroupedRoundOutputs:
+        p = self.mesh.devices.size
+        w = jnp.asarray(weights, jnp.float32)
+        n = w.shape[0]
+        w_ext = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+        padded, sizes = [], []
+        for g in groups:
+            n_g = jax.tree_util.tree_leaves(g.stacked_new)[0].shape[0]
+            sizes.append(n_g)
+            pad = (-n_g) % p
+            idx = jnp.asarray(g.indices, jnp.int32)
+            drop = jnp.asarray(g.dropout, jnp.float32)
+            if pad:
+                g = GroupBatch(
+                    indices=jnp.concatenate(
+                        [idx, jnp.full((pad,), n, jnp.int32)]),
+                    stacked_old=_pad_rows(g.stacked_old, pad),
+                    stacked_new=_pad_rows(g.stacked_new, pad),
+                    coverage=g.coverage,
+                    dropout=jnp.concatenate(
+                        [drop, jnp.zeros((pad,), jnp.float32)]))
+            else:
+                g = GroupBatch(idx, g.stacked_old, g.stacked_new,
+                               g.coverage, drop)
+            padded.append(g)
+        out = _sharded_grouped_round_step(
+            tuple(padded), global_params, w_ext, rng,
             sel_cfg=self.selection_cfg, full_round=bool(full_round),
-            dense_masks=bool(dense_masks), comm=self.comm)
+            dense_masks=bool(dense_masks), comm=self.comm, mesh=self.mesh)
+        group_params = tuple(
+            (jax.tree_util.tree_map(lambda l: l[:n_g], gp)
+             if jax.tree_util.tree_leaves(gp)[0].shape[0] != n_g else gp)
+            for gp, n_g in zip(out.group_client_params, sizes))
+        return GroupedRoundOutputs(group_params, out.global_params,
+                                   out.densities, out.wire_overhead)
 
 
 def train_grouped(groups, group_stacked, group_coverage, local_train_fn,
@@ -745,8 +1161,9 @@ class GroupedFleetState:
 
     def __init__(self, groups, group_coverage, client_params,
                  selection_cfg: selection.SelectionConfig,
-                 num_clients: int, comm: CommConfig = CommConfig()):
-        self.engine = GroupedRoundEngine(selection_cfg, comm)
+                 num_clients: int, comm: CommConfig = CommConfig(),
+                 mesh=None):
+        self.engine = GroupedRoundEngine(selection_cfg, comm, mesh)
         self.groups = groups
         self.coverage = group_coverage
         self.num_clients = num_clients

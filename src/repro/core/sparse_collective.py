@@ -27,6 +27,7 @@ clients = data-parallel groups).
 
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -107,6 +108,86 @@ def sparse_allgather_mean(local: jax.Array, scores: jax.Array, k: int,
     agg = num / jnp.maximum(cnt, 1e-12).reshape(wshape)
     keep_local = (cnt <= 1e-12).reshape(wshape)
     return jnp.where(keep_local, local, agg.astype(local.dtype)).astype(local.dtype)
+
+
+def sparse_numden_allreduce(num: jax.Array, den_ch: jax.Array, k: int,
+                            axis_name: str,
+                            k_local: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Eq. (4)-faithful compacted reduction of per-shard (num, den) partials.
+
+    The round engines reduce Eq. (4) as numerator/denominator PARTIALS:
+    ``num = Σ_n w_n·m_n·Ŵ_n`` (channel-major, (C, ...)) and the channel
+    denominator profile ``den_ch[c] = Σ_n w_n·m_n[c]`` ((C,)).  This is the
+    sibling of :func:`sparse_allgather_mean` for that pair: instead of
+    dividing by a contribution COUNT it returns the globally-reduced
+    (num, den) so the caller can apply the paper's weighted division and
+    ``prev_global`` fill exactly as the single-device path does.
+
+    Exactness: a channel with ``den_ch[c] == 0`` has every local mask row
+    zero there, so its ``num[c]`` rows are exactly zero — compacting the
+    top-``k`` channels by ``den_ch`` loses NOTHING whenever the shard's
+    nonzero-channel count fits the buffer.  The returned ``overflow``
+    (psum of ``max(0, nnz - k)`` over shards) counts channels that did not
+    fit; zero overflow certifies the compacted reduction equals the dense
+    psum bit-for-bit up to reduction order.
+
+    Args:
+      num: (C, ...) local numerator partial, channel-major, float32.
+      den_ch: (C,) local denominator channel profile, float32.
+      k: static channels per shard on the wire (SPMD-static buffer size).
+      axis_name: the 1-D clients mesh axis.
+      k_local: optional traced per-shard keep count <= k (differential
+        dropout riding the static buffer: rows beyond it are zeroed).
+    Returns (num_total (C, ...), den_total (C,), overflow scalar f32).
+    """
+    c = num.shape[0]
+    k = max(1, min(int(k), c))
+    nnz = jnp.sum((den_ch > 0).astype(jnp.float32))
+    overflow = lax.psum(jnp.maximum(nnz - k, 0.0), axis_name)
+    compact, idx = compact_topk(num, den_ch, k)
+    den_rows = jnp.take(den_ch, idx)
+    if k_local is not None:
+        live = (jnp.arange(k) < k_local).astype(jnp.float32)
+        compact = compact * live.reshape((k,) + (1,) * (compact.ndim - 1))
+        den_rows = den_rows * live
+    # The only cross-shard traffic: compacted partials + indices + den rows.
+    all_compact = lax.all_gather(compact, axis_name)          # (P, k, ...)
+    all_idx = lax.all_gather(idx, axis_name)                  # (P, k)
+    all_den = lax.all_gather(den_rows, axis_name)             # (P, k)
+    p = all_idx.shape[0]
+    flat_vals = all_compact.reshape((p * k,) + compact.shape[1:])
+    flat_idx = all_idx.reshape(p * k)
+    flat_den = all_den.reshape(p * k)
+    num_tot = jnp.zeros(num.shape, jnp.float32).at[flat_idx].add(
+        flat_vals.astype(jnp.float32))
+    den_tot = jnp.zeros((c,), jnp.float32).at[flat_idx].add(flat_den)
+    return num_tot, den_tot, overflow
+
+
+def make_federated_numden_allreduce(keep_fraction: float, axis_name: str):
+    """Returns f(num, den_ch, k_local) -> (num_tot, den_tot, overflow),
+    the Eq. (4) partial reducer over the clients axis.
+
+    ``keep_fraction = 1`` routes to a dense psum (exact, zero overflow);
+    ``keep_fraction < 1`` sizes the compacted buffer at
+    ``K = max(1, ceil(C * keep_fraction))`` channels per shard and uses
+    :func:`sparse_numden_allreduce`."""
+    if not 0.0 < keep_fraction <= 1.0:
+        raise ValueError(
+            f"keep_fraction must be in (0,1], got {keep_fraction}")
+
+    def _f(num, den_ch, k_local=None):
+        if keep_fraction >= 1.0:
+            num_tot = lax.psum(num.astype(jnp.float32), axis_name)
+            den_tot = lax.psum(den_ch.astype(jnp.float32), axis_name)
+            return num_tot, den_tot, jnp.float32(0.0)
+        c = num.shape[0]
+        k = max(1, min(c, int(math.ceil(c * keep_fraction))))
+        return sparse_numden_allreduce(num, den_ch, k, axis_name,
+                                       k_local=k_local)
+
+    return _f
 
 
 def dense_allreduce_mean(local: jax.Array, axis_name: str,

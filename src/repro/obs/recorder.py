@@ -97,6 +97,9 @@ class NullRecorder:
     def uplink(self, uploaded_bytes: float, wire_bytes: float) -> None:
         pass
 
+    def collective(self, dense_bytes: float, wire_bytes: float) -> None:
+        pass
+
     def round(self, record, *, path: str = "", scheme: str = "",
               client_times=None) -> None:
         pass
@@ -206,6 +209,21 @@ class Recorder:
         self.registry.inc("feddd_uploaded_bytes_total",
                           float(uploaded_bytes))
         self.registry.inc("feddd_wire_bytes_total", float(wire_bytes))
+
+    def collective(self, dense_bytes: float, wire_bytes: float) -> None:
+        """Cross-device Eq. (4) reduction bytes, fed from THE shared
+        reduction (repro.comm.payload.account_collective).  ``dense_bytes``
+        is the dense-psum equivalent, ``wire_bytes`` what the configured
+        collective actually moved; the ``feddd_cross_device_bytes`` gauge
+        tracks the latest round so dashboards see the live (1-D) per-link
+        saving next to the cumulative counters."""
+        self.registry.inc("feddd_collective_dense_bytes_total",
+                          float(dense_bytes))
+        self.registry.inc("feddd_collective_bytes_total",
+                          float(wire_bytes))
+        self.registry.set("feddd_cross_device_bytes", float(wire_bytes))
+        self.event("collective", dense=float(dense_bytes),
+                   wire=float(wire_bytes))
 
     def round(self, record, *, path: str = "", scheme: str = "",
               client_times=None) -> None:

@@ -87,7 +87,8 @@ def _phase_lines(events: List[Dict]) -> List[str]:
     return lines
 
 
-def _byte_lines(rounds: List[Dict]) -> List[str]:
+def _byte_lines(rounds: List[Dict],
+                events: Optional[List[Dict]] = None) -> List[str]:
     lines = _section("Byte economy")
     if not rounds:
         lines.append("  no round events")
@@ -104,6 +105,19 @@ def _byte_lines(rounds: List[Dict]) -> List[str]:
         lines.append(f"  wire {word}:          {abs(delta):.1f}%")
     lines.append(f"  abandoned (late/aborted): {_fmt_bytes(aband)}")
     lines.append(f"  quarantined (screened):   {_fmt_bytes(quar)}")
+    # client-sharded runs: cross-device Eq. (4) collective bytes
+    # (repro.comm.payload.account_collective) — the per-link (1-D)
+    # saving of the compacted top-K exchange vs a dense psum
+    coll = [e for e in (events or [])
+            if e.get("event") == "collective"]
+    if coll:
+        dense = sum(float(e.get("dense", 0.0)) for e in coll)
+        moved = sum(float(e.get("wire", 0.0)) for e in coll)
+        lines.append(f"  cross-device (collective): {_fmt_bytes(moved)}"
+                     f" of {_fmt_bytes(dense)} dense-psum equivalent")
+        if dense > 0:
+            lines.append(f"  per-link savings:         "
+                         f"{100.0 * (1.0 - moved / dense):.1f}%")
     return lines
 
 
@@ -171,7 +185,7 @@ def render(events: List[Dict], top: int = 5) -> str:
     lines: List[str] = []
     lines += _header_lines(events)
     lines += _phase_lines(events)
-    lines += _byte_lines(rounds)
+    lines += _byte_lines(rounds, events)
     lines += _failure_lines(events, rounds)
     lines += _straggler_lines(rounds, top)
     return "\n".join(lines).lstrip("\n") + "\n"

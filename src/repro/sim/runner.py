@@ -52,8 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs as obs_mod
-from repro.comm.payload import (WireSpec, account_uplink,
-                                analytic_uplink_vector,
+from repro.comm.payload import (WireSpec, account_collective,
+                                account_uplink, analytic_uplink_vector,
                                 delivered_prefix_counts)
 from repro.core import baselines, coverage as cov_mod, round_engine
 from repro.core.allocation import (ClientTelemetry,
@@ -154,9 +154,15 @@ class _StackedWaveFleet:
 
     def __init__(self, runner: "SimRunner"):
         self.runner = runner
-        self.engine = round_engine.BatchedRoundEngine(runner.cfg.selection,
-                                                      runner.cfg.comm)
+        # runner.engine is the BatchedRoundEngine, or — under cfg.mesh —
+        # the client-sharded ShardedRoundEngine (same step signature)
+        self.engine = runner.engine
         self.stacked = round_engine.stack_pytrees(runner.client_params)
+        n = runner.tel.num_clients
+        if getattr(runner, "mesh", None) is not None and \
+                n % runner.engine.num_shards == 0:
+            self.stacked = jax.device_put(self.stacked,
+                                          runner.engine.shard_spec())
         self._new = None
 
     def train(self, local_train_fn, rk, part, losses, d_used) -> List:
@@ -225,7 +231,8 @@ class _GroupedWaveFleet:
         self.runner = runner
         self.state = round_engine.GroupedFleetState(
             runner.groups, runner.group_coverage, runner.client_params,
-            runner.cfg.selection, runner.tel.num_clients, runner.cfg.comm)
+            runner.cfg.selection, runner.tel.num_clients, runner.cfg.comm,
+            mesh=getattr(runner, "mesh", None))
 
     def train(self, local_train_fn, rk, part, losses, d_used) -> List:
         return self.state.train(local_train_fn, rk, part, losses, d_used,
@@ -315,16 +322,50 @@ class SimRunner:
         for g, cov in zip(self.groups, self.group_coverage):
             for i in g.indices:
                 self._client_coverage[i] = cov
-        self.engine = round_engine.BatchedRoundEngine(cfg.selection,
-                                                      cfg.comm)
-        self.grouped_engine = round_engine.GroupedRoundEngine(cfg.selection,
-                                                              cfg.comm)
+        # client-sharded SPMD (cfg.mesh): the wave/async fleets run the
+        # sharded engines over a 1-D "clients" device mesh — same routing
+        # as the protocol executors (core/protocol.py routing table)
+        self.mesh = None
+        if cfg.mesh is not None:
+            from repro.launch.mesh import resolve_client_mesh
+            self.mesh = resolve_client_mesh(cfg.mesh)
+            if faults is not None and faults.may_corrupt:
+                raise ValueError(
+                    "payload corruption rewrites single rows of the "
+                    "stacked upload on the host; client-sharded (mesh) "
+                    "fleets keep rows on their shard — run corruption "
+                    "faults without a mesh")
+            if isinstance(self.policy, DeadlinePolicy) and \
+                    self.policy.partial:
+                raise ValueError(
+                    "partial aggregation of delivered prefixes is a "
+                    "single-device engine feature; run deadline "
+                    "partial=True without a mesh")
+        if self.mesh is not None and not self.heterogeneous:
+            self.engine = round_engine.ShardedRoundEngine(
+                cfg.selection, cfg.comm, mesh=self.mesh,
+                collective=cfg.mesh_collective,
+                keep_fraction=cfg.mesh_keep_fraction)
+        else:
+            if self.mesh is not None and cfg.mesh_collective != "dense":
+                raise ValueError(
+                    "sparse cross-device compaction rides the homogeneous "
+                    "sharded engine; ragged (grouped) fleets reduce with "
+                    "the dense psum collective")
+            self.engine = round_engine.BatchedRoundEngine(cfg.selection,
+                                                          cfg.comm)
+        self.grouped_engine = round_engine.GroupedRoundEngine(
+            cfg.selection, cfg.comm, self.mesh)
         # per-client wire specs: the codec byte model the event timeline
         # charges on the uplink leg (repro.comm)
         self.wire_specs = [
             WireSpec.from_params(p, cfg.selection.channel_axis)
             for p in self.client_params
         ]
+        # global-model spec: the cross-device collective byte model
+        # (account_collective) under cfg.mesh
+        self._global_spec = WireSpec.from_params(
+            global_params, cfg.selection.channel_axis)
         self.faults = faults
         if faults is not None and isinstance(self.policy, AsyncPolicy):
             raise ValueError(
@@ -795,6 +836,11 @@ class SimRunner:
             wire += partial_bytes
             if fr is not None:
                 wire += float(np.sum(fr.extra_bytes[valid]))
+            if self.mesh is not None and not self.heterogeneous:
+                account_collective(
+                    self._global_spec, self.engine.num_shards,
+                    mode=cfg.mesh_collective,
+                    k_fraction=cfg.mesh_keep_fraction, obs=obs)
 
             # --- allocation for round t+1, from what the server observed
             if cfg.scheme == "feddd":
