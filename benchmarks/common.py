@@ -159,6 +159,7 @@ def run_sim_experiment(
     eval_every: int = 1,
     hetero_specs: Optional[List] = None,
     faults=None,
+    robust_agg: str = "mean",
 ):
     """The same experiment, time axis owned by the event-driven simulator
     (repro/sim): ``policy`` in {sync, deadline, retry, async}, ``network``
@@ -178,7 +179,7 @@ def run_sim_experiment(
     return run_sim(scheme, global_params, tel, ltf, ef, sim=sim,
                    network=net, client_params=clients, rounds=rounds,
                    a_server=a_server, d_max=d_max, delta=delta, h=h,
-                   seed=seed, faults=faults)
+                   seed=seed, faults=faults, robust_agg=robust_agg)
 
 
 # One registry per benchmark process: every csv_row feeds it, and

@@ -1,4 +1,5 @@
-"""Time-to-accuracy under injected faults: scheme x policy x fault-rate grid.
+"""Time-to-accuracy under injected faults: scheme x policy x fault-rate grid,
+plus the survivability axes (correlated cell outages, robust aggregation).
 
 The straggler grid (benchmarks/straggler_policies.py) asks which serving
 discipline wins when links merely FADE.  This grid injects actual failures
@@ -9,11 +10,23 @@ does the retry/timeout discipline buy accuracy per simulated second over
 plain sync, and does FedDD's survivor-renormalized Eq. (4) aggregation
 hold its time-to-accuracy edge when a fraction of the fleet keeps dying?
 
+Two survivability axes ride on top of the independent-fault grid:
+
+* correlated outages (repro/sim/outages.py) — a two-state Markov cell
+  process takes whole groups of clients down at once (cells x severity),
+  stressing the survivor-only LP re-solve far harder than independent
+  churn at the same marginal rate;
+* robust aggregation (``robust_agg``) — the trimmed-mean engine variant
+  vs the plain masked mean under wire corruption, measuring what the
+  Byzantine-robust fusion costs (or buys) in time-to-accuracy.
+
 Grid (reduced mode):
   scheme      feddd + a fedavg reference
   policy      sync (wait-for-survivors) and retry (timeout serving)
   fault rate  0.0 / 0.15 / 0.35 — crash_rate = r/2, loss_rate = r,
               corrupt_rate = r/4, quorum = 1/4 of the fleet
+  outages     (cells, p_out) in (2, 0.3) / (4, 0.15), feddd x sync
+  agg         mean vs trimmed:0.25 at the non-zero fault rates
 
 Headline column: simulated seconds to 0.75 test accuracy on the fault-
 extended Eq. (12) clock (retransmitted chunks and backoff push arrivals
@@ -37,22 +50,31 @@ import numpy as np  # noqa: E402
 
 from benchmarks.common import (csv_row, run_sim_experiment,  # noqa: E402
                                timed, write_table)
-from repro.sim import FaultConfig, RandomFaults  # noqa: E402
+from repro.sim import (CellOutageModel, FaultConfig,  # noqa: E402
+                       OutageConfig, RandomFaults)
 
 TARGET_ACC = 0.75
 POLICIES = ("sync", "retry")
+TRIMMED = "trimmed:0.25"
 
 
 def _fmt(x) -> str:
     return "fail" if x is None else f"{x:.1f}"
 
 
-def _faults(rate: float, n_clients: int, seed: int):
-    if rate == 0.0:
-        return None          # fault-free reference: bit-identical baseline
-    return RandomFaults(FaultConfig(
-        crash_rate=rate / 2, loss_rate=rate, corrupt_rate=rate / 4,
-        quorum=max(1, n_clients // 4), seed=seed))
+def _faults(rate: float, n_clients: int, seed: int,
+            cells: int = 0, p_out: float = 0.0):
+    inner = None
+    if rate > 0.0:
+        inner = RandomFaults(FaultConfig(
+            crash_rate=rate / 2, loss_rate=rate, corrupt_rate=rate / 4,
+            quorum=max(1, n_clients // 4), seed=seed))
+    if cells > 0:
+        return CellOutageModel(
+            n_clients,
+            OutageConfig(cells=cells, p_out=p_out, p_back=0.5, seed=seed),
+            inner=inner)
+    return inner            # rate 0, no cells: bit-identical baseline
 
 
 def run(full: bool = False, out_dir: Path | None = None):
@@ -60,39 +82,59 @@ def run(full: bool = False, out_dir: Path | None = None):
     clients = 20 if full else 8
     rates = (0.0, 0.1, 0.25, 0.5) if full else (0.0, 0.15, 0.35)
     schemes = ("feddd", "fedavg")
+    # correlated-outage axis: cell count x outage severity, feddd x sync
+    # on top of a moderate independent-fault floor
+    outage_rate = rates[1]
+    outages = (((2, 0.15), (2, 0.3), (4, 0.15), (4, 0.3)) if full
+               else ((2, 0.3), (4, 0.15)))
     rows = []
-    table = ["scheme,policy,fault_rate,t2a_sim_s,final_acc,final_sim_s,"
-             "mean_survivors,skipped_rounds,retries,"
-             "abandoned_kb,quarantined_kb"]
+    table = ["scheme,policy,fault_rate,cells,p_out,agg,t2a_sim_s,"
+             "final_acc,final_sim_s,mean_survivors,skipped_rounds,"
+             "retries,abandoned_kb,quarantined_kb"]
+
+    def one(scheme, policy, rate, cells=0, p_out=0.0, agg="mean"):
+        res, wall = timed(lambda: run_sim_experiment(
+            "mnist", "noniid_b", scheme, policy=policy,
+            network="static", num_clients=clients, rounds=rounds,
+            num_train=2000, num_test=500, seed=0,
+            faults=_faults(rate, clients, seed=17,
+                           cells=cells, p_out=p_out),
+            robust_agg=agg))
+        t2a = res.time_to_accuracy(TARGET_ACC)
+        final = res.history[-1]
+        acc = (final.metrics or {}).get("accuracy", float("nan"))
+        surv = float(np.mean([r.survivors for r in res.history]))
+        skipped = sum(r.skipped for r in res.history)
+        retries = sum(r.retries for r in res.history)
+        ab_kb = sum(r.abandoned_bytes for r in res.history) / 1e3
+        q_kb = sum(r.quarantined_bytes for r in res.history) / 1e3
+        tag = "" if agg == "mean" else f"_{agg.split(':')[0]}"
+        cell_tag = f"_c{cells}o{p_out:g}" if cells else ""
+        name = f"fault_{scheme}_{policy}_r{rate:g}{cell_tag}{tag}"
+        rows.append(csv_row(
+            name, wall,
+            f"t2a{int(TARGET_ACC * 100)}={_fmt(t2a)};"
+            f"final_acc={acc:.3f};skipped={skipped};"
+            f"retries={retries}"))
+        table.append(
+            f"{scheme},{policy},{rate:g},{cells},{p_out:g},{agg},"
+            f"{_fmt(t2a)},{acc:.4f},{final.sim_time:.1f},{surv:.2f},"
+            f"{skipped},{retries},{ab_kb:.1f},{q_kb:.1f}")
+
     for scheme in schemes:
         for policy in POLICIES:
             for rate in rates:
                 if scheme != "feddd" and policy != "sync":
                     continue     # baseline: sync reference only
-                res, wall = timed(lambda: run_sim_experiment(
-                    "mnist", "noniid_b", scheme, policy=policy,
-                    network="static", num_clients=clients, rounds=rounds,
-                    num_train=2000, num_test=500, seed=0,
-                    faults=_faults(rate, clients, seed=17)))
-                t2a = res.time_to_accuracy(TARGET_ACC)
-                final = res.history[-1]
-                acc = (final.metrics or {}).get("accuracy", float("nan"))
-                surv = float(np.mean([r.survivors for r in res.history]))
-                skipped = sum(r.skipped for r in res.history)
-                retries = sum(r.retries for r in res.history)
-                ab_kb = sum(r.abandoned_bytes for r in res.history) / 1e3
-                q_kb = sum(r.quarantined_bytes
-                           for r in res.history) / 1e3
-                name = f"fault_{scheme}_{policy}_r{rate:g}"
-                rows.append(csv_row(
-                    name, wall,
-                    f"t2a{int(TARGET_ACC * 100)}={_fmt(t2a)};"
-                    f"final_acc={acc:.3f};skipped={skipped};"
-                    f"retries={retries}"))
-                table.append(
-                    f"{scheme},{policy},{rate:g},{_fmt(t2a)},{acc:.4f},"
-                    f"{final.sim_time:.1f},{surv:.2f},{skipped},"
-                    f"{retries},{ab_kb:.1f},{q_kb:.1f}")
+                one(scheme, policy, rate)
+    # robust-agg column: the trimmed-mean engine variant at the faulted
+    # rates (corruption active), feddd only — fedavg shares the engine
+    for policy in POLICIES:
+        for rate in rates[1:]:
+            one("feddd", policy, rate, agg=TRIMMED)
+    # correlated-outage axis
+    for cells, p_out in outages:
+        one("feddd", "sync", outage_rate, cells=cells, p_out=p_out)
     if out_dir:
         write_table(out_dir, "fault_tolerance.csv", table)
     return rows

@@ -74,6 +74,25 @@ SPMD program, real speedups need real parallel hardware;
 corruption and deadline-partial aggregation, which are single-device
 engine features (the runner raises a clear error).
 
+Survivability (``--cells`` / ``--robust-agg`` / ``--checkpoint-dir`` /
+``--resume``): ``--cells K`` groups the fleet into K correlated-failure
+cells, each driven by a two-state Markov outage chain
+(repro.sim.outages) — a downed cell crashes ALL its members at once and
+the dropout LP re-solves on the survivors.  ``--robust-agg
+trimmed[:beta]`` (or ``clip[:factor]``) swaps the Eq. (4) weighted mean
+for a Byzantine-robust variant fused into the same engine step — with
+corrupt clients in the fleet the mean diverges while the trimmed mean
+holds (``benchmarks/fault_tolerance.py`` quantifies it).
+``--checkpoint-dir DIR`` snapshots the full run state atomically every
+round; after a crash (or a SIGKILL), re-running with ``--resume``
+continues from the last snapshot with BIT-IDENTICAL history::
+
+    PYTHONPATH=src python examples/quickstart.py --rounds 10 \\
+        --fault-rate 0.2 --cells 3 --checkpoint-dir results/ckpt
+    # ... killed mid-run ...
+    PYTHONPATH=src python examples/quickstart.py --rounds 10 \\
+        --fault-rate 0.2 --cells 3 --checkpoint-dir results/ckpt --resume
+
 Observability (``--log-jsonl`` / ``--trace``, repro.obs): pass a path to
 write a structured JSONL run log — one schema-versioned event per round,
 pipeline span, and fault incident, derived entirely from host data the
@@ -131,6 +150,22 @@ def main():
     ap.add_argument("--quorum", type=int, default=1,
                     help="minimum surviving contributors per round; below "
                          "it the server skips the round (fault runs only)")
+    ap.add_argument("--cells", type=int, default=0, metavar="K",
+                    help="group clients into K correlated-failure cells, "
+                         "each driven by a two-state Markov outage chain "
+                         "(repro.sim.outages); composes with --fault-rate "
+                         "and routes through the simulator like it")
+    ap.add_argument("--robust-agg", default="mean", metavar="SPEC",
+                    help="Eq. (4) aggregation variant: 'mean' (default), "
+                         "'trimmed[:beta]' (coordinate-wise trimmed mean) "
+                         "or 'clip[:factor]' (per-client norm clipping)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="snapshot the full run state to DIR/run_state.npz "
+                         "every round (atomic writes; survives SIGKILL)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the --checkpoint-dir snapshot; the "
+                         "continued run is bit-identical to an "
+                         "uninterrupted one")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="shard the client axis over an N-device mesh "
                          "(run under XLA_FLAGS=--xla_force_host_platform_"
@@ -176,14 +211,38 @@ def main():
         faults = RandomFaults(FaultConfig(
             crash_rate=args.fault_rate / 2, loss_rate=args.fault_rate,
             corrupt_rate=args.fault_rate / 4, quorum=args.quorum, seed=0))
+    if args.cells > 0:
+        from repro.sim import CellOutageModel, OutageConfig
+        faults = CellOutageModel(
+            args.clients,
+            OutageConfig(cells=args.cells, p_out=0.15, p_back=0.5, seed=0),
+            inner=faults)
+    surv_kw = {}
+    if args.robust_agg != "mean":
+        surv_kw["robust_agg"] = args.robust_agg
+    if args.checkpoint_dir:
+        ckpt = str(Path(args.checkpoint_dir) / "run_state.npz")
+        surv_kw["checkpoint_every"] = 1
+        surv_kw["checkpoint_path"] = ckpt
+        if args.resume:
+            if not Path(ckpt).exists():
+                ap.error(f"--resume: no checkpoint at {ckpt}")
+            surv_kw["resume_from"] = ckpt
+    elif args.resume:
+        ap.error("--resume requires --checkpoint-dir")
+    if faults is not None:
+        cells_col = f", cells={args.cells}" if args.cells else ""
         print(f"== FedDD + faults (rate={args.fault_rate}, "
-              f"quorum={args.quorum}) ==")
+              f"quorum={args.quorum}{cells_col}, "
+              f"agg={args.robust_agg}) ==")
     else:
         print(f"== FedDD (A_server={args.a_server}, {engine}, "
-              f"codec={args.codec}/q{args.qbits}) ==")
+              f"codec={args.codec}/q{args.qbits}, "
+              f"agg={args.robust_agg}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
                        a_server=args.a_server, h=5, batched=not args.loop,
-                       comm=comm, faults=faults, **mesh_kw, **obs_kw)
+                       comm=comm, faults=faults, **mesh_kw, **obs_kw,
+                       **surv_kw)
     if args.log_jsonl:
         print(f"  run log -> {args.log_jsonl}  (inspect: python -m "
               f"repro.obs.report {args.log_jsonl})")

@@ -1,1 +1,3 @@
 from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.run_state import (RunState, load_run_state,
+                                        save_run_state)

@@ -92,5 +92,11 @@ def load_checkpoint(path: str | Path, like: Any) -> Tuple[Any, Dict]:
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        if isinstance(leaf, np.ndarray):
+            # host-side template (e.g. the float64 loss / dropout state of
+            # a RunState): restore as numpy at full precision — routing
+            # through jnp would silently truncate f64 to f32
+            leaves.append(np.asarray(arr, dtype=leaf.dtype))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), meta

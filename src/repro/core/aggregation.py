@@ -8,16 +8,68 @@ Element-wise division: positions received from NO client keep the previous
 global value (the paper's Eq. (4) is undefined there; keeping W^{t-1} is the
 natural continuous extension and is what makes the h-periodic broadcast
 meaningful).
+
+Byzantine-robust variants (``robust=`` on the stacked/grouped entry
+points, routed from ``ProtocolConfig.robust_agg``): the masked mean of
+Eq. (4) is a weighted average, so a single corrupt-but-finite client can
+drag every coordinate it uploads arbitrarily far.  Two standard
+hardenings, both fused into the same jitted aggregation step:
+
+* ``"trimmed[:beta]"`` — coordinate-wise trimmed mean (Yin et al.,
+  1803.01498, adapted to masked/weighted sparse uploads): per
+  coordinate, among the clients that actually uploaded it with positive
+  weight, drop the ``floor(beta * n_valid)`` largest and smallest values
+  and weighted-average the rest (default beta 0.1).  A coordinate left
+  with no survivors falls back to the previous global, like an
+  un-uploaded position.
+* ``"clip[:factor]"`` — per-client norm clipping: each client's masked
+  update ``(What_n - W^{t-1}) ⊙ M_n`` is scaled down to at most
+  ``factor`` x the median participant update norm (default factor 1.0)
+  before the standard Eq. (4) mean.  Requires ``prev_global``.
+
+``"mean"`` (the default) takes the EXACT pre-existing code path — the
+bit-identity contract tests/test_robust_agg.py pins on all engines.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 _EPS = 1e-12
+
+ROBUST_AGGS = ("mean", "trimmed", "clip")
+
+
+def parse_robust_agg(spec: Optional[str]) -> Tuple[str, float]:
+    """``"mean" | "trimmed[:beta]" | "clip[:factor]"`` -> (kind, param).
+
+    The spec stays a plain string end-to-end (hashable, so it can ride
+    through jit static args and lru_cache keys unchanged); parameters are
+    parsed here at trace time.
+    """
+    if spec is None:
+        spec = "mean"
+    name, _, arg = str(spec).partition(":")
+    if name == "mean":
+        if arg:
+            raise ValueError("robust_agg 'mean' takes no parameter")
+        return "mean", 0.0
+    if name == "trimmed":
+        beta = float(arg) if arg else 0.1
+        if not 0.0 <= beta < 0.5:
+            raise ValueError(f"trimmed beta must be in [0,0.5), got {beta}")
+        return "trimmed", beta
+    if name == "clip":
+        c = float(arg) if arg else 1.0
+        if c <= 0.0:
+            raise ValueError(f"clip factor must be > 0, got {c}")
+        return "clip", c
+    raise ValueError(f"unknown robust_agg {spec!r} — expected one of "
+                     f"{ROBUST_AGGS} (optionally 'trimmed:<beta>' / "
+                     "'clip:<factor>')")
 
 
 def leaf_masked_partials(stack_w: jax.Array, stack_m: jax.Array,
@@ -61,6 +113,84 @@ def _leaf_masked_mean(stack_w: jax.Array, stack_m: jax.Array, w: jax.Array,
     return finish_masked_mean(num, den, gprev, stack_w.dtype)
 
 
+def leaf_trimmed_partials(stack_w: jax.Array, stack_m: jax.Array,
+                          w: jax.Array, beta: float):
+    """Coordinate-wise trimmed (num, den) partials for one stacked leaf.
+
+    Per coordinate, the valid contributors are the clients with mask 1
+    AND positive weight; rank them by value (stable argsort-of-argsort,
+    invalid rows keyed to +inf so they always rank past the valid tail)
+    and drop the ``floor(beta * n_valid)`` lowest and highest before the
+    weighted Eq. (4) sums.  NOT shard-composable: the ranks need every
+    client's value per coordinate, so the sharded engine all-gathers the
+    client axis first (dense-gather fallback — see round_engine).
+    """
+    n = stack_w.shape[0]
+    wts = w.reshape((n,) + (1,) * (stack_w.ndim - 1))
+    vals = stack_w.astype(jnp.float32)
+    valid = (stack_m > 0) & (wts > 0)
+    n_valid = jnp.sum(valid, axis=0)
+    k = jnp.floor(beta * n_valid).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(valid, vals, jnp.inf), axis=0)
+    rank = jnp.argsort(order, axis=0)
+    keep = valid & (rank >= k) & (rank < n_valid - k)
+    ww = stack_m * wts * keep
+    return jnp.sum(vals * ww, axis=0), jnp.sum(ww, axis=0)
+
+
+def _clip_scales(deltas, w: jax.Array, factor: float) -> jax.Array:
+    """(N,) per-client clip scales from the masked-update leaf deltas.
+
+    Each client's whole-tree update norm is clipped to ``factor`` x the
+    median norm among positive-weight participants; clean fleets (every
+    norm <= the threshold) pass through with scale 1.
+    """
+    sq = None
+    for d in deltas:
+        s = jnp.sum(jnp.square(d), axis=tuple(range(1, d.ndim)))
+        sq = s if sq is None else sq + s
+    norms = jnp.sqrt(sq)
+    ref = jnp.nanmedian(jnp.where(w > 0, norms, jnp.nan))
+    scale = jnp.minimum(1.0, factor * ref / jnp.maximum(norms, _EPS))
+    return jnp.where(jnp.isfinite(scale), scale, 1.0)
+
+
+def robust_leaf_stacks(stacks_w, stacks_m, w: jax.Array, gleaves,
+                       kind: str, arg: float, use_kernel: bool = False):
+    """Robust Eq. (4) over a LIST of broadcast (N, *leaf) stacks.
+
+    The shared core of the stacked/grouped/sharded robust paths: masks
+    already broadcast to value shape, one entry per tree leaf (the clip
+    variant needs the whole tree at once for its per-client norms).
+    ``kind="mean"`` routes through :func:`_leaf_masked_mean` unchanged.
+    """
+    if kind == "mean":
+        return [_leaf_masked_mean(sw, sm, w, gp, use_kernel)
+                for sw, sm, gp in zip(stacks_w, stacks_m, gleaves)]
+    if kind == "trimmed":
+        out = []
+        for sw, sm, gp in zip(stacks_w, stacks_m, gleaves):
+            num, den = leaf_trimmed_partials(sw, sm, w, arg)
+            out.append(finish_masked_mean(num, den, gp, sw.dtype))
+        return out
+    if kind == "clip":
+        if any(gp is None for gp in gleaves):
+            raise ValueError("robust_agg 'clip' needs prev_global (the "
+                             "clipped quantity is the update vs W^{t-1})")
+        n = stacks_w[0].shape[0]
+        deltas = [(sw.astype(jnp.float32) - gp.astype(jnp.float32)) * sm
+                  for sw, sm, gp in zip(stacks_w, stacks_m, gleaves)]
+        scale = _clip_scales(deltas, w, arg)
+        out = []
+        for d, sw, sm, gp in zip(deltas, stacks_w, stacks_m, gleaves):
+            s = scale.reshape((n,) + (1,) * (d.ndim - 1))
+            vals = gp.astype(jnp.float32) + d * s
+            num, den = leaf_masked_partials(vals, sm, w, use_kernel)
+            out.append(finish_masked_mean(num, den, gp, sw.dtype))
+        return out
+    raise ValueError(f"unknown robust kind {kind!r}")
+
+
 def aggregate_sparse_stacked(
     stacked_params,
     stacked_masks,
@@ -68,6 +198,7 @@ def aggregate_sparse_stacked(
     *,
     prev_global: Optional[object] = None,
     use_kernel: bool = False,
+    robust: str = "mean",
 ):
     """Eq. (4) over client-STACKED pytrees (leaves shaped (N, *leaf)).
 
@@ -75,7 +206,8 @@ def aggregate_sparse_stacked(
     jnp.stack — leaves arrive already stacked along the client axis, and the
     whole reduction traces into the engine's single jitted round step.
     ``stacked_masks`` leaves are channel-shaped (N, 1, ..., C, ..., 1) and
-    broadcast against the parameters.
+    broadcast against the parameters.  ``robust`` selects the Eq. (4)
+    variant (module docstring); ``"mean"`` is the bit-identical default.
     """
     leaves = jax.tree_util.tree_leaves(stacked_params)
     mleaves = jax.tree_util.tree_leaves(stacked_masks)
@@ -86,11 +218,18 @@ def aggregate_sparse_stacked(
     w = jnp.asarray(client_weights, jnp.float32)
     if w.shape[0] != n:
         raise ValueError("weights count mismatch")
-    out = [
-        _leaf_masked_mean(sw, jnp.broadcast_to(sm, sw.shape), w, gprev,
-                          use_kernel)
-        for sw, sm, gprev in zip(leaves, mleaves, gleaves)
-    ]
+    kind, arg = parse_robust_agg(robust)
+    if kind == "mean":
+        out = [
+            _leaf_masked_mean(sw, jnp.broadcast_to(sm, sw.shape), w, gprev,
+                              use_kernel)
+            for sw, sm, gprev in zip(leaves, mleaves, gleaves)
+        ]
+    else:
+        out = robust_leaf_stacks(
+            leaves, [jnp.broadcast_to(sm, sw.shape)
+                     for sw, sm in zip(leaves, mleaves)],
+            w, gleaves, kind, arg, use_kernel)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -104,6 +243,7 @@ def aggregate_sparse_grouped(
     prev_global: Optional[object] = None,
     use_kernel: bool = False,
     single_canvas: bool = True,
+    robust: str = "mean",
 ):
     """Eq. (4) over a shape-GROUPED ragged fleet: scatter every group's
     stacked sub-model leaves into a full-width client canvas, then run the
@@ -140,6 +280,9 @@ def aggregate_sparse_grouped(
       single_canvas: fuse all groups into one full-width scatter per leaf
         (default); ``False`` keeps the sequential per-group scatters as
         the reference for the equivalence tests.
+      robust: Eq. (4) variant (module docstring) — the canvases are
+        exactly the stacked layout, so the robust reductions reuse
+        :func:`robust_leaf_stacks` unchanged.
 
     Returns the aggregated full-width global pytree.
     """
@@ -152,6 +295,8 @@ def aggregate_sparse_grouped(
     n = w.shape[0]
     all_rows = (jnp.concatenate([jnp.asarray(i) for i in group_indices])
                 if single_canvas else None)
+    kind, arg = parse_robust_agg(robust)
+    canvases = []  # retained (value, mask) canvases for robust != mean
 
     out = []
     for li, gl in enumerate(g_leaves):
@@ -176,8 +321,15 @@ def aggregate_sparse_grouped(
                                                    for s in lw.shape[1:])
                 stack_w = stack_w.at[rows].set(lw.astype(gl.dtype))
                 stack_m = stack_m.at[rows].set(lm.astype(gl.dtype))
-        out.append(_leaf_masked_mean(stack_w, stack_m, w, gprev[li],
-                                     use_kernel))
+        if kind == "mean":
+            out.append(_leaf_masked_mean(stack_w, stack_m, w, gprev[li],
+                                         use_kernel))
+        else:
+            canvases.append((stack_w, stack_m))
+    if kind != "mean":
+        out = robust_leaf_stacks([c[0] for c in canvases],
+                                 [c[1] for c in canvases],
+                                 w, gprev, kind, arg, use_kernel)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -105,6 +105,38 @@ logs, run-inspection CLI)   one recorder per run; host spans wrap each
                             annotations are compile-time metadata, so
                             enabling it never changes compiled programs
                             (tests/test_obs.py)
+Byzantine-robust            **batched / scanned / grouped / sharded
+aggregation                 engines** via ``ProtocolConfig(robust_agg=
+(``robust_agg``)            ...)`` (core/aggregation.py): coordinate-wise
+                            trimmed mean (``"trimmed[:beta]"``) or
+                            per-client update norm-clipping
+                            (``"clip[:factor]"``) replace the weighted
+                            mean inside the SAME fused stacked Eq. (4)
+                            step — no per-client host loop.  On a mesh
+                            the trimmed/clip statistics need the full
+                            client axis, so the sharded step falls back
+                            to a dense ``all_gather`` of the masked
+                            leaves (per-link bytes scale with the fleet);
+                            sharded+grouped robust is rejected.  The
+                            default ``"mean"`` is bit-identical to the
+                            plain engines on every path
+                            (tests/test_robust_agg.py)
+crash-resume                **engine + loop executors** via
+(``checkpoint_every`` /     ``ProtocolConfig(checkpoint_every=K,
+``resume_from``)            checkpoint_path=...)`` (repro.checkpoint):
+                            every K rounds the driver atomically
+                            snapshots a full :class:`RunState` — global
+                            + stacked client params, PRNG key, losses,
+                            dropout rates, round history — and
+                            ``resume_from=`` restarts a killed run at
+                            the next round with BIT-IDENTICAL RoundRecord
+                            history and final params, faults and obs
+                            included (fault/outage draws are keyed per
+                            (seed, tag, epoch, client), so they replay
+                            free; tests/test_resume.py).  The sim runner
+                            checkpoints its own wave-policy state the
+                            same way.  ``checkpoint_every=None``
+                            (default) touches no code path
 wire formats (sparse        **every executor** via ``ProtocolConfig(comm=
 codecs, quantization,       CommConfig(codec=..., qbits=...))`` (repro.comm):
 on-wire byte accounting)    masks ship as packed-bitmask / delta+varint
@@ -212,6 +244,28 @@ class ProtocolConfig:
     mesh_keep_fraction: float = 1.0  # sparse collective buffer size:
                                      # K = ceil(C * fraction) channels per
                                      # shard on the wire
+    robust_agg: str = "mean"         # Eq. (4) aggregation variant
+                                     # (core/aggregation.py): "mean"
+                                     # (default; bit-identical to the
+                                     # plain engines), "trimmed[:beta]"
+                                     # coordinate-wise trimmed mean, or
+                                     # "clip[:factor]" per-client update
+                                     # norm clipping.  Engine-backed
+                                     # paths only.
+    checkpoint_every: Optional[int] = None
+                                     # crash-resume (repro.checkpoint):
+                                     # snapshot the full RunState every K
+                                     # completed rounds.  None (default)
+                                     # = no checkpointing, bit for bit.
+    checkpoint_path: Optional[str] = None
+                                     # where the RunState snapshot lands
+                                     # (atomic temp+rename; one file pair,
+                                     # overwritten each save)
+    resume_from: Optional[str] = None
+                                     # path of a RunState snapshot to
+                                     # restart from; the run continues at
+                                     # the snapshot's round + 1 with
+                                     # bit-identical history
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -243,6 +297,22 @@ class ProtocolConfig:
         if not 0.0 < self.mesh_keep_fraction <= 1.0:
             raise ValueError(f"mesh_keep_fraction must be in (0,1], got "
                              f"{self.mesh_keep_fraction}")
+        aggregation.parse_robust_agg(self.robust_agg)  # validate the spec
+        if self.checkpoint_every is not None:
+            if self.checkpoint_every < 1:
+                raise ValueError("checkpoint_every must be >= 1 (or None "
+                                 f"to disable), got {self.checkpoint_every}")
+            if not self.checkpoint_path:
+                raise ValueError("checkpoint_every requires "
+                                 "checkpoint_path: somewhere for the "
+                                 "RunState snapshot to land")
+        if ((self.checkpoint_every is not None or self.resume_from)
+                and self.rounds_per_dispatch > 1):
+            raise ValueError(
+                "checkpointing / resume operates at per-round dispatch "
+                "boundaries; rounds_per_dispatch > 1 keeps rounds on the "
+                "device inside one lax.scan and has no boundary to "
+                "snapshot at")
 
 
 @dataclasses.dataclass
@@ -349,6 +419,19 @@ class _RoundExecutor:
     def finalize(self) -> None:
         """Sync any executor-held client state back into server.clients."""
 
+    # -- crash-resume hooks (repro.checkpoint) ------------------------------
+
+    def snapshot_arrays(self):
+        """The executor-held client state as a checkpointable pytree."""
+        raise NotImplementedError(
+            "checkpointing / resume supports the batched-engine and "
+            "reference-loop executors; grouped and sharded runs hold "
+            "per-group / per-shard device state this snapshot does not "
+            "capture yet")
+
+    def restore_arrays(self, arrays) -> None:
+        raise NotImplementedError
+
 
 class _EngineExecutor(_RoundExecutor):
     """Homogeneous fleets: one BatchedRoundEngine jit step per round.
@@ -365,8 +448,9 @@ class _EngineExecutor(_RoundExecutor):
 
     def __init__(self, server, local_train_fn, batched_train_fn):
         super().__init__(server, local_train_fn, batched_train_fn)
-        self.engine = round_engine.BatchedRoundEngine(server.cfg.selection,
-                                                      server.cfg.comm)
+        self.engine = round_engine.BatchedRoundEngine(
+            server.cfg.selection, server.cfg.comm,
+            robust_agg=server.cfg.robust_agg)
         self.weights = np.asarray(
             [cs.num_samples for cs in server.clients], float)
         self.stacked = round_engine.stack_pytrees(
@@ -433,6 +517,13 @@ class _EngineExecutor(_RoundExecutor):
         for cs, p in zip(self.srv.clients,
                          round_engine.unstack_pytree(self.stacked, n)):
             cs.params = p
+
+    def snapshot_arrays(self):
+        return {"stacked": self.stacked}
+
+    def restore_arrays(self, arrays) -> None:
+        self.stacked = jax.tree_util.tree_map(jnp.asarray,
+                                              arrays["stacked"])
 
     # -- multi-round scanned dispatch (rounds_per_dispatch > 1) -------------
 
@@ -512,7 +603,8 @@ class _ShardedEngineExecutor(_EngineExecutor):
         self.engine = round_engine.ShardedRoundEngine(
             cfg.selection, cfg.comm, mesh=mesh,
             collective=cfg.mesh_collective,
-            keep_fraction=cfg.mesh_keep_fraction)
+            keep_fraction=cfg.mesh_keep_fraction,
+            robust_agg=cfg.robust_agg)
         n = server.tel.num_clients
         if n % self.engine.num_shards == 0:
             self.stacked = jax.device_put(self.stacked,
@@ -534,6 +626,11 @@ class _ShardedEngineExecutor(_EngineExecutor):
     def run_chunk(self, t_start, count, losses):
         raise ValueError("rounds_per_dispatch > 1 does not shard "
                          "(ProtocolConfig rejects the combination)")
+
+    def snapshot_arrays(self):
+        # placed-on-mesh state would need re-sharding on restore; fall
+        # back to the base "unsupported" signal
+        return _RoundExecutor.snapshot_arrays(self)
 
 
 class _GroupedEngineExecutor(_RoundExecutor):
@@ -571,7 +668,8 @@ class _GroupedEngineExecutor(_RoundExecutor):
             mesh = resolve_client_mesh(cfg.mesh)
         self.fleet = round_engine.GroupedFleetState(
             groups, coverage, client_params, cfg.selection,
-            server.tel.num_clients, cfg.comm, mesh=mesh)
+            server.tel.num_clients, cfg.comm, mesh=mesh,
+            robust_agg=cfg.robust_agg)
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
@@ -608,6 +706,13 @@ class _ReferenceLoopExecutor(_RoundExecutor):
     Slow by design: per-client build_masks dispatches, per-leaf ``float``
     host syncs, list-based padding and aggregation.
     """
+
+    def snapshot_arrays(self):
+        return {"clients": [cs.params for cs in self.srv.clients]}
+
+    def restore_arrays(self, arrays) -> None:
+        for cs, p in zip(self.srv.clients, arrays["clients"]):
+            cs.params = jax.tree_util.tree_map(jnp.asarray, p)
 
     def run_round(self, t, rk, losses, d_used) -> _RoundData:
         srv, cfg = self.srv, self.srv.cfg
@@ -818,6 +923,12 @@ class FedDDServer:
             raise ValueError(
                 "batched_train_fn requires a homogeneous run with "
                 "batched=True and track_epsilon=False")
+        if str(self.cfg.robust_agg) != "mean" and kind == "loop":
+            raise ValueError(
+                "robust_agg variants are fused into the engine-backed "
+                "stacked Eq. (4) step; the reference loop aggregates "
+                "per-client lists with the plain weighted mean (run with "
+                "batched=True and track_epsilon=False)")
         return kind
 
     _EXECUTORS = {"engine": _EngineExecutor,
@@ -883,6 +994,19 @@ class FedDDServer:
                     "at dispatch boundaries; use rounds_per_dispatch=1 "
                     "for per-round eval")
 
+        # --- crash-resume (repro.checkpoint): restore a snapshot before
+        # the loop, save one every checkpoint_every completed rounds.
+        # checkpoint_every=None and resume_from=None touch nothing.
+        start_t = 1
+        if cfg.resume_from:
+            from repro import checkpoint as ckpt_mod   # checkpoint -> core
+            st = ckpt_mod.load_run_state(
+                cfg.resume_from, self._snapshot_arrays(executor, losses))
+            losses = self._restore_arrays(executor, st.arrays)
+            history = st.history
+            sim_time = float(st.extra.get("sim_time", 0.0))
+            start_t = st.round + 1
+
         self.obs = obs_mod.make_recorder(
             cfg.obs, driver="protocol", scheme=cfg.scheme, executor=kind
             if cfg.rounds_per_dispatch == 1 else "scanned",
@@ -893,7 +1017,7 @@ class FedDDServer:
                 executor.finalize()
                 return RunResult(history, self.global_params)
 
-            for t in range(1, rounds + 1):
+            for t in range(start_t, rounds + 1):
                 t0 = time.perf_counter()
                 self.rng, rk = jax.random.split(self.rng)
                 d_used = self.dropout.copy()  # D_t: what uploads use
@@ -919,12 +1043,50 @@ class FedDDServer:
                     self.obs.round(
                         history[-1], path=kind, scheme=cfg.scheme,
                         client_times=np.where(rd.active, t_all, np.nan))
+                if (cfg.checkpoint_every is not None
+                        and t % cfg.checkpoint_every == 0):
+                    from repro import checkpoint as ckpt_mod
+                    ckpt_mod.save_run_state(
+                        cfg.checkpoint_path,
+                        ckpt_mod.RunState(
+                            round=t,
+                            arrays=self._snapshot_arrays(executor, losses),
+                            history=history,
+                            extra={"sim_time": sim_time}))
 
             executor.finalize()
             return RunResult(history, self.global_params)
         finally:
             self.obs.close()
             self.obs = obs_mod.NULL_RECORDER
+
+    # -- crash-resume snapshot plumbing (repro.checkpoint) -------------------
+
+    def _snapshot_arrays(self, executor: _RoundExecutor,
+                         losses: np.ndarray) -> Dict:
+        """Everything round t+1 reads, as one checkpointable pytree.
+
+        The executor contributes the client state it holds; the server
+        adds the global params, the protocol PRNG key (split stream —
+        uint32, persisted exactly), the loss view, and the allocated
+        dropout rates D_{t+1}.  Fault/outage/network draws are keyed per
+        epoch and replay free (see repro.checkpoint.run_state).
+        """
+        return {"executor": executor.snapshot_arrays(),
+                "global": self.global_params,
+                "rng": self.rng,
+                "losses": np.asarray(losses, np.float64),
+                "dropout": np.asarray(self.dropout, np.float64)}
+
+    def _restore_arrays(self, executor: _RoundExecutor,
+                        arrays: Dict) -> np.ndarray:
+        """Inverse of :meth:`_snapshot_arrays`; returns the loss view."""
+        executor.restore_arrays(arrays["executor"])
+        self.global_params = jax.tree_util.tree_map(jnp.asarray,
+                                                    arrays["global"])
+        self.rng = jnp.asarray(arrays["rng"])
+        self.dropout = np.asarray(arrays["dropout"], np.float64)
+        return np.asarray(arrays["losses"], np.float64)
 
     def _run_scanned(self, executor: "_EngineExecutor", rounds: int,
                      history: List[RoundRecord], full_bytes: float) -> None:
@@ -1082,9 +1244,16 @@ def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
     async aggregation policies.  ``faults`` (a
     :class:`repro.sim.faults.FaultModel`) additionally injects client
     crashes, lossy uplinks, and corrupted payloads, and enables the
-    server's quarantine/quorum degradation (wave policies only).  Ragged
-    ``client_params`` fleets run the grouped engine on either path (see
-    the routing table in the module docstring).
+    server's quarantine/quorum degradation (wave policies only; the
+    async policy gets crash/loss + staleness-budget semantics, while
+    corruption stays wave-only).  Ragged ``client_params`` fleets run
+    the grouped engine on either path (see the routing table in the
+    module docstring).
+
+    The survivability knobs ride ``**cfg_kw`` onto either path:
+    ``robust_agg=`` selects the Byzantine-robust Eq. (4) variant, and
+    ``checkpoint_every=`` / ``checkpoint_path=`` / ``resume_from=``
+    drive bit-identical crash-resume (repro.checkpoint).
     """
     if sim is not None or network is not None or faults is not None:
         from repro.sim import runner as sim_runner   # local: sim -> core

@@ -220,12 +220,13 @@ def _wire_overhead(masks, stacked_new, comm: CommConfig, channel_axis: int,
 # compile cache is shared across engine instances and server runs.
 @functools.partial(jax.jit,
                    static_argnames=("sel_cfg", "full_round", "dense_masks",
-                                    "comm"))
+                                    "comm", "robust"))
 def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
                 weights, rng, stacked_upload=None, delivered=None, *,
                 sel_cfg: selection.SelectionConfig,
                 full_round: bool, dense_masks: bool = False,
-                comm: CommConfig = CommConfig()) -> RoundOutputs:
+                comm: CommConfig = CommConfig(),
+                robust: str = "mean") -> RoundOutputs:
     # jax.named_scope blocks are compile-time metadata (operator name
     # prefixes in the HLO / profiler traces — repro.obs vocabulary); they
     # are UNCONDITIONAL, so the compiled program never depends on whether
@@ -269,7 +270,7 @@ def _round_step(stacked_old, stacked_new, global_params, dropout_rates,
     with jax.named_scope("feddd_aggregate"):
         new_global = aggregation.aggregate_sparse_stacked(
             stacked_agg, agg_masks, weights, prev_global=global_params,
-            use_kernel=sel_cfg.use_kernel)
+            use_kernel=sel_cfg.use_kernel, robust=robust)
     with jax.named_scope("feddd_client_update"):
         if full_round:
             new_clients = _adopt_global(new_global, stacked_new)
@@ -294,11 +295,17 @@ class BatchedRoundEngine:
         measured mask/scale overhead to the step outputs; ``qbits < 32``
         quantizes the values the aggregation consumes.  The default is
         bit-identical to a comm-less engine.
+      robust_agg: Eq. (4) variant — ``"mean"`` (default, bit-identical
+        to the pre-robust engine), ``"trimmed[:beta]"`` coordinate-wise
+        trimmed mean, ``"clip[:factor]"`` per-client norm clipping
+        (repro.core.aggregation module docstring).  Static: each variant
+        compiles its own fused step.
     """
 
     selection_cfg: selection.SelectionConfig = dataclasses.field(
         default_factory=selection.SelectionConfig)
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    robust_agg: str = "mean"
 
     def step(self, stacked_old, stacked_new, global_params,
              dropout_rates, weights, rng, *, full_round: bool,
@@ -335,7 +342,8 @@ class BatchedRoundEngine:
             jnp.asarray(weights, jnp.float32), rng, stacked_upload,
             delivered, sel_cfg=self.selection_cfg,
             full_round=bool(full_round),
-            dense_masks=bool(dense_masks), comm=self.comm)
+            dense_masks=bool(dense_masks), comm=self.comm,
+            robust=str(self.robust_agg))
 
     def run(self, state: ScanState, telemetry: ScanTelemetry, *,
             num_rounds: int, batched_train_fn, weights,
@@ -414,7 +422,7 @@ class BatchedRoundEngine:
             batched_train_fn, self.selection_cfg, int(num_rounds), int(h),
             str(scheme), float(a_server), float(d_max), float(delta),
             float(global_model_bytes), int(alloc_iters), bool(donate),
-            self.comm, spec)
+            self.comm, spec, str(self.robust_agg))
         part = (jnp.ones((n,), bool) if static_participants is None
                 else jnp.asarray(static_participants, bool))
         pen = (jnp.ones((n,), jnp.float32) if oort_penalty is None
@@ -436,7 +444,7 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
                        a_server: float, d_max: float, delta: float,
                        global_model_bytes: float, alloc_iters: int,
                        donate: bool, comm: CommConfig,
-                       wire_spec):
+                       wire_spec, robust: str = "mean"):
     dense = scheme != "feddd"
 
     # client_params and global_params are separate leading arguments so
@@ -501,7 +509,8 @@ def _scanned_rounds_fn(train_fn, sel_cfg: selection.SelectionConfig,
             with jax.named_scope("feddd_aggregate"):
                 new_global = aggregation.aggregate_sparse_stacked(
                     stacked_agg, masks, weights * part,
-                    prev_global=gparams, use_kernel=sel_cfg.use_kernel)
+                    prev_global=gparams, use_kernel=sel_cfg.use_kernel,
+                    robust=robust)
             with jax.named_scope("feddd_client_update"):
                 if dense:
                     new_clients = _adopt_global(new_global, stacked_new)
@@ -621,10 +630,11 @@ def _leaf_sharded_reduce(num, den, gprev, dtype, *, channel_axis: int,
 def _sharded_step_fn(mesh, sel_cfg: selection.SelectionConfig,
                      full_round: bool, dense_masks: bool,
                      comm: CommConfig, collective: str,
-                     keep_fraction: float):
+                     keep_fraction: float, robust: str = "mean"):
     p_c = jax.sharding.PartitionSpec("clients")
     p_r = jax.sharding.PartitionSpec()
     axis = "clients"
+    r_kind, r_arg = aggregation.parse_robust_agg(robust)
 
     def body(stacked_old, stacked_new, global_params, dropout, weights,
              ids, rng):
@@ -652,18 +662,37 @@ def _sharded_step_fn(mesh, sel_cfg: selection.SelectionConfig,
             w_leaves = jax.tree_util.tree_leaves(stacked_agg)
             m_leaves = jax.tree_util.tree_leaves(masks)
             overflow = jnp.float32(0.0)
-            out_leaves = []
-            for sw, sm, gl in zip(w_leaves, m_leaves, g_leaves):
-                bm = jnp.broadcast_to(sm, sw.shape)
-                num, den = aggregation.leaf_masked_partials(
-                    sw, bm, weights, sel_cfg.use_kernel)
-                agg, ovf = _leaf_sharded_reduce(
-                    num, den, gl, sw.dtype,
-                    channel_axis=sel_cfg.channel_axis,
-                    collective=collective, keep_fraction=keep_fraction,
-                    axis_name=axis)
-                overflow = overflow + ovf
-                out_leaves.append(agg)
+            if r_kind != "mean":
+                # Robust variants need cross-client order statistics /
+                # whole-tree norms, which shard-local (num, den) partials
+                # cannot compose — dense-gather fallback: all_gather the
+                # client axis (device order = fleet order) and run the
+                # single-device robust reduction replicated on every
+                # shard, so the result is the same arithmetic as the
+                # batched engine's.
+                sw_full = [jax.lax.all_gather(sw, axis, tiled=True)
+                           for sw in w_leaves]
+                sm_full = [jax.lax.all_gather(
+                    jnp.broadcast_to(sm, sw.shape), axis, tiled=True)
+                    for sw, sm in zip(w_leaves, m_leaves)]
+                w_full = jax.lax.all_gather(weights, axis, tiled=True)
+                out_leaves = aggregation.robust_leaf_stacks(
+                    sw_full, sm_full, w_full, g_leaves, r_kind, r_arg,
+                    sel_cfg.use_kernel)
+            else:
+                out_leaves = []
+                for sw, sm, gl in zip(w_leaves, m_leaves, g_leaves):
+                    bm = jnp.broadcast_to(sm, sw.shape)
+                    num, den = aggregation.leaf_masked_partials(
+                        sw, bm, weights, sel_cfg.use_kernel)
+                    agg, ovf = _leaf_sharded_reduce(
+                        num, den, gl, sw.dtype,
+                        channel_axis=sel_cfg.channel_axis,
+                        collective=collective,
+                        keep_fraction=keep_fraction,
+                        axis_name=axis)
+                    overflow = overflow + ovf
+                    out_leaves.append(agg)
             new_global = jax.tree_util.tree_unflatten(treedef, out_leaves)
         with jax.named_scope("feddd_client_update"):
             if full_round:
@@ -727,6 +756,8 @@ class ShardedRoundEngine:
     mesh: object = None        # jax.sharding.Mesh with a "clients" axis
     collective: str = "dense"  # dense psum | sparse compacted top-K
     keep_fraction: float = 1.0  # sparse buffer: K = ceil(C * fraction)
+    robust_agg: str = "mean"   # Eq. (4) variant; non-mean falls back to
+                               # a dense all-gather of the client axis
 
     def __post_init__(self):
         if self.mesh is None:
@@ -775,7 +806,8 @@ class ShardedRoundEngine:
         fn = _sharded_step_fn(self.mesh, self.selection_cfg,
                               bool(full_round), bool(dense_masks),
                               self.comm, self.collective,
-                              float(self.keep_fraction))
+                              float(self.keep_fraction),
+                              str(self.robust_agg))
         new_clients, new_global, density, wire_oh, overflow = fn(
             so, sn, global_params, d, w, ids, rng)
         if pad:
@@ -812,14 +844,14 @@ def slice_pytree(global_params, local_template):
 
 @functools.partial(jax.jit,
                    static_argnames=("sel_cfg", "full_round", "dense_masks",
-                                    "comm"))
+                                    "comm", "robust"))
 def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
                         weights, rng, *,
                         sel_cfg: selection.SelectionConfig,
                         full_round: bool,
                         dense_masks: bool = False,
-                        comm: CommConfig = CommConfig()
-                        ) -> GroupedRoundOutputs:
+                        comm: CommConfig = CommConfig(),
+                        robust: str = "mean") -> GroupedRoundOutputs:
     n = weights.shape[0]
     group_masks, group_agg, group_idx = [], [], []
     densities = jnp.zeros((n,), jnp.float32)
@@ -859,7 +891,8 @@ def _grouped_round_step(groups: Tuple[GroupBatch, ...], global_params,
     with jax.named_scope("feddd_aggregate"):
         new_global = aggregation.aggregate_sparse_grouped(
             group_agg, group_masks, group_idx, weights, global_params,
-            prev_global=global_params, use_kernel=sel_cfg.use_kernel)
+            prev_global=global_params, use_kernel=sel_cfg.use_kernel,
+            robust=robust)
     with jax.named_scope("feddd_client_update"):
         new_group_params = []
         for g, masks in zip(groups, group_masks):
@@ -1034,12 +1067,22 @@ class GroupedRoundEngine:
         default_factory=selection.SelectionConfig)
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
     mesh: object = None        # optional jax.sharding.Mesh ("clients")
+    robust_agg: str = "mean"   # Eq. (4) variant (single-device only:
+                               # the sharded-grouped step composes
+                               # per-group psums, which robust variants
+                               # cannot ride)
 
     def __post_init__(self):
         if self.mesh is not None and "clients" not in self.mesh.axis_names:
             raise ValueError(
                 f"mesh must carry a 'clients' axis; got "
                 f"{self.mesh.axis_names}")
+        if self.mesh is not None and str(self.robust_agg) != "mean":
+            raise NotImplementedError(
+                "robust_agg is a single-device grouped-engine feature: "
+                "the sharded-grouped step sums per-group (num, den) "
+                "partials across shards, which trimmed/clip aggregation "
+                "cannot compose with")
 
     def step(self, groups: Sequence[GroupBatch], global_params,
              weights, rng, *, full_round: bool,
@@ -1063,7 +1106,8 @@ class GroupedRoundEngine:
                 tuple(groups), global_params,
                 jnp.asarray(weights, jnp.float32), rng,
                 sel_cfg=self.selection_cfg, full_round=bool(full_round),
-                dense_masks=bool(dense_masks), comm=self.comm)
+                dense_masks=bool(dense_masks), comm=self.comm,
+                robust=str(self.robust_agg))
         return self._step_sharded(groups, global_params, weights, rng,
                                   full_round=full_round,
                                   dense_masks=dense_masks)
@@ -1162,8 +1206,9 @@ class GroupedFleetState:
     def __init__(self, groups, group_coverage, client_params,
                  selection_cfg: selection.SelectionConfig,
                  num_clients: int, comm: CommConfig = CommConfig(),
-                 mesh=None):
-        self.engine = GroupedRoundEngine(selection_cfg, comm, mesh)
+                 mesh=None, robust_agg: str = "mean"):
+        self.engine = GroupedRoundEngine(selection_cfg, comm, mesh,
+                                         robust_agg)
         self.groups = groups
         self.coverage = group_coverage
         self.num_clients = num_clients

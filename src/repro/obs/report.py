@@ -16,7 +16,11 @@ Renders, from the structured events alone (repro.obs.runlog):
 * failure economy — skipped rounds, survivor stats, retries, incident
   counts by kind;
 * straggler timelines — per-client upload-completion offsets (sim clock)
-  with mean/max and slowest-in-round counts; ``--top N`` worst clients.
+  with mean/max and slowest-in-round counts; ``--top N`` worst clients —
+  prefaced by the correlated-outage windows (repro.sim.outages): each
+  cell's down intervals reconstructed from outage_begin/outage_end
+  incidents, so a burst of slow rounds reads against the cells that
+  were dark while it happened.
 
 ``--csv`` writes the per-round stream as CSV; ``--prom`` replays the
 round + fault events through the SAME
@@ -148,6 +152,46 @@ def _failure_lines(events: List[Dict], rounds: List[Dict]) -> List[str]:
     return lines
 
 
+def _outage_lines(events: List[Dict]) -> List[str]:
+    """Correlated-outage windows (repro.sim.outages), reconstructed from
+    the outage_begin / outage_end fault incidents: one line per window,
+    so straggler offsets can be read against which cells were dark."""
+    begins = [e for e in events if e.get("event") == "fault"
+              and e.get("kind") == "outage_begin"]
+    ends = [e for e in events if e.get("event") == "fault"
+            and e.get("kind") == "outage_end"]
+    if not begins and not ends:
+        return []
+    lines = _section("Outage windows (correlated cell failures)")
+    open_by_cell: Dict[int, Dict] = {}
+    windows = []     # (cell, begin_round, end_round|None, duration|None,
+    #                   members)
+    for e in sorted(begins + ends, key=lambda e: int(e.get("round", 0))):
+        cell = int(e.get("cell", -1))
+        if e.get("kind") == "outage_begin":
+            open_by_cell[cell] = e
+        else:
+            b = open_by_cell.pop(cell, None)
+            windows.append((cell,
+                            int(b["round"]) if b else None,
+                            int(e.get("round", 0)),
+                            e.get("duration"),
+                            e.get("members", [])))
+    for cell, b in sorted(open_by_cell.items()):
+        windows.append((cell, int(b["round"]), None, None,
+                        b.get("members", [])))
+    windows.sort(key=lambda w: (w[1] if w[1] is not None else -1, w[0]))
+    for cell, b, end, dur, members in windows:
+        span = (f"rounds {b}-{end - 1}" if b is not None and end is not None
+                else f"round {b}- (still down at end)" if end is None
+                else f"-round {end - 1} (down from start of log)")
+        dur_s = f"  ({dur} epoch{'s' if dur != 1 else ''} down)" \
+            if dur is not None else ""
+        mem = ",".join(str(m) for m in members)
+        lines.append(f"  cell {cell}: {span}{dur_s}  members {mem}")
+    return lines
+
+
 def _straggler_lines(rounds: List[Dict], top: int) -> List[str]:
     lines = _section("Straggler timeline (per-client upload offsets)")
     tracked = [r for r in rounds if r.get("client_up")]
@@ -187,6 +231,7 @@ def render(events: List[Dict], top: int = 5) -> str:
     lines += _phase_lines(events)
     lines += _byte_lines(rounds, events)
     lines += _failure_lines(events, rounds)
+    lines += _outage_lines(events)
     lines += _straggler_lines(rounds, top)
     return "\n".join(lines).lstrip("\n") + "\n"
 

@@ -10,6 +10,9 @@ Modules
   faults    deterministic fault injection: client churn, lossy uplinks
             with retransmit/backoff, corrupted payloads, server-side
             validation + quorum-gated degradation
+  outages   correlated cell-outage overlay: clients grouped into cells,
+            each cell driven by a two-state Markov availability chain;
+            outages crash whole cells at once
   runner    the driver: composes the above with the batched round engine
             and re-solves the dropout LP from OBSERVED telemetry
 
@@ -26,6 +29,7 @@ from repro.sim.faults import (CORRUPT_KINDS, FaultConfig, FaultModel,
 from repro.sim.network import (MarkovFadingNetwork, NetworkConditions,
                                NetworkModel, StaticNetwork, TraceNetwork,
                                make_network, telemetry_with_conditions)
+from repro.sim.outages import CellOutageModel, OutageConfig
 from repro.sim.policies import (POLICIES, AsyncPolicy, DeadlinePolicy,
                                 RetryPolicy, SyncPolicy, make_policy)
 from repro.sim.runner import (ObservedTelemetry, SimConfig, SimResult,

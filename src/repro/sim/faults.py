@@ -57,8 +57,10 @@ class ValidationConfig:
     ``norm_factor`` quarantines an arrived update whose l2 norm exceeds
     ``norm_factor`` x the median norm of this round's finite arrivals
     (<= 0 disables the norm screen); the median needs at least
-    ``min_reference`` finite arrivals to be meaningful.  Non-finite
-    (NaN/Inf) updates are always quarantined when ``screen_nonfinite``.
+    ``min_reference`` finite arrivals to be meaningful, with a hard
+    floor of 3 (see :func:`screen_quarantine` — survivor sets of 1–2
+    are finite-checked only).  Non-finite (NaN/Inf) updates are always
+    quarantined when ``screen_nonfinite``.
     """
 
     screen_nonfinite: bool = True
@@ -83,6 +85,11 @@ class FaultConfig:
       (floored at 1: a fault-aware server never aggregates an empty
       round).  Below the floor the round is skipped: global held, client
       params held, allocation LP re-solved on survivor-only telemetry.
+    staleness_budget: buffered-async analogue of quorum (0 = unlimited):
+      at merge time, buffered updates staler than this many versions are
+      dropped and charged as abandoned bytes; the merge proceeds only
+      when the surviving buffered mass still meets the quorum floor,
+      otherwise the server keeps buffering.
     seed: fault-stream seed (independent of the run seed on purpose, so a
       fault scenario can be replayed over different training seeds).
     validation: :class:`ValidationConfig` for the quarantine screen.
@@ -96,6 +103,7 @@ class FaultConfig:
     corrupt_rate: float = 0.0
     corrupt_kind: str = "mix"
     quorum: float = 1
+    staleness_budget: int = 0
     seed: int = 0
     validation: ValidationConfig = dataclasses.field(
         default_factory=ValidationConfig)
@@ -115,6 +123,9 @@ class FaultConfig:
             raise ValueError("max_retries must be >= 0")
         if self.quorum < 0:
             raise ValueError("quorum must be >= 0")
+        if self.staleness_budget < 0:
+            raise ValueError("staleness_budget must be >= 0 "
+                             "(0 = unlimited)")
 
 
 @dataclasses.dataclass
@@ -127,6 +138,9 @@ class RoundFaults:
     surviving lossy clients arrive ``extra_delay`` seconds late having
     moved ``extra_bytes`` duplicate bytes in ``retries`` retransmits.
     ``corrupt`` holds 0 (clean) or 1 + index into :data:`CORRUPT_KINDS`.
+    ``outages`` carries the epoch's cell-level ``outage_begin`` /
+    ``outage_end`` incident dicts (repro.sim.outages), forwarded to the
+    observability layer by :func:`incident_events`.
     """
 
     crashed: np.ndarray        # bool
@@ -137,6 +151,7 @@ class RoundFaults:
     extra_delay: np.ndarray    # float, seconds added to the upload leg
     sent_bytes: np.ndarray     # float, bytes wasted by aborted uploads
     corrupt: np.ndarray        # int, 0 = clean
+    outages: list = dataclasses.field(default_factory=list)
 
     @classmethod
     def clean(cls, n: int) -> "RoundFaults":
@@ -167,6 +182,14 @@ class FaultModel:
         q = self.config.quorum
         k = int(np.ceil(q * scheduled)) if 0.0 < q < 1.0 else int(q)
         return max(1, min(k, scheduled) if scheduled else 1)
+
+    def outage_mask(self, epoch: int) -> Optional[np.ndarray]:
+        """(N,) bool mask of clients inside an active correlated outage,
+        or None.  Overridden by the cell-outage overlay
+        (:class:`repro.sim.outages.CellOutageModel`); the base models
+        have no correlated structure."""
+        del epoch
+        return None
 
 
 def _chunk_losses(rng: np.random.Generator, wire: float,
@@ -311,11 +334,14 @@ def incident_events(fr: RoundFaults, scheduled: np.ndarray) -> list:
     ``scheduled`` is the (N,) bool mask of clients dispatched this round;
     incidents of unscheduled clients never happened on the timeline and
     are not reported.  Kinds: ``crash``, ``abort``, ``retry`` (survived
-    retransmits), ``corrupt``.  Quarantine and quorum-skip incidents are
-    emitted by the runner, which owns those decisions.
+    retransmits), ``corrupt``, plus the cell-level ``outage_begin`` /
+    ``outage_end`` transitions carried on ``fr.outages`` (cell id, member
+    clients, duration in rounds — these are fleet-scoped, not filtered by
+    the schedule).  Quarantine and quorum-skip incidents are emitted by
+    the runner, which owns those decisions.
     """
     sched = np.asarray(scheduled, bool)
-    out = []
+    out = [dict(ev) for ev in fr.outages]
     for i in np.flatnonzero(sched & fr.crashed):
         out.append({"kind": "crash", "client": int(i),
                     "crash_frac": float(fr.crash_frac[i])})
@@ -421,15 +447,24 @@ def screen_quarantine(norms: np.ndarray, finite: np.ndarray,
 
     Among ``candidates`` (this round's arrivals): quarantine non-finite
     updates, and updates whose norm exceeds ``norm_factor`` x the median
-    finite-arrival norm (only when at least ``min_reference`` finite
-    arrivals anchor the median).  Returns the (N,) quarantine mask.
+    finite-arrival norm.  Returns the (N,) quarantine mask.
+
+    Small-survivor policy (pinned in tests/test_faults.py): the
+    norm-anomaly screen needs a meaningful median, so it only engages
+    when at least ``max(min_reference, 3)`` finite arrivals anchor it.
+    With n <= 2 finite survivors the median of 1–2 norms says nothing
+    about which one is anomalous (n=1 can never exceed 10x itself; n=2
+    would let either arrival veto the other), so tiny survivor sets are
+    screened by the finite check ONLY — never by the norm test,
+    regardless of how low ``min_reference`` is configured.
     """
     cand = np.asarray(candidates, bool)
     quarantine = np.zeros_like(cand)
     if vcfg.screen_nonfinite:
         quarantine |= cand & ~np.asarray(finite, bool)
     good = cand & np.asarray(finite, bool)
-    if vcfg.norm_factor > 0 and int(good.sum()) >= vcfg.min_reference:
+    min_ref = max(int(vcfg.min_reference), 3)
+    if vcfg.norm_factor > 0 and int(good.sum()) >= min_ref:
         ref = float(np.median(norms[good]))
         if ref > 0.0:
             quarantine |= good & (norms > vcfg.norm_factor * ref)

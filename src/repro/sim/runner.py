@@ -70,6 +70,11 @@ from repro.sim.network import (NetworkModel, StaticNetwork,
                                telemetry_with_conditions)
 from repro.sim.policies import AsyncPolicy, DeadlinePolicy, make_policy
 
+# Async-path fault marker (sim/faults.py): the instant a dispatched
+# client's crash or abort becomes known to the server, so the slot
+# re-enters the free-running pipeline at that simulated time.
+CLIENT_DOWN = "client_down"
+
 
 @dataclasses.dataclass
 class SimConfig:
@@ -232,7 +237,8 @@ class _GroupedWaveFleet:
         self.state = round_engine.GroupedFleetState(
             runner.groups, runner.group_coverage, runner.client_params,
             runner.cfg.selection, runner.tel.num_clients, runner.cfg.comm,
-            mesh=getattr(runner, "mesh", None))
+            mesh=getattr(runner, "mesh", None),
+            robust_agg=runner.cfg.robust_agg)
 
     def train(self, local_train_fn, rk, part, losses, d_used) -> List:
         return self.state.train(local_train_fn, rk, part, losses, d_used,
@@ -345,17 +351,22 @@ class SimRunner:
             self.engine = round_engine.ShardedRoundEngine(
                 cfg.selection, cfg.comm, mesh=self.mesh,
                 collective=cfg.mesh_collective,
-                keep_fraction=cfg.mesh_keep_fraction)
+                keep_fraction=cfg.mesh_keep_fraction,
+                robust_agg=cfg.robust_agg)
         else:
             if self.mesh is not None and cfg.mesh_collective != "dense":
                 raise ValueError(
                     "sparse cross-device compaction rides the homogeneous "
                     "sharded engine; ragged (grouped) fleets reduce with "
                     "the dense psum collective")
-            self.engine = round_engine.BatchedRoundEngine(cfg.selection,
-                                                          cfg.comm)
+            self.engine = round_engine.BatchedRoundEngine(
+                cfg.selection, cfg.comm, robust_agg=cfg.robust_agg)
+        # async ragged merges only; ragged + mesh + non-mean robust_agg
+        # is rejected by GroupedRoundEngine itself, so homogeneous
+        # sharded robust runs must not trip it here
         self.grouped_engine = round_engine.GroupedRoundEngine(
-            cfg.selection, cfg.comm, self.mesh)
+            cfg.selection, cfg.comm, self.mesh,
+            cfg.robust_agg if self.heterogeneous else "mean")
         # per-client wire specs: the codec byte model the event timeline
         # charges on the uplink leg (repro.comm)
         self.wire_specs = [
@@ -367,11 +378,22 @@ class SimRunner:
         self._global_spec = WireSpec.from_params(
             global_params, cfg.selection.channel_axis)
         self.faults = faults
-        if faults is not None and isinstance(self.policy, AsyncPolicy):
+        if faults is not None and isinstance(self.policy, AsyncPolicy) \
+                and faults.may_corrupt:
             raise ValueError(
-                "fault injection is wave-policy only (sync/deadline/"
-                "retry): the async path has no round to skip and no "
-                "quorum to hold")
+                "payload corruption is wave-policy only (sync/deadline/"
+                "retry): the async merge consumes pending host pytrees, "
+                "not a staged stacked upload the runner can override; "
+                "async fault runs support crash / loss / retry and the "
+                "staleness-budget quorum")
+        if isinstance(self.policy, AsyncPolicy) and (
+                cfg.checkpoint_every is not None
+                or cfg.resume_from):
+            raise ValueError(
+                "checkpoint/resume snapshots at wave-round boundaries; "
+                "the async merge stream keeps in-flight pending state "
+                "with no such boundary — run checkpointing under the "
+                "sync/deadline/retry policies")
         if self.heterogeneous:
             if faults is not None and faults.may_corrupt:
                 raise ValueError(
@@ -460,7 +482,8 @@ class SimRunner:
                              cond, total: Optional[float] = None, *,
                              extra_delay: float = 0.0,
                              cutoff: Optional[float] = None,
-                             drop_upload: bool = False
+                             drop_upload: bool = False,
+                             crash_frac: Optional[float] = None
                              ) -> Tuple[float, float, float]:
         """Queue client i's download -> compute -> upload event chain.
 
@@ -479,9 +502,14 @@ class SimRunner:
         upload arrival back (retransmits + backoff), ``cutoff`` is a
         crash instant — events after it are never scheduled — and
         ``drop_upload`` suppresses the upload event entirely (crashes,
-        abandoned transfers).  Returns the (download, compute, upload)
-        completion times whether or not the events were scheduled, so
-        the caller can reason about in-flight progress at a cut.
+        abandoned transfers).  ``crash_frac`` is the ASYNC path's crash
+        hook: the cutoff is derived from the client's own computed round
+        trip (the wave paths know theirs up front and pass ``cutoff``)
+        and a :data:`CLIENT_DOWN` marker is queued at the crash instant
+        so the free-running pipeline re-dispatches the slot.  Returns
+        the (download, compute, upload) completion times whether or not
+        the events were scheduled, so the caller can reason about
+        in-flight progress at a cut.
         """
         u_eff = float(self.tel.model_bytes[i]) * (1.0 - d_i)
         r_d = float(cond.downlink_rate[i])
@@ -497,6 +525,10 @@ class SimRunner:
                                                  np.asarray([d_i]),
                                                  self.cfg.comm)[0]))
             up = cp + u_up / r_u + extra_delay
+        if crash_frac is not None:
+            cutoff = t0 + float(crash_frac) * (up - t0)
+            drop_upload = True
+            self.sim.schedule_at(cutoff, CLIENT_DOWN, i)
         if cutoff is None or dl <= cutoff:
             self.sim.schedule_at(dl, DOWNLOAD_DONE, i, ("downlink", r_d))
         if cutoff is None or cp <= cutoff:
@@ -548,6 +580,52 @@ class SimRunner:
                          observed_telemetry=self.observed.telemetry(
                              np.ones(self.tel.num_clients)))
 
+    # -- crash-resume snapshots (repro.checkpoint) ---------------------------
+
+    def _wave_snapshot(self, losses: np.ndarray) -> Dict:
+        """Everything the next wave round reads, as one checkpointable
+        pytree: per-client params (unstacked — the fleet re-stacks them
+        identically on resume), global params, the protocol PRNG key,
+        the loss view, the allocated D_{t+1}, and the observed-telemetry
+        EWMAs.  The sim clock + event trace ride the sidecar (extras);
+        fault / outage / network draws are keyed per epoch and need no
+        persisting (repro.checkpoint.run_state)."""
+        return {"clients": self.client_params,
+                "global": self.global_params,
+                "rng": self.rng,
+                "losses": np.asarray(losses, np.float64),
+                "dropout": np.asarray(self.dropout, np.float64),
+                "obs_uplink": self.observed.uplink,
+                "obs_downlink": self.observed.downlink,
+                "obs_compute": self.observed.compute}
+
+    def _wave_restore(self, arrays: Dict) -> np.ndarray:
+        """Inverse of :meth:`_wave_snapshot`; returns the loss view."""
+        self.client_params = [jax.tree_util.tree_map(jnp.asarray, p)
+                              for p in arrays["clients"]]
+        self.global_params = jax.tree_util.tree_map(jnp.asarray,
+                                                    arrays["global"])
+        self.rng = jnp.asarray(arrays["rng"])
+        self.dropout = np.asarray(arrays["dropout"], np.float64)
+        self.observed.uplink = np.asarray(arrays["obs_uplink"], float)
+        self.observed.downlink = np.asarray(arrays["obs_downlink"], float)
+        self.observed.compute = np.asarray(arrays["obs_compute"], float)
+        return np.asarray(arrays["losses"], np.float64)
+
+    def _maybe_checkpoint(self, t: int, fleet, losses: np.ndarray,
+                          history: List[RoundRecord]) -> None:
+        """Atomic RunState snapshot after round ``t`` when due
+        (``checkpoint_every=None`` never reaches the fleet export)."""
+        cfg = self.cfg
+        if cfg.checkpoint_every is None or t % cfg.checkpoint_every:
+            return
+        from repro import checkpoint as ckpt_mod   # checkpoint -> sim
+        self.client_params = fleet.export()
+        ckpt_mod.save_run_state(cfg.checkpoint_path, ckpt_mod.RunState(
+            round=t, arrays=self._wave_snapshot(losses), history=history,
+            extra={"sim_time": float(self.sim.now),
+                   "trace": [list(e) for e in self.sim.trace]}))
+
     # -- wave policies: sync / deadline --------------------------------------
 
     def run_waves(self, local_train_fn: Callable, eval_fn=None,
@@ -572,12 +650,26 @@ class SimRunner:
         losses = np.ones(n)
         history: List[RoundRecord] = []
         sim = self.sim
+        # --- crash-resume (repro.checkpoint): restore BEFORE the fleet
+        # stacks client state, so the wave fleet is built from the
+        # snapshot; all fault/outage/network draws are keyed per epoch
+        # and replay free from start_t
+        start_t = 1
+        if cfg.resume_from:
+            from repro import checkpoint as ckpt_mod   # checkpoint -> sim
+            st = ckpt_mod.load_run_state(cfg.resume_from,
+                                         self._wave_snapshot(losses))
+            losses = self._wave_restore(st.arrays)
+            history = st.history
+            start_t = st.round + 1
+            sim.advance_to(float(st.extra.get("sim_time", 0.0)))
+            sim.trace[:] = [tuple(e) for e in st.extra.get("trace", [])]
         fleet = (_GroupedWaveFleet(self) if self.heterogeneous
                  else _StackedWaveFleet(self))
         partial_on = (isinstance(self.policy, DeadlinePolicy)
                       and self.policy.partial)
 
-        for t in range(1, rounds + 1):
+        for t in range(start_t, rounds + 1):
             host0 = time.perf_counter()
             self.rng, rk = jax.random.split(self.rng)
             part = self._participants(losses)
@@ -802,6 +894,7 @@ class SimRunner:
                     obs.round(history[-1], path="sim", scheme=cfg.scheme,
                               client_times=np.where(
                                   arrived, arr_time - dispatch, np.nan))
+                self._maybe_checkpoint(t, fleet, losses, history)
                 continue
 
             # --- fused engine step: exclusion == 0 aggregation weight;
@@ -842,10 +935,18 @@ class SimRunner:
                     mode=cfg.mesh_collective,
                     k_fraction=cfg.mesh_keep_fraction, obs=obs)
 
-            # --- allocation for round t+1, from what the server observed
+            # --- allocation for round t+1, from what the server observed.
+            # A correlated outage (sim/outages.py) excludes its cells
+            # wholesale: the LP re-solves on survivor-only telemetry and
+            # the downed cells keep their previous rates (None = no
+            # outage overlay, bit-identical to the plain solve)
             if cfg.scheme == "feddd":
+                om = (self.faults.outage_mask(t - 1)
+                      if self.faults is not None else None)
                 with obs.span("allocate", round=t):
-                    self._allocate(losses)
+                    self._allocate(losses,
+                                   alive=(~om if om is not None
+                                          and om.any() else None))
 
             if eval_fn and t % self.simcfg.eval_every == 0:
                 with obs.span("eval", round=t):
@@ -871,6 +972,7 @@ class SimRunner:
                 obs.round(history[-1], path="sim", scheme=cfg.scheme,
                           client_times=np.where(
                               arrived, arr_time - dispatch, np.nan))
+            self._maybe_checkpoint(t, fleet, losses, history)
 
         self.client_params = fleet.export()
         return self._result(history)
@@ -915,10 +1017,22 @@ class SimRunner:
         train_key = jax.random.fold_in(self.rng, 0)
         agg_key = jax.random.fold_in(self.rng, 1)
         seq = 0
+        # async fault bookkeeping (sim/faults.py): draws are keyed by the
+        # client's OWN dispatch epoch, so the stream is independent of
+        # merge interleaving and replay-identical across processes
+        faults = self.faults
+        budget = (faults.config.staleness_budget
+                  if faults is not None else 0)
+        pend_wire = np.zeros(n)      # codec bytes of the pending upload
+        pend_extra = np.zeros(n)     # retransmitted duplicate bytes
+        abandoned_acc = 0.0
+        retries_acc = 0
+        no_progress = 0
 
         def dispatch(i: int) -> None:
-            nonlocal seq
-            cond = self.network.conditions(int(epochs[i]))
+            nonlocal seq, abandoned_acc, retries_acc
+            e = int(epochs[i])
+            cond = self.network.conditions(e)
             epochs[i] += 1
             d_i = float(self.dropout[i]) if cfg.scheme == "feddd" else 0.0
             p_new, loss = local_train_fn(
@@ -926,7 +1040,55 @@ class SimRunner:
             seq += 1
             pending[i] = (self.client_params[i], p_new, loss, d_i)
             dispatch_version[i] = version
-            self._schedule_round_trip(i, sim.now, d_i, cond)
+            pend_extra[i] = 0.0
+            pend_wire[i] = (
+                float(self.tel.model_bytes[i]) * (1.0 - d_i)
+                if cfg.comm.is_default else
+                float(analytic_uplink_vector([self.wire_specs[i]],
+                                             np.asarray([d_i]),
+                                             cfg.comm)[0]))
+            if faults is None:
+                self._schedule_round_trip(i, sim.now, d_i, cond)
+                return
+            fr = faults.round_faults(e, np.full(n, pend_wire[i]),
+                                     np.asarray(cond.uplink_rate, float))
+            if fr.crashed[i]:
+                # the client dies mid-trip; its upload never arrives and
+                # the CLIENT_DOWN marker re-enters the slot at the crash
+                # instant (a crash-resume of the CLIENT, not the server)
+                t0 = sim.now
+                _, cp_t, up_t = self._schedule_round_trip(
+                    i, t0, d_i, cond, crash_frac=float(fr.crash_frac[i]))
+                cutoff = t0 + float(fr.crash_frac[i]) * (up_t - t0)
+                if cutoff > cp_t and up_t > cp_t:
+                    abandoned_acc += pend_wire[i] * min(
+                        (cutoff - cp_t) / (up_t - cp_t), 1.0)
+                if obs.active:
+                    obs.fault(merges + 1, {
+                        "kind": "crash", "client": int(i),
+                        "crash_frac": float(fr.crash_frac[i])})
+            elif fr.aborted[i]:
+                # retransmit budget exhausted: the bytes already sent are
+                # wasted and the slot re-enters when the client gives up
+                _, _, up_t = self._schedule_round_trip(
+                    i, sim.now, d_i, cond,
+                    extra_delay=float(fr.extra_delay[i]),
+                    drop_upload=True)
+                sim.schedule_at(up_t, CLIENT_DOWN, i)
+                abandoned_acc += float(fr.sent_bytes[i])
+                retries_acc += int(fr.retries[i])
+                if obs.active:
+                    obs.fault(merges + 1, {
+                        "kind": "abort", "client": int(i),
+                        "retries": int(fr.retries[i]),
+                        "sent_bytes": float(fr.sent_bytes[i])})
+            else:
+                if fr.retries[i]:
+                    retries_acc += int(fr.retries[i])
+                    pend_extra[i] = float(fr.extra_bytes[i])
+                self._schedule_round_trip(
+                    i, sim.now, d_i, cond,
+                    extra_delay=float(fr.extra_delay[i]))
 
         for i in range(n):
             dispatch(i)
@@ -937,12 +1099,49 @@ class SimRunner:
         while merges < rounds and sim.queue:
             ev = sim.step()
             self.observed.observe(ev)
+            if ev.kind == CLIENT_DOWN:
+                # crash/abort became known: the slot re-enters now.  The
+                # counter guards the degenerate every-dispatch-dies
+                # config, which would otherwise spin forever
+                no_progress += 1
+                if no_progress > 10_000 * max(n, 1):
+                    raise RuntimeError(
+                        "async run is making no progress: every "
+                        "re-dispatched client crashed or aborted "
+                        f"{no_progress} times in a row — lower "
+                        "crash_rate / loss_rate")
+                dispatch(ev.client)
+                continue
             if ev.kind != UPLOAD_DONE:
                 continue
+            no_progress = 0
             buffer.append(ev.client)
             losses[ev.client] = float(pending[ev.client][2])
             if len(buffer) < k_buf:
                 continue
+
+            # --- staleness budget (FaultConfig.staleness_budget): the
+            # buffered-async analogue of the wave quorum.  Entries staler
+            # than the budget are dropped (bytes charged as abandoned,
+            # client re-dispatched); the merge proceeds only when the
+            # surviving buffered mass still meets the quorum floor,
+            # otherwise the server keeps buffering
+            if faults is not None and budget:
+                stale = (version - dispatch_version[buffer]) > budget
+                if stale.any():
+                    for i in np.asarray(buffer)[stale]:
+                        i = int(i)
+                        abandoned_acc += pend_wire[i] + pend_extra[i]
+                        if obs.active:
+                            obs.fault(merges + 1, {
+                                "kind": "stale_drop", "client": i,
+                                "staleness": int(version
+                                                 - dispatch_version[i]),
+                                "budget": int(budget)})
+                        dispatch(i)
+                    buffer = [i for i, s in zip(buffer, stale) if not s]
+                if len(buffer) < faults.quorum_floor(k_buf):
+                    continue
 
             # --- merge the buffer: one fused engine step over K clients
             merges += 1
@@ -976,6 +1175,9 @@ class SimRunner:
             uploaded, wire = account_uplink(
                 dens, np.ones(len(buffer), bool),
                 self.tel.model_bytes[buffer], oh, cfg.comm, obs=obs)
+            if faults is not None:
+                # surviving retransmits moved duplicate bytes on the wire
+                wire += float(np.sum(pend_extra[buffer]))
 
             if cfg.scheme == "feddd":
                 with obs.span("allocate", round=merges):
@@ -992,12 +1194,14 @@ class SimRunner:
                 uploaded_fraction=uploaded / max(self.full_bytes, 1e-9),
                 uploaded_bytes=uploaded, wire_bytes=wire,
                 participants=len(buffer), survivors=len(buffer),
+                retries=retries_acc, abandoned_bytes=abandoned_acc,
                 metrics=metrics))
             if obs.active:
                 obs.round(history[-1], path="sim_async",
                           scheme=cfg.scheme)
             prev_time = ev.time
             host_prev = time.perf_counter()
+            retries_acc, abandoned_acc = 0, 0.0
 
             for i in buffer:
                 dispatch(i)     # re-enter immediately: no fleet barrier
@@ -1029,11 +1233,17 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
         them by shape and drives the grouped engine — stragglers x ragged
         fleets compose freely with every policy.
       faults: a :class:`repro.sim.faults.FaultModel` — client churn, lossy
-        uplinks, corrupted payloads, quorum-gated degradation.  ``None``
-        (the default) leaves every run bit-identical to the fault-free
-        simulator.  Wave policies only.
+        uplinks, corrupted payloads, quorum-gated degradation, and the
+        correlated cell-outage overlay
+        (:class:`repro.sim.outages.CellOutageModel`).  ``None`` (the
+        default) leaves every run bit-identical to the fault-free
+        simulator.  Crash / loss / retry channels and the
+        staleness-budget quorum also apply to the async policy; payload
+        corruption stays wave-only.
       **cfg_kw: ProtocolConfig fields (rounds, a_server, d_max, delta, h,
-        seed, selection, allocator).
+        seed, selection, allocator, robust_agg, checkpoint_every,
+        checkpoint_path, resume_from — the last three drive bit-identical
+        crash-resume of wave-policy runs; see repro.checkpoint).
     """
     simcfg = sim or SimConfig()
     if rounds is not None:

@@ -520,10 +520,12 @@ def test_fault_guards_reject_unsupported_combinations():
     clients = [_sub_params(jax.random.PRNGKey(100 + i), w)
                for i, w in enumerate((12, 8, 6))]
     kw = dict(rounds=1, a_server=0.6, seed=0)
+    # async supports crash/loss/staleness but NOT wire corruption (the
+    # merge consumes pending host pytrees, not a staged stacked upload)
     with pytest.raises(ValueError, match="wave-policy only"):
         run_sim("feddd", params, tel, _ltf, None,
                 sim=SimConfig(policy="async"),
-                faults=RandomFaults(FaultConfig()), **kw)
+                faults=RandomFaults(FaultConfig(corrupt_rate=0.2)), **kw)
     with pytest.raises(ValueError, match="corruption"):
         run_sim("feddd", params, tel, _ltf, None,
                 sim=SimConfig(policy="sync"), client_params=clients,
@@ -610,3 +612,222 @@ def test_faulty_run_deterministic_across_processes():
         digests.append(out.stdout.strip())
     assert digests[0] == digests[1]
     assert len(digests[0]) == 64
+
+
+# --- survivability: small-survivor validation policy --------------------------
+
+def test_norm_screen_never_engages_below_three_finite_survivors():
+    """n <= 2 finite survivors: the norm-anomaly screen stays out of the
+    loop even when ``min_reference`` is configured below the hard floor
+    of 3 — the median of 1-2 norms cannot identify an anomaly (n=1 can
+    never exceed a factor of itself, n=2 would let either arrival veto
+    the other)."""
+    from repro.sim import ValidationConfig
+    from repro.sim.faults import screen_quarantine
+    vcfg = ValidationConfig(min_reference=1, norm_factor=2.0)
+    q = screen_quarantine(np.array([1e12]), np.array([True]),
+                          np.array([True]), vcfg)
+    assert not q.any()
+    q = screen_quarantine(np.array([1.0, 1e12]), np.array([True, True]),
+                          np.array([True, True]), vcfg)
+    assert not q.any()
+    # with 3 finite survivors the screen engages and takes the outlier
+    q = screen_quarantine(np.array([1.0, 1.1, 1e12]),
+                          np.array([True, True, True]),
+                          np.array([True, True, True]), vcfg)
+    assert q.tolist() == [False, False, True]
+
+
+def test_finite_screen_still_fires_for_tiny_survivor_sets():
+    """The non-finite check is unconditional — it quarantines NaN/Inf
+    arrivals even when the survivor set is too small for the norm
+    screen; non-candidates are never touched."""
+    from repro.sim import ValidationConfig
+    from repro.sim.faults import screen_quarantine
+    vcfg = ValidationConfig(min_reference=1, norm_factor=2.0)
+    q = screen_quarantine(np.array([np.nan, 1.0]),
+                          np.array([False, True]),
+                          np.array([True, True]), vcfg)
+    assert q.tolist() == [True, False]
+    q = screen_quarantine(np.array([np.nan, 1.0]),
+                          np.array([False, True]),
+                          np.array([False, True]), vcfg)
+    assert q.tolist() == [False, False]
+
+
+# --- survivability: fault-draw locality (property) ----------------------------
+
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_round_faults_draws_depend_only_on_own_client(data):
+    """Every client's fault draw is a pure function of (seed, epoch,
+    client, own telemetry): restricting the scheduled set to a prefix, or
+    permuting OTHER clients' telemetry, never changes a client's draw.
+    This is what makes fault streams replay-identical across executors
+    that visit clients in different orders."""
+    seed = data.draw(st.integers(0, 2 ** 16))
+    epoch = data.draw(st.integers(0, 3))
+    n = data.draw(st.integers(2, 8))
+    m = data.draw(st.integers(1, n))
+    rng = np.random.default_rng(seed + 1)
+    wire = rng.uniform(2e3, 2e5, n)
+    up = rng.uniform(1e3, 5e3, n)
+    model = RandomFaults(FaultConfig(crash_rate=0.35, loss_rate=0.3,
+                                     corrupt_rate=0.25, max_retries=3,
+                                     seed=seed))
+    fields = ("crashed", "crash_frac", "aborted", "retries",
+              "extra_bytes", "extra_delay", "sent_bytes", "corrupt")
+    full = model.round_faults(epoch, wire, up)
+    sub = model.round_faults(epoch, wire[:m], up[:m])
+    for f in fields:
+        np.testing.assert_array_equal(getattr(full, f)[:m],
+                                      getattr(sub, f), err_msg=f)
+    i = data.draw(st.integers(0, n - 1))
+    wire2, up2 = wire[::-1].copy(), up[::-1].copy()
+    wire2[i], up2[i] = wire[i], up[i]
+    other = model.round_faults(epoch, wire2, up2)
+    for f in fields:
+        np.testing.assert_array_equal(getattr(full, f)[i],
+                                      getattr(other, f)[i], err_msg=f)
+
+
+# --- survivability: corrupt-but-finite clients vs robust aggregation ----------
+
+def _byzantine_ltf(p, idx, key):
+    """Client 0 returns a finite but wildly wrong update; the rest are
+    honest (same contraction as _ltf)."""
+    if idx == 0:
+        return jax.tree_util.tree_map(lambda x: x + 500.0, p), 1.0
+    return _ltf(p, idx, key)
+
+
+def _peak(res):
+    return max(float(jnp.max(jnp.abs(l)))
+               for l in jax.tree_util.tree_leaves(res.global_params))
+
+
+def test_corrupt_but_finite_client_mean_diverges_trimmed_holds():
+    """ISSUE acceptance, fault-layer edition: a corrupt-but-FINITE
+    client slips past a disabled norm screen and blows up the plain
+    masked mean, while the trimmed-mean engine variant holds the global
+    bounded; with the default screen the norm quarantine catches the
+    same client, so either defense alone survives the attack."""
+    from repro.sim import ValidationConfig
+    n = 6
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(sim=SimConfig(policy="sync"), rounds=3, a_server=0.6,
+              h=3, seed=0)
+    no_screen = RandomFaults(FaultConfig(
+        validation=ValidationConfig(norm_factor=0.0)))
+    diverged = run_sim("feddd", params, tel, _byzantine_ltf, None,
+                       faults=no_screen, **kw)
+    assert _peak(diverged) > 50.0
+    trimmed = run_sim("feddd", params, tel, _byzantine_ltf, None,
+                      faults=RandomFaults(FaultConfig(
+                          validation=ValidationConfig(norm_factor=0.0))),
+                      robust_agg="trimmed:0.25", **kw)
+    assert _peak(trimmed) < 10.0
+    screened = run_sim("feddd", params, tel, _byzantine_ltf, None,
+                       faults=RandomFaults(FaultConfig()), **kw)
+    assert _peak(screened) < 10.0
+    assert sum(r.quarantined_bytes for r in screened.history) > 0
+
+
+# --- survivability: async faults ---------------------------------------------
+
+def test_async_zero_rate_faults_bit_identical():
+    """A zero-rate fault model on the buffered-async path is fully
+    transparent: identical records, event trace, and final params."""
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    kw = dict(sim=SimConfig(policy="async"), rounds=4, a_server=0.6,
+              h=2, seed=0)
+    base = run_sim("feddd", params, _tel(n), _ltf, None, **kw)
+    faulty = run_sim("feddd", params, _tel(n), _ltf, None,
+                     faults=RandomFaults(FaultConfig()), **kw)
+    assert _trees_equal(base.global_params, faulty.global_params)
+    assert base.event_trace == faulty.event_trace
+    assert len(base.history) == len(faulty.history)
+    for a, b in zip(base.history, faulty.history):
+        assert (a.sim_time, a.participants, a.survivors, a.wire_bytes,
+                a.retries, a.abandoned_bytes) == \
+               (b.sim_time, b.participants, b.survivors, b.wire_bytes,
+                b.retries, b.abandoned_bytes)
+        assert np.array_equal(a.dropout_rates, b.dropout_rates)
+
+
+def test_async_crash_and_abort_faults_complete_with_accounting(tmp_path):
+    """Crash/abort faults on the async path re-dispatch the slot instead
+    of stalling the buffer: every merge still fills, fault incidents
+    reach the run log, and the run is deterministic."""
+    import json
+    from repro.obs import ObsConfig
+    from repro.sim import AsyncPolicy
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    path = tmp_path / "async.jsonl"
+
+    def go(jsonl=None):
+        obs = (ObsConfig(enabled=True, jsonl_path=str(jsonl))
+               if jsonl else None)
+        kw = dict(sim=SimConfig(policy=AsyncPolicy(buffer_size=2)),
+                  rounds=5, a_server=0.6, h=2, seed=0,
+                  faults=RandomFaults(FaultConfig(
+                      crash_rate=0.25, loss_rate=0.25, max_retries=1,
+                      seed=11)))
+        if obs is not None:
+            kw["obs"] = obs
+        return run_sim("feddd", params, _tel(n), _ltf, None, **kw)
+
+    res = go(jsonl=path)
+    assert len(res.history) == 5
+    assert all(r.participants == 2 for r in res.history)
+    kinds = {json.loads(line).get("kind")
+             for line in path.read_text().splitlines()
+             if json.loads(line).get("event") == "fault"}
+    assert kinds & {"crash", "abort"}
+    again = go()
+    assert _trees_equal(res.global_params, again.global_params)
+    assert [r.sim_time for r in res.history] == \
+           [r.sim_time for r in again.history]
+    assert [(r.retries, r.abandoned_bytes) for r in res.history] == \
+           [(r.retries, r.abandoned_bytes) for r in again.history]
+
+
+def test_async_staleness_budget_drops_stale_buffered_updates(tmp_path):
+    """With a staleness budget, an extreme straggler's buffered update
+    is dropped at merge time (stale_drop incident + abandoned bytes) and
+    the client is re-dispatched; without a budget the same update is
+    merged."""
+    import json
+    from repro.obs import ObsConfig
+    from repro.sim import AsyncPolicy
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+
+    def go(budget, jsonl=None):
+        tel = _tel(n)
+        tel.uplink_rate[0] /= 20.0       # heavy straggler
+        kw = dict(sim=SimConfig(policy=AsyncPolicy(buffer_size=2)),
+                  rounds=6, a_server=0.6, h=2, seed=0,
+                  faults=RandomFaults(FaultConfig(
+                      staleness_budget=budget)))
+        if jsonl is not None:
+            kw["obs"] = ObsConfig(enabled=True, jsonl_path=str(jsonl))
+        return run_sim("feddd", params, tel, _ltf, None, **kw)
+
+    path = tmp_path / "stale.jsonl"
+    res = go(budget=1, jsonl=path)
+    drops = [json.loads(line)
+             for line in path.read_text().splitlines()
+             if json.loads(line).get("kind") == "stale_drop"]
+    assert drops, "no stale_drop incident recorded"
+    assert all(d["budget"] == 1 and d["staleness"] > 1 for d in drops)
+    assert sum(r.abandoned_bytes for r in res.history) > 0
+    assert len(res.history) == 6
+    lax = go(budget=0)
+    assert sum(r.abandoned_bytes for r in lax.history) == 0

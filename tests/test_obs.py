@@ -409,3 +409,37 @@ def test_bench_trajectory_present():
     assert "acceptance" in payload
     for per in payload["clients"].values():
         assert "scanned" in per and "rounds_per_sec" in per["scanned"]
+
+
+def test_report_renders_outage_windows(tmp_path, capsys):
+    """Correlated cell outages appear as an 'Outage windows' section:
+    closed windows with durations, open windows flagged, members listed."""
+    from repro.sim import CellOutageModel, OutageConfig
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n, _nbytes(params))
+    log = tmp_path / "outages.jsonl"
+    # p_out = p_back = 1: cells alternate down/up from epoch 1, so the
+    # log holds one closed window (duration 1) and one still open
+    run_sim("feddd", params, tel, _ltf, None,
+            sim=SimConfig(policy="sync"),
+            faults=CellOutageModel(
+                n, OutageConfig(cells=2, p_out=1.0, p_back=1.0)),
+            rounds=4, a_server=0.6, h=3, seed=0,
+            obs=ObsConfig(enabled=True, jsonl_path=str(log)))
+    rc = obs_report.main([str(log)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "Outage windows" in out
+    assert "cell 0" in out and "cell 1" in out
+    assert "epoch down" in out            # a closed window with duration
+    assert "still down at end" in out     # an open window
+    assert "members 0,2" in out           # round-robin cell 0 of n=4
+    # a log with no outage incidents renders no outage section
+    clean = tmp_path / "clean.jsonl"
+    run_sim("feddd", params, tel, _ltf, None,
+            sim=SimConfig(policy="sync"),
+            rounds=2, a_server=0.6, h=3, seed=0,
+            obs=ObsConfig(enabled=True, jsonl_path=str(clean)))
+    obs_report.main([str(clean)])
+    assert "Outage windows" not in capsys.readouterr().out

@@ -1,0 +1,297 @@
+"""Correlated cell-outage layer (repro/sim/outages.py): inert-config
+transparency, chain determinism, overlay semantics, and the survivor-only
+allocation re-solve.
+
+Pins the survivability contracts:
+
+* inert configs — ``cells=0`` / ``p_out=0`` make the overlay a pure
+  pass-through: ``round_faults`` returns the inner model's draw
+  bit-identically and a zero-config model leaves a full simulator run
+  BIT-IDENTICAL to the fault-free one;
+* determinism — the Gilbert–Elliott chain is a pure function of
+  (seed, epoch): query order, prior queries, and process boundaries
+  cannot change it, and epoch 0 is always all-up;
+* overlay semantics — every member of a down cell crashes with a
+  per-(epoch, client) keyed crash fraction, overriding whatever the
+  inner draw said (retries/corruption zeroed);
+* incidents — up->down / down->up transitions surface as
+  ``outage_begin`` / ``outage_end`` events (cell, members, duration)
+  through :func:`repro.sim.faults.incident_events`;
+* end-to-end — a sim run under the overlay loses exactly the downed
+  cells each round and the post-round LP re-solve holds the downed
+  clients' dropout rates instead of consuming budget from stale rows.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import ClientTelemetry
+from repro.sim import (CellOutageModel, FaultConfig, OutageConfig,
+                       RandomFaults, ScriptedFaults, SimConfig, run_sim)
+from repro.sim.faults import RoundFaults, incident_events
+from repro.sim.outages import _TAG_OUTAGE
+
+pytestmark = pytest.mark.flcore
+
+
+# --- shared fixtures ---------------------------------------------------------
+
+def _params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc0": {"w": jax.random.normal(k1, (20, 12)), "b": jnp.zeros(12)},
+        "fc1": {"w": jax.random.normal(k2, (12, 5)), "b": jnp.zeros(5)},
+    }
+
+
+def _tel(n, seed=0):
+    rng = np.random.default_rng(seed)
+    nbytes = float(sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(
+                           _params(jax.random.PRNGKey(0)))))
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+
+def _ltf(p, idx, key):
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _faults_equal(a: RoundFaults, b: RoundFaults) -> bool:
+    return all(np.array_equal(getattr(a, f), getattr(b, f))
+               for f in ("crashed", "crash_frac", "aborted", "retries",
+                         "extra_bytes", "extra_delay", "sent_bytes",
+                         "corrupt"))
+
+
+# --- config / assignment ------------------------------------------------------
+
+def test_outage_config_validates():
+    with pytest.raises(ValueError, match="cells"):
+        OutageConfig(cells=-1)
+    with pytest.raises(ValueError, match="p_out"):
+        OutageConfig(cells=2, p_out=1.5)
+    with pytest.raises(ValueError, match="p_back"):
+        OutageConfig(cells=2, p_back=-0.1)
+
+
+def test_round_robin_assignment_and_members():
+    m = CellOutageModel(7, OutageConfig(cells=3, p_out=0.2))
+    np.testing.assert_array_equal(m.assignment, np.arange(7) % 3)
+    np.testing.assert_array_equal(m.cell_members(0), [0, 3, 6])
+    np.testing.assert_array_equal(m.cell_members(2), [2, 5])
+
+
+def test_explicit_assignment_validated():
+    ok = CellOutageModel(4, OutageConfig(cells=2, p_out=0.2),
+                         assignment=[1, 1, 0, 0])
+    np.testing.assert_array_equal(ok.cell_members(1), [0, 1])
+    with pytest.raises(ValueError, match="one cell index per client"):
+        CellOutageModel(4, OutageConfig(cells=2, p_out=0.2),
+                        assignment=[0, 1])
+    with pytest.raises(ValueError, match=r"in \[0,2\)"):
+        CellOutageModel(4, OutageConfig(cells=2, p_out=0.2),
+                        assignment=[0, 1, 2, 0])
+
+
+# --- inert configs ------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    OutageConfig(),                                # cells=0
+    OutageConfig(cells=3, p_out=0.0),              # chain can never fire
+])
+def test_inert_overlay_is_pure_passthrough(cfg):
+    n = 5
+    inner = RandomFaults(FaultConfig(crash_rate=0.3, loss_rate=0.2,
+                                     corrupt_rate=0.2, seed=7))
+    overlay = CellOutageModel(n, cfg, inner=inner)
+    assert not overlay.active
+    wire = np.full(n, 5e4)
+    rate = np.full(n, 2e3)
+    for epoch in (0, 1, 5):
+        assert overlay.outage_mask(epoch) is None
+        assert _faults_equal(overlay.round_faults(epoch, wire, rate),
+                             inner.round_faults(epoch, wire, rate))
+    # overlay inherits the inner model's config (quorum, budget, ...)
+    assert overlay.config is inner.config
+    assert overlay.may_corrupt
+
+
+def test_inert_overlay_without_inner_is_clean():
+    n = 4
+    m = CellOutageModel(n, OutageConfig())
+    fr = m.round_faults(3, np.full(n, 1e4), np.full(n, 1e3))
+    assert _faults_equal(fr, RoundFaults.clean(n))
+    assert not m.may_corrupt
+
+
+def test_zero_config_outage_run_bit_identical_to_fault_free():
+    """The acceptance contract: a zero-rate CellOutageModel routed
+    through the simulator leaves the run BIT-IDENTICAL to no faults."""
+    n = 5
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    kw = dict(rounds=3, a_server=0.6, h=3, seed=0,
+              sim=SimConfig(policy="sync"))
+    ref = run_sim("feddd", params, tel, _ltf, None, **kw)
+    got = run_sim("feddd", params, tel, _ltf, None,
+                  faults=CellOutageModel(n, OutageConfig()), **kw)
+    assert ref.event_trace == got.event_trace
+    for rr, rg in zip(ref.history, got.history):
+        assert rr.sim_time == rg.sim_time
+        assert rr.wire_bytes == rg.wire_bytes
+        np.testing.assert_array_equal(rr.dropout_rates, rg.dropout_rates)
+    assert _trees_equal(ref.global_params, got.global_params)
+
+
+# --- chain determinism --------------------------------------------------------
+
+def test_chain_deterministic_and_query_order_independent():
+    cfg = OutageConfig(cells=4, p_out=0.4, p_back=0.3, seed=11)
+    seq = CellOutageModel(10, cfg)
+    jump = CellOutageModel(10, cfg)
+    states = [seq.down_cells(e) for e in range(8)]
+    # jump straight to epoch 7, then read scattered epochs
+    np.testing.assert_array_equal(jump.down_cells(7), states[7])
+    for e in (3, 0, 5, 1):
+        np.testing.assert_array_equal(jump.down_cells(e), states[e])
+    # epoch 0 is all-up by construction
+    assert not states[0].any()
+    assert seq._transitions(0) == []
+
+
+def test_outage_crash_fracs_keyed_per_epoch_and_client():
+    """Each outaged member's crash fraction is a pure function of
+    (outage seed, epoch, client) — replayable without persisting state."""
+    n = 4
+    cfg = OutageConfig(cells=1, p_out=1.0, p_back=0.0, seed=5)
+    m = CellOutageModel(n, cfg)
+    fr = m.round_faults(2, np.full(n, 1e4), np.full(n, 1e3))
+    assert fr.crashed.all()
+    for i in range(n):
+        want = np.random.default_rng(
+            (cfg.seed, _TAG_OUTAGE, 2, i)).uniform()
+        assert fr.crash_frac[i] == want
+
+
+# --- overlay semantics --------------------------------------------------------
+
+def test_overlay_overrides_inner_draw_for_downed_members():
+    """A client inside a down cell crashes even when the inner draw had
+    it surviving with retries or shipping a corrupted payload."""
+    n = 4
+    inner = ScriptedFaults(chunk_retries={(1, 0): 3},
+                           corrupt={(1, 1): "nan"})
+    m = CellOutageModel(n, OutageConfig(cells=2, p_out=1.0, p_back=0.0),
+                        inner=inner, assignment=[0, 0, 1, 1])
+    wire, rate = np.full(n, 1e4), np.full(n, 1e3)
+    base = inner.round_faults(1, wire, rate)
+    assert base.retries[0] == 3 and base.corrupt[1] > 0
+    fr = m.round_faults(1, wire, rate)          # both cells down
+    assert fr.crashed.all()
+    np.testing.assert_array_equal(fr.retries, np.zeros(n, int))
+    np.testing.assert_array_equal(fr.corrupt, np.zeros(n, int))
+    np.testing.assert_array_equal(fr.extra_bytes, np.zeros(n))
+    np.testing.assert_array_equal(fr.sent_bytes, np.zeros(n))
+
+
+def test_outage_mask_maps_cells_through_assignment():
+    n = 6
+    m = CellOutageModel(n, OutageConfig(cells=2, p_out=1.0, p_back=0.0),
+                        assignment=[0, 1, 0, 1, 0, 1])
+    assert m.outage_mask(0) is not None         # active overlay
+    assert not m.outage_mask(0).any()           # ... but epoch 0 all-up
+    mask = m.outage_mask(1)
+    assert mask.all()                           # p_out=1: every cell down
+    down = m.down_cells(1)
+    np.testing.assert_array_equal(mask, down[m.assignment])
+
+
+def test_transitions_and_incident_events():
+    """p_out=1, p_back=1 alternates every cell down/up each epoch:
+    epoch 1 emits outage_begin, epoch 2 outage_end with duration 1, and
+    incident_events forwards both fleet-scoped (unfiltered by the
+    schedule)."""
+    n = 4
+    m = CellOutageModel(n, OutageConfig(cells=2, p_out=1.0, p_back=1.0))
+    wire, rate = np.full(n, 1e4), np.full(n, 1e3)
+    fr1 = m.round_faults(1, wire, rate)
+    begins = [ev for ev in fr1.outages if ev["kind"] == "outage_begin"]
+    assert sorted(ev["cell"] for ev in begins) == [0, 1]
+    assert begins[0]["members"] == [int(i) for i in
+                                    m.cell_members(begins[0]["cell"])]
+    fr2 = m.round_faults(2, wire, rate)
+    assert not fr2.crashed.any()                # everything back up
+    ends = [ev for ev in fr2.outages if ev["kind"] == "outage_end"]
+    assert sorted(ev["cell"] for ev in ends) == [0, 1]
+    assert all(ev["duration"] == 1 for ev in ends)
+    # incident_events forwards outages even for unscheduled clients
+    events = incident_events(fr2, np.zeros(n, bool))
+    assert [ev["kind"] for ev in events] == ["outage_end", "outage_end"]
+
+
+# --- end-to-end through the simulator -----------------------------------------
+
+def test_sim_run_loses_exactly_the_downed_cells():
+    """Survivors per round == fleet minus the members of the cells the
+    chain has down at that round's epoch, and the post-round LP re-solve
+    HOLDS the downed clients' dropout rates (survivor-only telemetry)."""
+    n, cells = 6, 3
+    cfg = OutageConfig(cells=cells, p_out=0.6, p_back=0.4, seed=9)
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    res = run_sim("feddd", params, tel, _ltf, None,
+                  sim=SimConfig(policy="sync"),
+                  faults=CellOutageModel(n, cfg),
+                  rounds=5, a_server=0.6, h=3, seed=0)
+    oracle = CellOutageModel(n, cfg)            # fresh chain, same draw
+    saw_outage = False
+    for rec in res.history:
+        mask = oracle.outage_mask(rec.round - 1)
+        expect = n - int(mask.sum())
+        assert rec.survivors == expect
+        if 0 < int(mask.sum()) < n:
+            saw_outage = True
+            prev_d = (res.history[rec.round - 2].dropout_rates
+                      if rec.round >= 2 else np.zeros(n))
+            np.testing.assert_array_equal(
+                rec.dropout_rates[mask], np.asarray(prev_d)[mask])
+    assert saw_outage, "seed 9 scenario regressed — no partial outage"
+
+
+def test_outage_incidents_reach_the_run_log(tmp_path):
+    """outage_begin / outage_end flow through the obs layer as JSONL
+    fault events."""
+    import json
+    from repro.obs import ObsConfig
+    n = 4
+    params = _params(jax.random.PRNGKey(0))
+    tel = _tel(n)
+    path = tmp_path / "run.jsonl"
+    run_sim("feddd", params, tel, _ltf, None,
+            sim=SimConfig(policy="sync"),
+            faults=CellOutageModel(
+                n, OutageConfig(cells=2, p_out=1.0, p_back=1.0)),
+            obs=ObsConfig(enabled=True, jsonl_path=str(path)),
+            rounds=3, a_server=0.6, h=3, seed=0)
+    kinds = [json.loads(line).get("kind")
+             for line in path.read_text().splitlines()
+             if json.loads(line).get("event") == "fault"]
+    assert "outage_begin" in kinds
+    assert "outage_end" in kinds

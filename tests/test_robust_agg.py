@@ -1,0 +1,308 @@
+"""Byzantine-robust Eq. (4) variants (core/aggregation.py ``robust=`` +
+``ProtocolConfig.robust_agg``): spec parsing, hand-computed reductions,
+the mean-spec bit-identity contract on every engine path, and the
+adversarial-client survivability scenario.
+
+Pins the robust-aggregation contracts:
+
+* spec parsing — ``"mean" | "trimmed[:beta]" | "clip[:factor]"`` round-
+  trip as plain strings; malformed specs fail at config time;
+* trimmed mean — coordinate-wise rank trimming drops exactly the
+  ``floor(beta * n_valid)`` extremes among VALID contributors (mask 1,
+  weight > 0) before the weighted Eq. (4) sums (hand-computed);
+* norm clipping — each client's whole-tree masked update is scaled to
+  ``factor x median`` participant norm before the standard mean
+  (hand-computed); ``clip`` without ``prev_global`` is a config error;
+* ``robust_agg="mean"`` is BIT-IDENTICAL to the default on the batched,
+  scanned, grouped, and (1-device) sharded engines — the inert-config
+  contract;
+* survivability — a corrupt-but-finite adversarial client drags the
+  mean-aggregated global arbitrarily far while the trimmed mean holds;
+* routing — the reference loop rejects robust specs (engine-fused
+  feature) and the grouped engine rejects robust + mesh.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import CommConfig
+from repro.core import FedDDServer, ProtocolConfig, aggregation, run_scheme
+from repro.core.allocation import ClientTelemetry
+from repro.core.round_engine import GroupedRoundEngine
+from repro.core.selection import SelectionConfig
+from repro.launch import mesh as mesh_mod
+
+pytestmark = pytest.mark.flcore
+
+
+# --- shared fixtures ---------------------------------------------------------
+
+def _params(key, w=12):
+    k1, k2 = jax.random.split(key)
+    return {"fc0": {"w": jax.random.normal(k1, (20, w)), "b": jnp.zeros(w)},
+            "fc1": {"w": jax.random.normal(k2, (w, 5)), "b": jnp.zeros(5)}}
+
+
+def _nbytes(p):
+    return float(sum(l.size * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(p)))
+
+
+def _tel(n, nbytes, seed=0):
+    rng = np.random.default_rng(seed)
+    return ClientTelemetry(
+        model_bytes=np.full(n, nbytes) if np.isscalar(nbytes)
+        else np.asarray(nbytes),
+        uplink_rate=rng.uniform(1e3, 5e3, n),
+        downlink_rate=rng.uniform(5e3, 2e4, n),
+        compute_latency=rng.uniform(1.0, 5.0, n),
+        num_samples=rng.integers(10, 50, n).astype(float),
+        label_coverage=rng.uniform(0.5, 1.0, n),
+        train_loss=np.ones(n))
+
+
+def _ltf(p, idx, key):
+    return (jax.tree_util.tree_map(
+        lambda x: x * 0.99 + 0.01 * jax.random.normal(key, x.shape), p),
+        1.0 / (idx + 1.0))
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _histories_equal(ha, hb):
+    assert len(ha) == len(hb)
+    for ra, rb in zip(ha, hb):
+        assert ra.mean_loss == rb.mean_loss
+        assert ra.sim_time == rb.sim_time
+        assert ra.uploaded_bytes == rb.uploaded_bytes
+        assert ra.wire_bytes == rb.wire_bytes
+        np.testing.assert_array_equal(ra.dropout_rates, rb.dropout_rates)
+
+
+# --- spec parsing -------------------------------------------------------------
+
+def test_parse_robust_agg_specs():
+    assert aggregation.parse_robust_agg(None) == ("mean", 0.0)
+    assert aggregation.parse_robust_agg("mean") == ("mean", 0.0)
+    assert aggregation.parse_robust_agg("trimmed") == ("trimmed", 0.1)
+    assert aggregation.parse_robust_agg("trimmed:0.25") == ("trimmed", 0.25)
+    assert aggregation.parse_robust_agg("clip") == ("clip", 1.0)
+    assert aggregation.parse_robust_agg("clip:3.5") == ("clip", 3.5)
+    with pytest.raises(ValueError, match="takes no parameter"):
+        aggregation.parse_robust_agg("mean:0.1")
+    with pytest.raises(ValueError, match=r"beta must be in \[0,0.5\)"):
+        aggregation.parse_robust_agg("trimmed:0.5")
+    with pytest.raises(ValueError, match="clip factor"):
+        aggregation.parse_robust_agg("clip:0")
+    with pytest.raises(ValueError, match="unknown robust_agg"):
+        aggregation.parse_robust_agg("krum")
+    # ... and ProtocolConfig validates at construction time
+    with pytest.raises(ValueError, match="unknown robust_agg"):
+        ProtocolConfig(robust_agg="median-of-means")
+
+
+# --- hand-computed reductions -------------------------------------------------
+
+def test_trimmed_mean_hand_computed():
+    """5 clients, unit weights, full masks, beta=0.2: k = floor(1) = 1,
+    so the min (0) and the outlier (100) drop and every coordinate
+    averages [1, 2, 3] -> 2."""
+    vals = jnp.asarray([0.0, 1.0, 2.0, 3.0, 100.0])
+    stacked = {"w": jnp.broadcast_to(vals[:, None], (5, 3))}
+    masks = {"w": jnp.ones((5, 1))}
+    out = aggregation.aggregate_sparse_stacked(
+        stacked, masks, np.ones(5), robust="trimmed:0.2")
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0, atol=0)
+
+
+def test_trimmed_mean_counts_only_valid_contributors():
+    """Masked-out and zero-weight rows are invalid: they neither rank nor
+    aggregate, and k tracks the per-coordinate VALID count."""
+    vals = jnp.asarray([0.0, 1.0, 2.0, 3.0, 100.0])
+    stacked = {"w": jnp.broadcast_to(vals[:, None], (5, 2))}
+    # client 1 masked out of coordinate 0 only
+    masks = {"w": jnp.asarray([[1.0, 1.0], [0.0, 1.0], [1.0, 1.0],
+                               [1.0, 1.0], [1.0, 1.0]])}
+    out = aggregation.aggregate_sparse_stacked(
+        stacked, masks, np.ones(5), robust="trimmed:0.25")
+    got = np.asarray(out["w"])
+    # coord 0: valid {0,2,3,100}, k=1 -> mean(2,3); coord 1: valid
+    # {0,1,2,3,100}, k=1 -> mean(1,2,3)
+    np.testing.assert_allclose(got[0], 2.5, atol=0)
+    np.testing.assert_allclose(got[1], 2.0, atol=0)
+    # zero-weight outlier: excluded from the ranks entirely, so the trim
+    # falls on the remaining extremes — valid {0,1,2,3}, k=1 -> mean(1,2)
+    out2 = aggregation.aggregate_sparse_stacked(
+        {"w": vals[:, None]}, {"w": jnp.ones((5, 1))},
+        np.asarray([1.0, 1.0, 1.0, 1.0, 0.0]), robust="trimmed:0.25")
+    np.testing.assert_allclose(np.asarray(out2["w"])[0], 1.5, atol=0)
+
+
+def test_trimmed_mean_empty_coordinate_falls_back_to_prev_global():
+    stacked = {"w": jnp.asarray([[1.0], [2.0]])}
+    masks = {"w": jnp.zeros((2, 1))}
+    out = aggregation.aggregate_sparse_stacked(
+        stacked, masks, np.ones(2),
+        prev_global={"w": jnp.asarray([7.0])}, robust="trimmed:0.2")
+    np.testing.assert_array_equal(np.asarray(out["w"]), [7.0])
+
+
+def test_clip_hand_computed_and_requires_prev_global():
+    """Norms [1000, 1, 2, 3] vs factor x median = 2.5: BOTH
+    above-threshold updates (1000 and 3) scale onto the 2.5 ball and the
+    Eq. (4) mean becomes (2.5 + 1 + 2 + 2.5) / 4 = 2."""
+    stacked = {"w": jnp.asarray([[1000.0], [1.0], [2.0], [3.0]])}
+    masks = {"w": jnp.ones((4, 1))}
+    out = aggregation.aggregate_sparse_stacked(
+        stacked, masks, np.ones(4),
+        prev_global={"w": jnp.zeros(1)}, robust="clip:1.0")
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+    with pytest.raises(ValueError, match="needs prev_global"):
+        aggregation.aggregate_sparse_stacked(
+            stacked, masks, np.ones(4), robust="clip:1.0")
+
+
+# --- the mean-spec bit-identity contract on every engine path -----------------
+
+def _run_batched(n=6, robust=None, ltf=_ltf, rounds=3):
+    params = _params(jax.random.PRNGKey(0))
+    kw = dict(rounds=rounds, a_server=0.6, h=3, seed=0)
+    if robust is not None:
+        kw["robust_agg"] = robust
+    return run_scheme("feddd", params, _tel(n, _nbytes(params)), ltf,
+                      None, batched=True, **kw)
+
+
+def test_mean_spec_bit_identical_batched():
+    ref = _run_batched()
+    got = _run_batched(robust="mean")
+    assert _trees_equal(ref.global_params, got.global_params)
+    _histories_equal(ref.history, got.history)
+
+
+def test_mean_spec_bit_identical_grouped():
+    n, widths = 6, (12, 8, 6)
+    gp = _params(jax.random.PRNGKey(0), max(widths))
+    clients = [_params(jax.random.PRNGKey(100 + i), widths[i % 3])
+               for i in range(n)]
+    tel = _tel(n, [_nbytes(p) for p in clients])
+    kw = dict(rounds=3, a_server=0.6, h=3, seed=0)
+    ref = run_scheme("feddd", gp, tel, _ltf, None,
+                     client_params=clients, **kw)
+    got = run_scheme("feddd", gp, tel, _ltf, None,
+                     client_params=clients, robust_agg="mean", **kw)
+    assert _trees_equal(ref.global_params, got.global_params)
+    _histories_equal(ref.history, got.history)
+
+
+def _scan_fixture(n=8, seed=0):
+    params = _params(jax.random.PRNGKey(seed))
+    tel = _tel(n, _nbytes(params), seed=seed)
+
+    @jax.jit
+    def batched(stacked, key):
+        new = jax.tree_util.tree_map(
+            lambda x: x * 0.99 + 0.01 * jax.random.normal(
+                jax.random.fold_in(key, 1), x.shape), stacked)
+        l0 = jax.tree_util.tree_leaves(new)[0]
+        losses = jnp.mean(jnp.abs(l0.reshape(l0.shape[0], -1)), axis=1)
+        return new, losses
+    return params, tel, batched
+
+
+def test_mean_spec_bit_identical_scanned():
+    params, tel, batched = _scan_fixture()
+    kw = dict(scheme="feddd", allocator="jax", rounds_per_dispatch=2,
+              rounds=4, a_server=0.6, h=3, seed=0)
+    ref = FedDDServer(params, ProtocolConfig(**kw),
+                      tel).run(batched_train_fn=batched)
+    got = FedDDServer(params, ProtocolConfig(robust_agg="mean", **kw),
+                      tel).run(batched_train_fn=batched)
+    assert _trees_equal(ref.global_params, got.global_params)
+    _histories_equal(ref.history, got.history)
+
+
+def test_mean_spec_bit_identical_sharded_single_device():
+    params = _params(jax.random.PRNGKey(0))
+    n = 6
+    kw = dict(rounds=3, a_server=0.6, h=3, seed=0, mesh=1)
+    ref = run_scheme("feddd", params, _tel(n, _nbytes(params)), _ltf,
+                     None, **kw)
+    got = run_scheme("feddd", params, _tel(n, _nbytes(params)), _ltf,
+                     None, robust_agg="mean", **kw)
+    assert _trees_equal(ref.global_params, got.global_params)
+    _histories_equal(ref.history, got.history)
+
+
+def test_sharded_robust_matches_batched_on_one_device():
+    """The dense-gather fallback on a 1-device mesh is the identity, so
+    sharded trimmed == batched trimmed bit for bit."""
+    params = _params(jax.random.PRNGKey(0))
+    n = 6
+    kw = dict(rounds=3, a_server=0.6, h=3, seed=0,
+              robust_agg="trimmed:0.25")
+    eng = run_scheme("feddd", params, _tel(n, _nbytes(params)), _ltf,
+                     None, batched=True, **kw)
+    shd = run_scheme("feddd", params, _tel(n, _nbytes(params)), _ltf,
+                     None, mesh=1, **kw)
+    assert _trees_equal(eng.global_params, shd.global_params)
+    _histories_equal(eng.history, shd.history)
+
+
+# --- survivability: adversarial client ----------------------------------------
+
+def _adversarial_ltf(p, idx, key):
+    """Client 0 is corrupt-but-finite: it returns an update every screen
+    passes (all values finite) that drags a weighted mean far away."""
+    if idx == 0:
+        return jax.tree_util.tree_map(lambda x: x + 500.0, p), 1.0
+    return _ltf(p, idx, key)
+
+
+def test_adversarial_client_mean_diverges_trimmed_and_clip_hold():
+    mean = _run_batched(n=8, ltf=_adversarial_ltf)
+    trimmed = _run_batched(n=8, robust="trimmed:0.25", ltf=_adversarial_ltf)
+    clip = _run_batched(n=8, robust="clip:2.0", ltf=_adversarial_ltf)
+    peak = lambda r: float(np.max(np.abs(np.asarray(  # noqa: E731
+        r.global_params["fc0"]["w"]))))
+    assert peak(mean) > 50.0            # the mean is dragged away
+    assert peak(trimmed) < 10.0         # the trimmed mean holds
+    assert peak(clip) < peak(mean) / 2  # clipping bounds the influence
+    for leaf in jax.tree_util.tree_leaves(trimmed.global_params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_robust_specs_close_to_mean_on_clean_fleet():
+    """With no adversary the robust variants track the mean closely —
+    robustness costs little on clean data."""
+    mean = _run_batched(n=8)
+    trimmed = _run_batched(n=8, robust="trimmed:0.125")
+    for a, b in zip(jax.tree_util.tree_leaves(mean.global_params),
+                    jax.tree_util.tree_leaves(trimmed.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.2)
+
+
+# --- routing guards -----------------------------------------------------------
+
+def test_loop_path_rejects_robust_specs():
+    params = _params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="fused into the engine"):
+        run_scheme("feddd", params, _tel(4, _nbytes(params)), _ltf, None,
+                   batched=False, robust_agg="trimmed",
+                   rounds=1, a_server=0.6, seed=0)
+
+
+def test_grouped_engine_rejects_robust_on_mesh():
+    mesh = mesh_mod.resolve_client_mesh(1)
+    with pytest.raises(NotImplementedError, match="single-device"):
+        GroupedRoundEngine(SelectionConfig(), CommConfig(), mesh,
+                           "trimmed:0.2")
+    # mean on a mesh and robust off-mesh both construct fine
+    GroupedRoundEngine(SelectionConfig(), CommConfig(), mesh, "mean")
+    GroupedRoundEngine(SelectionConfig(), CommConfig(), None, "clip:2.0")
