@@ -1,0 +1,187 @@
+"""Population-scale serving: time-to-accuracy over cohort size x
+availability, plus the 100k-population throughput demonstration.
+
+Every other benchmark serves the WHOLE fleet each round.  This grid runs
+the production shape instead (repro/population): a large, mostly-offline
+population served ``cohort_size`` clients at a time, asking
+
+* what partial service costs in time-to-accuracy — smaller cohorts move
+  fewer bytes per round but need more rounds, and availability churn
+  (Bernoulli vs diurnal phase-staggered) decides who CAN be served when
+  the sampler wants them;
+* what population scale costs in host throughput — the acceptance
+  criterion: a 100,000-client population served 256 at a time must run
+  at the same order of rounds/sec as today's 256-client full fleet
+  (the O(population) work per round is one vectorized availability +
+  sampling pass; everything else touches only the cohort).
+
+Client data is sharded by GLOBAL client id (``id % shards``), so a
+client keeps its shard no matter which cohort it lands in — the
+population runner hands train fns global ids for exactly this reason.
+
+Writes ``population_scale.csv`` to the results dir; CI uploads it as a
+build artifact (the ``population`` lane runs ``--smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import (csv_row, setup_experiment,  # noqa: E402
+                               timed, write_table)
+from repro.core.allocation import ClientTelemetry  # noqa: E402
+from repro.population import Population, make_availability  # noqa: E402
+from repro.sim import SimConfig, run_sim  # noqa: E402
+
+TARGET_ACC = 0.70
+THROUGHPUT_POP = 100_000
+THROUGHPUT_COHORT = 256
+
+
+def _fmt(x) -> str:
+    return "fail" if x is None else f"{x:.1f}"
+
+
+def _tile_tel(tel: ClientTelemetry, n: int) -> ClientTelemetry:
+    """Population-sized telemetry from a data-shard-sized sample: tile
+    the per-shard rows so client ``g`` shares shard ``g % shards``'s
+    system profile (keeps telemetry consistent with the data mapping)."""
+    return ClientTelemetry(**{
+        f: np.resize(np.asarray(getattr(tel, f)), n)
+        for f in ("model_bytes", "uplink_rate", "downlink_rate",
+                  "compute_latency", "num_samples", "label_coverage",
+                  "train_loss")})
+
+
+def _shard_ltf(ltf, shards: int):
+    def wrapped(p, gid, key):
+        return ltf(p, int(gid) % shards, key)
+    return wrapped
+
+
+def run(full: bool = False, out_dir: Path | None = None,
+        smoke: bool = False):
+    if smoke:
+        population, rounds, shards = 48, 4, 12
+        cohorts = (8, 16)
+        grids = (("always", {}), ("bernoulli", {"p": 0.6}))
+        thr_rounds = 2
+    elif full:
+        population, rounds, shards = 512, 16, 32
+        cohorts = (16, 64, 256)
+        grids = (("always", {}), ("bernoulli", {"p": 0.6}),
+                 ("diurnal", {"duty": 0.5}))
+        thr_rounds = 4
+    else:
+        population, rounds, shards = 64, 8, 16
+        cohorts = (8, 16, 32)
+        grids = (("always", {}), ("bernoulli", {"p": 0.6}),
+                 ("diurnal", {"duty": 0.5}))
+        thr_rounds = 3
+    num_train = 4000 if full else 1500
+    num_test = 1000 if full else 400
+
+    # one dataset + model for the whole grid: `shards` data partitions,
+    # telemetry tiled to the population
+    gp, shard_tel, ltf, ef, _ = setup_experiment(
+        "mnist", "noniid_b", num_clients=shards, num_train=num_train,
+        num_test=num_test, seed=0)
+    pop_tel = _tile_tel(shard_tel, population)
+    pop_ltf = _shard_ltf(ltf, shards)
+
+    rows = []
+    table = ["kind,availability,population,cohort,rounds,t2a_sim_s,"
+             "final_acc,final_sim_s,distinct_served,first_contact_total,"
+             "rounds_per_sec"]
+
+    def t2a_run(avail_name, avail_kw, k):
+        pop = Population(
+            pop_tel,
+            availability=make_availability(avail_name, population,
+                                           seed=7, **avail_kw),
+            sampler="uniform", seed=7)
+        res, wall = timed(lambda: run_sim(
+            "feddd", gp, pop_tel, pop_ltf, ef,
+            population=pop, cohort_size=k,
+            sim=SimConfig(policy="sync", eval_every=1),
+            rounds=rounds, a_server=0.6, h=3, seed=0))
+        t2a = res.time_to_accuracy(TARGET_ACC)
+        final = res.history[-1]
+        acc = (final.metrics or {}).get("accuracy", float("nan"))
+        served = int(pop.seen.sum())
+        rps = rounds / wall if wall > 0 else float("inf")
+        name = f"pop_{avail_name}_P{population}_K{k}"
+        rows.append(csv_row(
+            name, wall,
+            f"t2a{int(TARGET_ACC * 100)}={_fmt(t2a)};"
+            f"final_acc={acc:.3f};served={served}"))
+        table.append(
+            f"t2a,{avail_name},{population},{k},{rounds},{_fmt(t2a)},"
+            f"{acc:.4f},{final.sim_time:.1f},{served},{served},"
+            f"{rps:.3f}")
+
+    for avail_name, avail_kw in grids:
+        for k in cohorts:
+            t2a_run(avail_name, avail_kw, k)
+
+    # --- throughput: 100k population / 256 cohort vs 256 full fleet ------
+    def thr_run(kind, n_pop, k):
+        tel = _tile_tel(shard_tel, n_pop)
+        kw = dict(sim=SimConfig(policy="sync"),
+                  rounds=thr_rounds, a_server=0.6, h=3, seed=0)
+        if kind == "fleet":
+            res, wall = timed(lambda: run_sim(
+                "feddd", gp, tel, _shard_ltf(ltf, shards), None, **kw))
+            served = n_pop
+        else:
+            pop = Population(tel, availability="bernoulli",
+                             sampler="uniform", seed=7)
+            res, wall = timed(lambda: run_sim(
+                "feddd", gp, tel, _shard_ltf(ltf, shards), None,
+                population=pop, cohort_size=k, **kw))
+            served = int(pop.seen.sum())
+        rps = thr_rounds / wall if wall > 0 else float("inf")
+        final = res.history[-1]
+        avail = "always" if kind == "fleet" else "bernoulli"
+        rows.append(csv_row(f"pop_throughput_{kind}_N{n_pop}_K{k}", wall,
+                            f"rounds_per_sec={rps:.3f}"))
+        table.append(
+            f"throughput_{kind},{avail},{n_pop},{k},{thr_rounds},,"
+            f",{final.sim_time:.1f},{served},{served},{rps:.3f}")
+        return rps
+
+    base_rps = thr_run("fleet", THROUGHPUT_COHORT, THROUGHPUT_COHORT)
+    pop_rps = thr_run("population", THROUGHPUT_POP, THROUGHPUT_COHORT)
+    # the acceptance check: same ORDER of rounds/sec (>= 0.1x the fleet)
+    rows.append(csv_row(
+        "pop_throughput_ratio", 0.0,
+        f"pop/fleet={pop_rps / base_rps:.3f};pass="
+        f"{pop_rps >= 0.1 * base_rps}"))
+
+    if out_dir:
+        write_table(out_dir, "population_scale.csv", table)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grid (512 population, 16 rounds)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (bounded minutes, incl. the "
+                         "100k-population throughput demo)")
+    args = ap.parse_args()
+    out_dir = Path(__file__).resolve().parents[1] / "results"
+    for r in run(full=args.full, out_dir=out_dir, smoke=args.smoke):
+        print(r)
+    print((out_dir / "population_scale.csv").read_text())
+
+
+if __name__ == "__main__":
+    main()

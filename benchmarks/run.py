@@ -21,8 +21,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (accuracy_homogeneous, class_imbalance,  # noqa: E402
                         convergence_bound, fault_tolerance, heterogeneous,
-                        kernels_bench, perf_federated, roofline,
-                        selection_variants, sensitivity,
+                        kernels_bench, perf_federated, population_scale,
+                        roofline, selection_variants, sensitivity,
                         straggler_policies, t2a, wire_formats)
 
 MODULES = [
@@ -35,6 +35,7 @@ MODULES = [
     ("thm2 convergence bound", convergence_bound),
     ("straggler policies (event-driven sim)", straggler_policies),
     ("fault tolerance (t2a vs fault rate)", fault_tolerance),
+    ("population scale (cohort x availability)", population_scale),
     ("wire formats (accuracy vs on-wire bytes)", wire_formats),
     ("round-engine perf (loop/batched/fused/scanned)", perf_federated),
     ("pallas kernels", kernels_bench),

@@ -93,6 +93,29 @@ continues from the last snapshot with BIT-IDENTICAL history::
     PYTHONPATH=src python examples/quickstart.py --rounds 10 \\
         --fault-rate 0.2 --cells 3 --checkpoint-dir results/ckpt --resume
 
+Population-scale serving (``--population`` / ``--cohort`` /
+``--availability``, repro.population): a production FL service samples a
+small cohort per round from a mostly-offline population instead of
+serving every registered client.  ``--population N`` registers N clients
+(sticky per-client state: telemetry EWMAs, losses, dropout rates, byte
+economy, per-client params), ``--cohort K`` serves K of them per round,
+and ``--availability`` picks who is online (``always``, i.i.d.
+``bernoulli``, or phase-staggered ``diurnal``).  Client data stays
+sharded by GLOBAL id (``id % --clients``), so a client trains on the
+same shard no matter which cohort it lands in.  A population the size of
+the fleet with ``always`` availability is bit-identical to the plain
+run.  Serving 100,000 clients costs roughly what serving the cohort
+costs — the only O(population) work per round is one vectorized
+availability + sampling pass::
+
+    PYTHONPATH=src python examples/quickstart.py --rounds 10 \\
+        --clients 32 --population 100000 --cohort 256 \\
+        --availability bernoulli
+
+(32 data shards, 100k registered clients, 256 served per round;
+``benchmarks/population_scale.py`` maps time-to-accuracy over cohort
+size x availability and pins the throughput claim.)
+
 Observability (``--log-jsonl`` / ``--trace``, repro.obs): pass a path to
 write a structured JSONL run log — one schema-versioned event per round,
 pipeline span, and fault incident, derived entirely from host data the
@@ -171,6 +194,16 @@ def main():
                          "(run under XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N to split a CPU host); omit for "
                          "the single-device engines")
+    ap.add_argument("--population", type=int, default=None, metavar="N",
+                    help="serve an N-client population (repro.population) "
+                         "instead of a fixed fleet; data is sharded by "
+                         "global id (id %% --clients)")
+    ap.add_argument("--cohort", type=int, default=None, metavar="K",
+                    help="clients served per round in population mode "
+                         "(default: the whole population)")
+    ap.add_argument("--availability", default="always",
+                    choices=("always", "bernoulli", "diurnal"),
+                    help="who is online each round in population mode")
     ap.add_argument("--log-jsonl", default=None, metavar="PATH",
                     help="write a structured JSONL run log here "
                          "(repro.obs); inspect with "
@@ -189,6 +222,34 @@ def main():
         [label_coverage_score(train, p) for p in parts], seed=0)
     ltf = make_local_train_fn(MLP_SPEC, train, parts, flatten=True, lr=0.1)
     ef = make_eval_fn(MLP_SPEC, test, flatten=True)
+
+    pop_kw = {}
+    fleet_n = args.clients
+    if args.cohort is not None and args.population is None:
+        ap.error("--cohort requires --population")
+    if args.population is not None:
+        from repro.population import Population
+        P, shards = args.population, args.clients
+        # population-sized telemetry: client g shares data shard g % C's
+        # sample count / coverage, so telemetry matches the data mapping
+        tel = sample_system_telemetry(
+            P, [model_bytes(params)] * P,
+            [len(parts[g % shards]) for g in range(P)],
+            [label_coverage_score(train, parts[g % shards])
+             for g in range(P)], seed=0)
+        shard_ltf = ltf
+
+        def ltf(p, gid, key):                    # noqa: F811
+            return shard_ltf(p, int(gid) % shards, key)
+
+        def make_pop():
+            # one store per run: sticky state is mutated by serving
+            return Population(tel, availability=args.availability,
+                              sampler="uniform", seed=0)
+
+        pop_kw["population"] = make_pop()
+        pop_kw["cohort_size"] = args.cohort
+        fleet_n = args.cohort if args.cohort is not None else P
 
     engine = "per-client loop" if args.loop else "batched round engine"
     mesh_kw = {}
@@ -230,19 +291,21 @@ def main():
             surv_kw["resume_from"] = ckpt
     elif args.resume:
         ap.error("--resume requires --checkpoint-dir")
+    pop_col = (f", population={args.population}/cohort={fleet_n}"
+               f"/{args.availability}" if args.population else "")
     if faults is not None:
         cells_col = f", cells={args.cells}" if args.cells else ""
         print(f"== FedDD + faults (rate={args.fault_rate}, "
               f"quorum={args.quorum}{cells_col}, "
-              f"agg={args.robust_agg}) ==")
+              f"agg={args.robust_agg}{pop_col}) ==")
     else:
         print(f"== FedDD (A_server={args.a_server}, {engine}, "
               f"codec={args.codec}/q{args.qbits}, "
-              f"agg={args.robust_agg}) ==")
+              f"agg={args.robust_agg}{pop_col}) ==")
     feddd = run_scheme("feddd", params, tel, ltf, ef, rounds=args.rounds,
                        a_server=args.a_server, h=5, batched=not args.loop,
                        comm=comm, faults=faults, **mesh_kw, **obs_kw,
-                       **surv_kw)
+                       **surv_kw, **pop_kw)
     if args.log_jsonl:
         print(f"  run log -> {args.log_jsonl}  (inspect: python -m "
               f"repro.obs.report {args.log_jsonl})")
@@ -250,14 +313,17 @@ def main():
         fault_col = ""
         if faults is not None:
             fault_col = (" SKIPPED" if r.skipped else
-                         f"  surv={r.survivors}/{args.clients}")
+                         f"  surv={r.survivors}/{fleet_n}")
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
               f"sim_t={r.sim_time:8.1f}s  uploaded={r.uploaded_fraction:.0%}  "
               f"wire={r.wire_bytes / 1e3:.0f}kB  "
               f"host={r.host_wall_time:.2f}s{fault_col}")
 
     print("== FedAvg (full uploads) ==")
-    fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds)
+    if args.population is not None:
+        pop_kw["population"] = make_pop()     # fresh sticky state
+    fedavg = run_scheme("fedavg", params, tel, ltf, ef, rounds=args.rounds,
+                        **pop_kw)
     for r in fedavg.history[-3:]:
         print(f"  round {r.round:2d}  acc={r.metrics['accuracy']:.3f}  "
               f"sim_t={r.sim_time:8.1f}s")

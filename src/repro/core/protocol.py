@@ -137,6 +137,24 @@ crash-resume                **engine + loop executors** via
                             checkpoints its own wave-policy state the
                             same way.  ``checkpoint_every=None``
                             (default) touches no code path
+population-scale serving    **sim runner + repro.population**: pass
+(``population=`` /          ``population=Population(tel, availability=...,
+``cohort_size=``)           sampler=...)`` and ``cohort_size=`` to
+                            :func:`run_scheme` / ``run_sim`` — telemetry
+                            and the network model cover a 100k+ client
+                            POPULATION, availability churn decides who is
+                            online each epoch, and only the sampled
+                            cohort is materialized into the stacked /
+                            grouped engine buffers; sticky per-client
+                            state (telemetry EWMAs by global id, losses,
+                            dropout rates, Oort utilities, byte/failure
+                            economy) survives cohort changes in the
+                            Population store, and the Eq. (9)-(11) LP can
+                            cold-start first-contact clients from
+                            population means.  Population == fleet with
+                            always-on availability and the default
+                            sampler is bit-identical to the plain runs on
+                            every engine path (tests/test_population.py)
 wire formats (sparse        **every executor** via ``ProtocolConfig(comm=
 codecs, quantization,       CommConfig(codec=..., qbits=...))`` (repro.comm):
 on-wire byte accounting)    masks ship as packed-bitmask / delta+varint
@@ -266,6 +284,20 @@ class ProtocolConfig:
                                      # restart from; the run continues at
                                      # the snapshot's round + 1 with
                                      # bit-identical history
+    population: Optional[int] = None
+                                     # population-scale serving
+                                     # (repro.population): the registered
+                                     # client population this run samples
+                                     # cohorts from.  The sim entry points
+                                     # take the Population OBJECT and
+                                     # record its size here; None = the
+                                     # fleet IS the population (default).
+    cohort_size: Optional[int] = None
+                                     # clients materialized per round in
+                                     # population mode (None with
+                                     # population set = the whole
+                                     # population — the identity
+                                     # configuration)
 
     def __post_init__(self):
         if self.scheme not in ("feddd", "fedavg", "fedcs", "oort"):
@@ -313,6 +345,17 @@ class ProtocolConfig:
                 "boundaries; rounds_per_dispatch > 1 keeps rounds on the "
                 "device inside one lax.scan and has no boundary to "
                 "snapshot at")
+        if self.cohort_size is not None and self.population is None:
+            raise ValueError("cohort_size requires population= (the "
+                             "fleet IS the cohort otherwise)")
+        if self.population is not None:
+            if self.population < 1:
+                raise ValueError(f"population must be >= 1, got "
+                                 f"{self.population}")
+            k = self.cohort_size
+            if k is not None and not 1 <= k <= self.population:
+                raise ValueError(f"cohort_size {k} outside [1, "
+                                 f"{self.population}]")
 
 
 @dataclasses.dataclass
@@ -1233,7 +1276,8 @@ class FedDDServer:
 
 def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
                eval_fn=None, client_params=None, *, sim=None, network=None,
-               faults=None, **cfg_kw) -> RunResult:
+               faults=None, population=None, cohort_size=None,
+               **cfg_kw) -> RunResult:
     """One-call convenience wrapper used by benchmarks and examples.
 
     Passing ``sim`` (a :class:`repro.sim.runner.SimConfig`, or ``True``
@@ -1254,15 +1298,24 @@ def run_scheme(scheme: str, global_params, telemetry, local_train_fn,
     ``robust_agg=`` selects the Byzantine-robust Eq. (4) variant, and
     ``checkpoint_every=`` / ``checkpoint_path=`` / ``resume_from=``
     drive bit-identical crash-resume (repro.checkpoint).
+
+    ``population`` (a :class:`repro.population.Population`) +
+    ``cohort_size`` switch to population-scale serving: ``telemetry``
+    covers the registered population and each round materializes only a
+    sampled cohort (availability churn + samplers live on the Population
+    object).  Population runs always route through the simulator.
     """
-    if sim is not None or network is not None or faults is not None:
+    if (sim is not None or network is not None or faults is not None
+            or population is not None):
         from repro.sim import runner as sim_runner   # local: sim -> core
         if sim is None or sim is True:
             sim = sim_runner.SimConfig()
         return sim_runner.run_sim(scheme, global_params, telemetry,
                                   local_train_fn, eval_fn, sim=sim,
                                   network=network, faults=faults,
-                                  client_params=client_params, **cfg_kw)
+                                  client_params=client_params,
+                                  population=population,
+                                  cohort_size=cohort_size, **cfg_kw)
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     server = FedDDServer(global_params, cfg, telemetry, client_params)
     return server.run(local_train_fn, eval_fn)

@@ -15,6 +15,10 @@ Renders, from the structured events alone (repro.obs.runlog):
   abandoned + quarantined bytes;
 * failure economy — skipped rounds, survivor stats, retries, incident
   counts by kind;
+* cohort participation — population-mode runs (repro.population): how
+  many distinct clients the service reached, first contacts per round,
+  and a rounds-participated histogram reconstructed from the per-round
+  ``cohort`` events;
 * straggler timelines — per-client upload-completion offsets (sim clock)
   with mean/max and slowest-in-round counts; ``--top N`` worst clients —
   prefaced by the correlated-outage windows (repro.sim.outages): each
@@ -192,6 +196,46 @@ def _outage_lines(events: List[Dict]) -> List[str]:
     return lines
 
 
+def _cohort_lines(events: List[Dict]) -> List[str]:
+    """Cohort participation (population-mode runs, repro.population):
+    coverage of the population, first contacts per round, and the
+    rounds-participated histogram.  Empty when the log holds no
+    ``cohort`` events (fleet-mode runs render no section)."""
+    cohorts = [e for e in events if e.get("event") == "cohort"]
+    if not cohorts:
+        return []
+    lines = _section("Cohort participation (population mode)")
+    pop = int(cohorts[0].get("population", 0))
+    sizes = {int(e.get("cohort_size", 0)) for e in cohorts}
+    served: set = set()
+    participated: Dict[int, int] = defaultdict(int)
+    for e in cohorts:
+        served.update(int(c) for c in e.get("cohort", []))
+        for c in e.get("participated", []):
+            participated[int(c)] += 1
+    size_s = (str(next(iter(sizes))) if len(sizes) == 1
+              else f"{min(sizes)}-{max(sizes)}")
+    lines.append(f"  population: {pop}  cohort size: {size_s}"
+                 f"  rounds: {len(cohorts)}")
+    lines.append(f"  distinct clients served: {len(served)}"
+                 f" ({100.0 * len(served) / pop:.1f}% of population)"
+                 if pop else f"  distinct clients served: {len(served)}")
+    fc = [(int(e.get("round", i)), int(e.get("first_contact", 0)))
+          for i, e in enumerate(cohorts)]
+    shown = " ".join(f"r{r}={c}" for r, c in fc[:12])
+    more = "  ..." if len(fc) > 12 else ""
+    lines.append(f"  first contacts/round: total {sum(c for _, c in fc)}"
+                 f"  {shown}{more}")
+    hist: Dict[int, int] = defaultdict(int)
+    for c in participated.values():
+        hist[c] += 1
+    lines.append("  rounds-participated histogram:")
+    for times in sorted(hist):
+        lines.append(f"    {times:>3} round{'s' if times != 1 else ''}: "
+                     f"{hist[times]} client{'s' if hist[times] != 1 else ''}")
+    return lines
+
+
 def _straggler_lines(rounds: List[Dict], top: int) -> List[str]:
     lines = _section("Straggler timeline (per-client upload offsets)")
     tracked = [r for r in rounds if r.get("client_up")]
@@ -232,6 +276,7 @@ def render(events: List[Dict], top: int = 5) -> str:
     lines += _byte_lines(rounds, events)
     lines += _failure_lines(events, rounds)
     lines += _outage_lines(events)
+    lines += _cohort_lines(events)
     lines += _straggler_lines(rounds, top)
     return "\n".join(lines).lstrip("\n") + "\n"
 

@@ -16,9 +16,19 @@ Modules
   runner    the driver: composes the above with the batched round engine
             and re-solves the dropout LP from OBSERVED telemetry
 
+Population-scale serving rides the same runner: ``run_sim(...,
+population=Population(tel), cohort_size=K)`` (repro.population) samples
+a K-client cohort per round from a large, mostly-offline population —
+availability models decide who is online, cohort samplers pick the
+round's fleet, and per-client sticky state (telemetry EWMAs by GLOBAL
+id, losses, dropout rates, params, byte economy) survives cohort churn.
+A population the size of the fleet with always-on availability is
+bit-identical to a plain fleet run.
+
 Entry points: :func:`run_sim`, or ``run_scheme(..., sim=..., network=...,
-faults=...)`` in repro.core.protocol.  See the routing table in
-core/protocol.py for which execution path serves which scenario.
+faults=..., population=...)`` in repro.core.protocol.  See the routing
+table in core/protocol.py for which execution path serves which
+scenario.
 """
 
 from repro.sim.engine import (COMPUTE_DONE, DOWNLOAD_DONE, UPLOAD_DONE,

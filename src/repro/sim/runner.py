@@ -110,16 +110,31 @@ class ObservedTelemetry:
     current estimate leaves it bit-identical (no ``a*x + (1-a)*x``
     round-off drift) — that is what makes the static-network sync run
     reproduce protocol.py exactly.
+
+    Estimates are stored per GLOBAL client id.  ``ids`` (population mode,
+    repro.population) maps the current cohort's stack positions to global
+    ids: events carry stack positions, so measurements land on the global
+    row, and :meth:`telemetry` gathers the cohort's rows back out.  With
+    ``ids=None`` (fleet == population, today's default) positions and ids
+    coincide and nothing changes.  This is what lets cohort membership
+    vary round to round without aliasing estimates between the different
+    clients that occupy stack position ``i`` over the run.
     """
 
-    def __init__(self, prior: ClientTelemetry, ewma: float):
+    def __init__(self, prior: ClientTelemetry, ewma: float,
+                 ids: Optional[np.ndarray] = None):
         if not 0.0 < ewma <= 1.0:
             raise ValueError(f"observation_ewma must be in (0,1], {ewma}")
         self.base = prior
         self.ewma = ewma
+        self.ids = None if ids is None else np.asarray(ids, np.int64)
         self.uplink = np.asarray(prior.uplink_rate, float).copy()
         self.downlink = np.asarray(prior.downlink_rate, float).copy()
         self.compute = np.asarray(prior.compute_latency, float).copy()
+
+    def retarget(self, ids: np.ndarray) -> None:
+        """Point the stack-position -> global-id map at a new cohort."""
+        self.ids = np.asarray(ids, np.int64)
 
     def _update(self, arr: np.ndarray, i: int, measured: float) -> None:
         # estimates update ONLY from measurements that actually landed;
@@ -136,20 +151,30 @@ class ObservedTelemetry:
         if event.payload is None or event.client < 0:
             return
         kind, value = event.payload
+        i = (event.client if self.ids is None
+             else int(self.ids[event.client]))
         if kind == "uplink":
-            self._update(self.uplink, event.client, value)
+            self._update(self.uplink, i, value)
         elif kind == "downlink":
-            self._update(self.downlink, event.client, value)
+            self._update(self.downlink, i, value)
         elif kind == "compute":
-            self._update(self.compute, event.client, value)
+            self._update(self.compute, i, value)
 
     def telemetry(self, train_loss: np.ndarray) -> ClientTelemetry:
         """Estimates as a ClientTelemetry for the allocation LP /
-        selection baselines."""
+        selection baselines — gathered at the cohort's global ids when a
+        map is bound (``train_loss`` is cohort-shaped either way)."""
+        if self.ids is None:
+            return dataclasses.replace(
+                self.base, uplink_rate=self.uplink.copy(),
+                downlink_rate=self.downlink.copy(),
+                compute_latency=self.compute.copy(),
+                train_loss=np.asarray(train_loss, float))
+        idx = self.ids
         return dataclasses.replace(
-            self.base, uplink_rate=self.uplink.copy(),
-            downlink_rate=self.downlink.copy(),
-            compute_latency=self.compute.copy(),
+            self.base.subset(idx), uplink_rate=self.uplink[idx],
+            downlink_rate=self.downlink[idx],
+            compute_latency=self.compute[idx],
             train_loss=np.asarray(train_loss, float))
 
 
@@ -287,47 +312,73 @@ class SimRunner:
                  telemetry: ClientTelemetry, simcfg: SimConfig,
                  network: Optional[NetworkModel] = None,
                  client_params: Optional[List] = None,
-                 faults: Optional[FaultModel] = None):
+                 faults: Optional[FaultModel] = None,
+                 population=None, cohort_size: Optional[int] = None):
         if cfg.track_epsilon:
             raise ValueError("track_epsilon is a per-client-loop feature; "
                              "the sim runner does not support it")
         self.cfg = cfg
         self.simcfg = simcfg
         self.policy = simcfg.resolve_policy()
-        self.tel = telemetry
         self.network = network or StaticNetwork(telemetry)
         if self.network.num_clients != telemetry.num_clients:
             raise ValueError("network model / telemetry client count "
                              "mismatch")
-        n = telemetry.num_clients
         self.global_params = global_params
+        # population-scale serving (repro.population): ``telemetry`` (and
+        # the network model) cover the POPULATION; only the sampled cohort
+        # is materialized into engine buffers.  The rest of __init__ runs
+        # unchanged on the cohort-shaped view — with always-on
+        # availability and cohort == population the gathered arrays are
+        # value-identical to the fleet's own, which is the bit-identity
+        # contract (tests/test_population.py).
+        self.population = population
+        self.pop_tel = None
+        self.cohort = None
+        if population is not None:
+            if population.size != telemetry.num_clients:
+                raise ValueError(
+                    f"population size {population.size} / telemetry "
+                    f"count {telemetry.num_clients} mismatch")
+            k = population.size if cohort_size is None else int(cohort_size)
+            if not 1 <= k <= population.size:
+                raise ValueError(f"cohort_size {k} outside "
+                                 f"[1, {population.size}]")
+            if isinstance(self.policy, AsyncPolicy):
+                raise ValueError(
+                    "population cohorts rebind the wave fleet between "
+                    "rounds; the async merge stream has no such boundary "
+                    "— run populations under sync/deadline/retry")
+            if cfg.checkpoint_every is not None or cfg.resume_from:
+                raise ValueError(
+                    "population sticky state does not yet ride the "
+                    "RunState snapshot; run checkpoint/resume without "
+                    "population=")
+            if cfg.mesh is not None and not population.sampler.static:
+                raise ValueError(
+                    "client-sharded (mesh) fleets pin device buffers for "
+                    "the whole run; population runs on a mesh need a "
+                    "static cohort (identity sampler, or cohort_size == "
+                    "population with always-on availability)")
+            if client_params is not None:
+                population.seed_params(
+                    [jax.tree_util.tree_map(jnp.asarray, p)
+                     for p in client_params])
+            self.pop_tel = telemetry
+            self.cohort = np.asarray(population.sample_cohort(0, k),
+                                     np.int64)
+            telemetry = telemetry.subset(self.cohort)
+            client_params = population.cohort_params(self.cohort,
+                                                     global_params)
+        self.tel = telemetry
+        n = telemetry.num_clients
         if client_params is None:
             client_params = [global_params] * n
         elif len(client_params) != n:
             raise ValueError("client_params / telemetry count mismatch")
         self.client_params = [jax.tree_util.tree_map(jnp.asarray, p)
                               for p in client_params]
-        # ragged fleet? partition by shape once; coverage per group
-        from repro.fl.heterogeneity import group_by_shape  # fl -> core dep
-        full_w = cov_mod.channel_widths(global_params,
-                                        cfg.selection.channel_axis)
-        cw = [cov_mod.channel_widths(p, cfg.selection.channel_axis)
-              for p in self.client_params]
-        self.heterogeneous = any(w != full_w for w in cw)
-        self.cr = cov_mod.coverage_rates(cw, full_w)
-        self.groups = group_by_shape(self.client_params)
-        self.group_coverage = [
-            cov_mod.coverage_pytree(self.client_params[g.indices[0]],
-                                    self.cr, cfg.selection.channel_axis)
-            for g in self.groups
-        ]
-        # fleet-position -> coverage pytree (async merges look coverage up
-        # by the arriving client's index — immune to any dtype/structure
-        # drift a trainer might introduce into the pending params)
-        self._client_coverage = [None] * n
-        for g, cov in zip(self.groups, self.group_coverage):
-            for i in g.indices:
-                self._client_coverage[i] = cov
+        self._partition_fleet()
         # client-sharded SPMD (cfg.mesh): the wave/async fleets run the
         # sharded engines over a 1-D "clients" device mesh — same routing
         # as the protocol executors (core/protocol.py routing table)
@@ -367,12 +418,6 @@ class SimRunner:
         self.grouped_engine = round_engine.GroupedRoundEngine(
             cfg.selection, cfg.comm, self.mesh,
             cfg.robust_agg if self.heterogeneous else "mean")
-        # per-client wire specs: the codec byte model the event timeline
-        # charges on the uplink leg (repro.comm)
-        self.wire_specs = [
-            WireSpec.from_params(p, cfg.selection.channel_axis)
-            for p in self.client_params
-        ]
         # global-model spec: the cross-device collective byte model
         # (account_collective) under cfg.mesh
         self._global_spec = WireSpec.from_params(
@@ -405,15 +450,140 @@ class SimRunner:
                 raise ValueError(
                     "partial aggregation of delivered prefixes requires "
                     "the homogeneous stacked engine")
-        self.observed = ObservedTelemetry(telemetry, simcfg.observation_ewma)
-        self.dropout = np.zeros(n)            # D_n^1 = 0 (Algorithm 1)
-        self.weights = np.asarray(telemetry.num_samples, float)
-        self.full_bytes = float(np.sum(telemetry.model_bytes))
+        # EWMAs live per GLOBAL id: population mode sizes them to the
+        # population and binds the cohort's position -> id map
+        self.observed = (
+            ObservedTelemetry(self.pop_tel, simcfg.observation_ewma,
+                              ids=self.cohort)
+            if population is not None else
+            ObservedTelemetry(telemetry, simcfg.observation_ewma))
+        self.dropout = (population.cohort_dropout(self.cohort)
+                        if population is not None
+                        else np.zeros(n))     # D_n^1 = 0 (Algorithm 1)
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.sim = Simulator()
         # observability hook (repro.obs): inert singleton until a run
         # entry point builds a live recorder for an active cfg.obs
         self.obs = obs_mod.NULL_RECORDER
+
+    # -- fleet binding (shared by __init__ and cohort retargeting) -----------
+
+    def _partition_fleet(self) -> None:
+        """Everything derived from the CURRENT fleet's telemetry and
+        params: shape groups + coverage (ragged fleets), wire specs,
+        Eq. (4) weights.  Called once at __init__ for plain runs and on
+        every cohort change in population mode."""
+        cfg = self.cfg
+        n = self.tel.num_clients
+        # ragged fleet? partition by shape once; coverage per group
+        from repro.fl.heterogeneity import group_by_shape  # fl -> core dep
+        full_w = cov_mod.channel_widths(self.global_params,
+                                        cfg.selection.channel_axis)
+        cw = [cov_mod.channel_widths(p, cfg.selection.channel_axis)
+              for p in self.client_params]
+        self.heterogeneous = any(w != full_w for w in cw)
+        self.cr = cov_mod.coverage_rates(cw, full_w)
+        self.groups = group_by_shape(self.client_params)
+        self.group_coverage = [
+            cov_mod.coverage_pytree(self.client_params[g.indices[0]],
+                                    self.cr, cfg.selection.channel_axis)
+            for g in self.groups
+        ]
+        # fleet-position -> coverage pytree (async merges look coverage up
+        # by the arriving client's index — immune to any dtype/structure
+        # drift a trainer might introduce into the pending params)
+        self._client_coverage = [None] * n
+        for g, cov in zip(self.groups, self.group_coverage):
+            for i in g.indices:
+                self._client_coverage[i] = cov
+        # per-client wire specs: the codec byte model the event timeline
+        # charges on the uplink leg (repro.comm)
+        self.wire_specs = [
+            WireSpec.from_params(p, cfg.selection.channel_axis)
+            for p in self.client_params
+        ]
+        self.weights = np.asarray(self.tel.num_samples, float)
+        self.full_bytes = float(np.sum(self.tel.model_bytes))
+
+    def _make_fleet(self):
+        return (_GroupedWaveFleet(self) if self.heterogeneous
+                else _StackedWaveFleet(self))
+
+    def _conditions(self, epoch: int):
+        """This epoch's true network conditions, cohort-shaped: in
+        population mode the model covers the population, so the cohort's
+        rows are gathered out (value-identical when cohort == arange)."""
+        cond = self.network.conditions(epoch)
+        if self.population is None:
+            return cond
+        ids = self.cohort
+        return type(cond)(*[np.asarray(a, float)[ids] for a in cond])
+
+    def _bind_cohort(self, ids: np.ndarray) -> None:
+        """Rebind every cohort-shaped view to a new member list."""
+        pop = self.population
+        self.cohort = np.asarray(ids, np.int64)
+        self.tel = self.pop_tel.subset(self.cohort)
+        self.client_params = [
+            jax.tree_util.tree_map(jnp.asarray, p)
+            for p in pop.cohort_params(self.cohort, self.global_params)]
+        self._partition_fleet()
+        self.dropout = pop.cohort_dropout(self.cohort)
+        self.observed.retarget(self.cohort)
+
+    def _retarget_cohort(self, t: int, fleet, losses: np.ndarray):
+        """Sample round ``t``'s cohort; when membership changed, park the
+        outgoing cohort's learning state in the store and rebuild the
+        wave fleet for the incoming one.  A static cohort (identity
+        config, or a sampler that happens to repeat) never rebinds —
+        the engines keep their buffers, preserving bit-identity and the
+        scan/mesh paths' compiled state."""
+        pop = self.population
+        ids = np.asarray(pop.sample_cohort(t - 1, len(self.cohort)),
+                         np.int64)
+        if np.array_equal(ids, self.cohort):
+            return fleet, losses
+        pop.fold_back(self.cohort, fleet.export(), dropout=self.dropout,
+                      losses=losses)
+        self._bind_cohort(ids)
+        return self._make_fleet(), pop.losses_for(self.cohort)
+
+    def _population_round_done(self, t: int, part: np.ndarray,
+                               fr, wire_vec: np.ndarray,
+                               losses: np.ndarray, *,
+                               contributors: np.ndarray,
+                               moved: np.ndarray) -> None:
+        """Fold the round's observations back into the population store
+        (O(cohort)) and emit the ``cohort`` run-log event.
+
+        ``contributors`` are the clients whose update reached the
+        committed Eq. (4) aggregate (all False for a quorum-skipped
+        round); ``moved`` are the clients whose upload bytes actually
+        travelled, committed or wasted — the client-side byte economy.
+        """
+        pop = self.population
+        if pop is None:
+            return
+        ids = self.cohort
+        n = len(ids)
+        extra = fr.extra_bytes if fr is not None else np.zeros(n)
+        failed = part & ((fr.crashed | fr.aborted) if fr is not None
+                         else np.zeros(n, bool))
+        if self.obs.active:
+            self.obs.event(
+                "cohort", round=t, population=pop.size, cohort_size=n,
+                first_contact=pop.first_contact(ids),
+                cohort=[int(g) for g in ids],
+                participated=[int(g) for g in ids[contributors]])
+        tel = self.observed.telemetry(np.maximum(losses, 1e-6))
+        util = (np.asarray(tel.num_samples, float)
+                * np.sqrt(np.maximum(np.asarray(tel.train_loss, float),
+                                     0.0))
+                * baselines.oort_system_penalty(tel))
+        pop.record_round(
+            t, ids, arrived=contributors, failed=failed, losses=losses,
+            uplink_bytes=np.where(moved, wire_vec + extra, 0.0),
+            utilities=util)
 
     # -- shared server-side helpers -----------------------------------------
 
@@ -432,6 +602,11 @@ class SimRunner:
         fully-dead fleet leaves the allocation untouched.
         """
         tel = self.observed.telemetry(np.maximum(losses, 1e-6))
+        if self.population is not None:
+            # cold start: never-seen cohort members can take population-
+            # mean priors (Population.cold_start="mean"); the default
+            # "prior" passes through untouched
+            tel = self.population.lp_telemetry(tel, self.cohort)
         kw = dict(a_server=self.cfg.a_server, d_max=self.cfg.d_max,
                   delta=self.cfg.delta,
                   global_model_bytes=_tree_bytes(self.global_params))
@@ -641,10 +816,27 @@ class SimRunner:
             self.obs.close()
             self.obs = obs_mod.NULL_RECORDER
 
+    def _cohort_train_fn(self, local_train_fn: Callable) -> Callable:
+        """Population mode: the fleets hand ``local_train_fn`` a COHORT
+        stack position; user train fns are written against global client
+        ids (their data shard).  Translate at the boundary, reading
+        ``self.cohort`` at call time so retargets are picked up.  With
+        the identity cohort ``cohort[i] == i``, so fleet-mode runs and
+        the bit-identity contract are untouched (the PRNG key stays the
+        fleet's position-folded key either way)."""
+        if self.population is None:
+            return local_train_fn
+
+        def wrapped(p, i, key):
+            return local_train_fn(p, int(self.cohort[i]), key)
+
+        return wrapped
+
     def _run_waves_impl(self, local_train_fn: Callable, eval_fn=None,
                         rounds: Optional[int] = None) -> SimResult:
         cfg = self.cfg
         obs = self.obs
+        local_train_fn = self._cohort_train_fn(local_train_fn)
         rounds = rounds or cfg.rounds
         n = self.tel.num_clients
         losses = np.ones(n)
@@ -664,13 +856,17 @@ class SimRunner:
             start_t = st.round + 1
             sim.advance_to(float(st.extra.get("sim_time", 0.0)))
             sim.trace[:] = [tuple(e) for e in st.extra.get("trace", [])]
-        fleet = (_GroupedWaveFleet(self) if self.heterogeneous
-                 else _StackedWaveFleet(self))
+        fleet = self._make_fleet()
         partial_on = (isinstance(self.policy, DeadlinePolicy)
                       and self.policy.partial)
 
         for t in range(start_t, rounds + 1):
             host0 = time.perf_counter()
+            # population mode: (re)sample the cohort BEFORE the protocol
+            # RNG splits, so the key schedule is untouched and a static
+            # cohort stays bit-identical to the plain fleet run
+            if self.population is not None:
+                fleet, losses = self._retarget_cohort(t, fleet, losses)
             self.rng, rk = jax.random.split(self.rng)
             part = self._participants(losses)
             d_used = self.dropout.copy()
@@ -684,7 +880,7 @@ class SimRunner:
             # --- event timeline with TRUE conditions of this epoch; the
             # uplink leg moves the codec's bytes (repro.comm)
             _transport0 = time.perf_counter()
-            cond = self.network.conditions(t - 1)
+            cond = self._conditions(t - 1)
             true_tel = telemetry_with_conditions(self.tel, cond)
             up_wire = self._uplink_wire_vec(d_time)
             ti = baselines.round_times(true_tel, d_time,
@@ -867,6 +1063,12 @@ class SimRunner:
                 fleet.discard()
                 abandoned_b += partial_bytes + float(np.sum(
                     (wire_vec + fr.extra_bytes)[valid]))
+                # nobody contributed to a committed aggregate, but the
+                # arrivals' bytes travelled — the store's economy (and
+                # the seen flags) must reflect the contact
+                self._population_round_done(
+                    t, part, fr, wire_vec, losses,
+                    contributors=np.zeros(n, bool), moved=arrived)
                 if cfg.scheme == "feddd":
                     with obs.span("allocate", round=t):
                         self._allocate(losses, alive=~fr.crashed)
@@ -935,6 +1137,12 @@ class SimRunner:
                     mode=cfg.mesh_collective,
                     k_fraction=cfg.mesh_keep_fraction, obs=obs)
 
+            # --- population write-back BEFORE the t+1 allocation, so a
+            # cold-start solve already sees this round's first contacts
+            self._population_round_done(
+                t, part, fr, wire_vec, losses,
+                contributors=contributors, moved=contributors)
+
             # --- allocation for round t+1, from what the server observed.
             # A correlated outage (sim/outages.py) excludes its cells
             # wholesale: the LP re-solves on survivor-only telemetry and
@@ -975,6 +1183,9 @@ class SimRunner:
             self._maybe_checkpoint(t, fleet, losses, history)
 
         self.client_params = fleet.export()
+        if self.population is not None:
+            self.population.fold_back(self.cohort, self.client_params,
+                                      dropout=self.dropout, losses=losses)
         return self._result(history)
 
     # -- buffered fully-async policy ------------------------------------------
@@ -1216,6 +1427,7 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
             network: Optional[NetworkModel] = None,
             client_params: Optional[List] = None,
             faults: Optional[FaultModel] = None,
+            population=None, cohort_size: Optional[int] = None,
             rounds: Optional[int] = None, **cfg_kw) -> SimResult:
     """One-call driver, mirroring :func:`repro.core.protocol.run_scheme`.
 
@@ -1240,6 +1452,15 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
         simulator.  Crash / loss / retry channels and the
         staleness-budget quorum also apply to the async policy; payload
         corruption stays wave-only.
+      population: a :class:`repro.population.Population` — ``telemetry``
+        (and ``network``/``client_params``, when given) then cover the
+        POPULATION, and each round materializes only the sampled
+        ``cohort_size`` clients into engine buffers; availability churn
+        and the cohort sampler live on the Population object.  A
+        population whose size equals the fleet with always-on
+        availability and the default sampler is bit-identical to the
+        plain fleet run.  Wave policies only.
+      cohort_size: clients per round (default: the whole population).
       **cfg_kw: ProtocolConfig fields (rounds, a_server, d_max, delta, h,
         seed, selection, allocator, robust_agg, checkpoint_every,
         checkpoint_path, resume_from — the last three drive bit-identical
@@ -1249,9 +1470,18 @@ def run_sim(scheme: str, global_params, telemetry: ClientTelemetry,
     if rounds is not None:
         cfg_kw["rounds"] = rounds
     cfg_kw.pop("batched", None)       # the sim runner is always batched
+    if population is not None:
+        cfg_kw.setdefault("population", population.size)
+        cfg_kw.setdefault("cohort_size",
+                          cohort_size if cohort_size is not None
+                          else population.size)
+    elif cohort_size is not None:
+        raise ValueError("cohort_size requires population=")
     cfg = ProtocolConfig(scheme=scheme, **cfg_kw)
     runner = SimRunner(global_params, cfg, telemetry, simcfg, network,
-                       client_params=client_params, faults=faults)
+                       client_params=client_params, faults=faults,
+                       population=population,
+                       cohort_size=cfg.cohort_size)
     if isinstance(runner.policy, AsyncPolicy):
         if scheme in ("fedcs", "oort"):
             raise ValueError(
